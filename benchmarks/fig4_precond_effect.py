@@ -1,0 +1,53 @@
+"""Fig. 4 + Table I: effect of ROS preconditioning on spiky data.
+
+Data has canonical-basis principal components (all energy on single
+coordinates). Paper's claim: preconditioning halves covariance error and
+dramatically improves #recovered PCs at small γ, with near-zero variance.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import estimators, pca, ros, sampling, sketch
+
+
+def run(p: int = 512, n: int = 1024, k: int = 10, runs: int = 8):
+    # paper-exact Table I dimensions (p=512, n=1024, λ = 10…1, canonical PCs)
+    lam = jnp.asarray(np.linspace(10, 1, k), jnp.float32)
+    u = jnp.eye(p)[:k]                                       # spiky PCs
+    key = jax.random.PRNGKey(0)
+    kappa = jax.random.normal(key, (n, k))
+    x = (kappa * lam[None, :]) @ u
+
+    for gamma in (0.1, 0.2, 0.3, 0.5):
+        m = int(gamma * p)
+        err_pre, err_raw, rec_pre, rec_raw = [], [], [], []
+        for r in range(runs):
+            kk = jax.random.PRNGKey(r)
+            spec = sketch.make_spec(p, kk, m=m)
+            # with preconditioning — error vs C_emp of the preconditioned data
+            y = ros.precondition(x, spec.signs_key(), "hadamard")
+            s = sampling.subsample(y, spec.mask_key(), m)
+            c_hat = estimators.cov_estimator(s)
+            err_pre.append(float(jnp.linalg.norm(c_hat - estimators.empirical_cov(y), ord=2)))
+            res = pca.sparsified_pca(s, spec, k)
+            rec_pre.append(int(pca.recovered_components(res.components, u, 0.95)))
+            # without preconditioning
+            s0 = sampling.subsample(x, jax.random.fold_in(kk, 9), m)
+            c0 = estimators.cov_estimator(s0)
+            err_raw.append(float(jnp.linalg.norm(c0 - estimators.empirical_cov(x), ord=2)))
+            res0 = pca.sparsified_pca(s0, spec, k, preconditioned=False)
+            rec_raw.append(int(pca.recovered_components(res0.components, u, 0.95)))
+        emit(f"fig4/gamma={gamma}", 0.0,
+             f"err_precond={np.mean(err_pre):.3f} err_raw={np.mean(err_raw):.3f} "
+             f"gain={np.mean(err_raw)/max(np.mean(err_pre),1e-9):.2f}x")
+        emit(f"table1/gamma={gamma}", 0.0,
+             f"recovered_precond={np.mean(rec_pre):.2f}±{np.std(rec_pre):.2f} "
+             f"recovered_raw={np.mean(rec_raw):.2f}±{np.std(rec_raw):.2f}")
+
+
+if __name__ == "__main__":
+    run()

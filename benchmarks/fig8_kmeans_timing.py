@@ -1,0 +1,68 @@
+"""Fig. 8 + Table V: per-iteration speedup of sparsified vs dense K-means.
+
+Times the two Lloyd kernels (assignment + center update) on identical data.
+CPU wall-clock (the container target); the γ-proportional flop reduction is the
+paper's claim — on TPU the win is realized as bandwidth (DESIGN.md §3.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import kmeans as km
+from repro.core import sketch
+
+
+def run(n: int = 20000, p: int = 512, k: int = 10):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, p))
+    centers = jax.random.normal(jax.random.fold_in(key, 1), (k, p))
+
+    @jax.jit
+    def dense_assign(x, c):
+        return jnp.argmin(km.dense_sq_dists(x, c), axis=1)
+
+    us_dense = timeit(dense_assign, x, centers)
+    emit("tableV/assign/dense", us_dense, f"n={n} p={p} K={k}")
+
+    for gamma in (0.05, 0.1, 0.3):
+        spec = sketch.make_spec(p, key, gamma=gamma)
+        s = sketch.sketch(x, spec)
+
+        @jax.jit
+        def sparse_assign(v, i, c):
+            return jnp.argmin(km.sparse_sq_dists(v, i, c), axis=1)
+
+        us = timeit(sparse_assign, s.values, s.indices, centers)
+        emit(f"tableV/assign/gamma={gamma}", us,
+             f"speedup={us_dense/us:.1f}x ideal={1/spec.gamma:.1f}x")
+
+    # center update
+    a = jax.random.randint(key, (n,), 0, k)
+
+    @jax.jit
+    def dense_update(x, a):
+        oh = jax.nn.one_hot(a, k, dtype=x.dtype)
+        return oh.T @ x / jnp.maximum(oh.sum(0)[:, None], 1.0)
+
+    us_dense_u = timeit(dense_update, x, a)
+    emit("tableV/update/dense", us_dense_u, "")
+    spec = sketch.make_spec(p, key, gamma=0.05)
+    s = sketch.sketch(x, spec)
+
+    @jax.jit
+    def sparse_update(v, i, a):
+        rows = jnp.broadcast_to(a[:, None], i.shape)
+        sums = jnp.zeros((k, spec.p_pad), v.dtype).at[rows, i].add(v)
+        cnts = jnp.zeros((k, spec.p_pad), v.dtype).at[rows, i].add(1.0)
+        return sums / jnp.maximum(cnts, 1.0)
+
+    us_u = timeit(sparse_update, s.values, s.indices, a)
+    emit("tableV/update/gamma=0.05", us_u, f"speedup={us_dense_u/us_u:.1f}x")
+    emit("tableV/combined/gamma=0.05", 0.0,
+         f"speedup={(us_dense+us_dense_u)/(us_u+timeit(jax.jit(lambda v,i,c: jnp.argmin(km.sparse_sq_dists(v,i,c),axis=1)), s.values, s.indices, centers)):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

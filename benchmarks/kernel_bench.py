@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: FWHT preconditioning + sparse assignment.
+
+On this CPU container the Pallas kernels run via the interpreter (correctness
+path); timings below benchmark the jnp reference lowering — the TPU roofline
+expectations (MXU-resident Kronecker matmuls) are derived analytically and
+reported as `derived`.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import ros
+from repro.kernels import fwht as kfwht
+from repro.kernels import ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for p in (1024, 4096, 8192):
+        n = 2048
+        x = jax.random.normal(key, (n, p), jnp.float32)
+        s = jax.random.rademacher(jax.random.fold_in(key, 1), (p,), jnp.float32)
+        fn = jax.jit(lambda x, s: ref.ref_hd_precondition(x, s))
+        us = timeit(fn, x, s)
+        bytes_moved = 2 * n * p * 4
+        a, b = kfwht.factor_p(p)
+        macs = n * p * (a + b)
+        tpu_us = max(bytes_moved / 819e9, macs * 2 / 197e12) * 1e6
+        emit(f"kernel/fwht/p={p}", us,
+             f"cpu_GBps={bytes_moved/us*1e6/1e9:.1f} kronecker=({a}x{b}) "
+             f"tpu_roofline_us={tpu_us:.1f}")
+
+    # sparse assignment: compact (values, indices) vs dense distances
+    n, p, k = 8192, 1024, 16
+    for gamma in (0.05, 0.2):
+        m = int(gamma * p)
+        vals = jax.random.normal(key, (n, m), jnp.float32)
+        idx = jnp.sort(jax.lax.top_k(jax.random.uniform(key, (n, p)), m)[1].astype(jnp.int32), -1)
+        ctr = jax.random.normal(key, (k, p), jnp.float32)
+        fn = jax.jit(lambda v, i, c: ref.ref_sparse_assign(v, i, c)[0])
+        us = timeit(fn, vals, idx, ctr)
+        hbm = n * m * 8 + k * p * 4
+        tpu_us = max(hbm / 819e9, 2 * n * p * k * 2 / 197e12) * 1e6
+        emit(f"kernel/sparse_assign/gamma={gamma}", us,
+             f"compact_bytes={n*m*8>>20}MB dense_bytes={n*p*4>>20}MB tpu_roofline_us={tpu_us:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""End-to-end LM training with the paper's sketch as gradient compression.
+
+    PYTHONPATH=src python examples/train_lm_sketched_grads.py
+
+Trains a ~100M-param GLM-4-shaped model for a few hundred steps on synthetic
+data, with the preconditioned-sparsification gradient compressor (γ=10%) and
+error feedback; prints loss curves for compressed vs dense runs.
+"""
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core.grad_compress import CompressConfig
+from repro.data.pipeline import SyntheticLMSource
+from repro.models.api import get_api
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import TrainerConfig, init_state, make_train_fn
+from repro.models.transformer import NO_DIST
+
+
+def run(compress, steps=300, label=""):
+    # ~100M params: glm4 topology, scaled down
+    cfg = dataclasses.replace(
+        get_arch("glm4-9b"), n_layers=6, d_model=512, n_heads=8, n_kv_heads=2,
+        head_dim=64, d_ff=1536, vocab_size=8192, dtype="float32",
+    )
+    api = get_api(cfg)
+    tcfg = TrainerConfig(
+        opt=OptConfig(peak_lr=1e-3, warmup_steps=30, total_steps=steps),
+        compress=compress, q_chunk=64, kv_chunk=64,
+    )
+    key = jax.random.PRNGKey(0)
+    fn = jax.jit(make_train_fn(api, tcfg, NO_DIST, key), donate_argnums=0)
+    state = init_state(api, tcfg, key)
+    src = SyntheticLMSource(cfg.vocab_size, seq_len=64, global_batch=16, seed=0)
+    t0, losses = time.time(), []
+    for step in range(steps):
+        state, m = fn(state, src.next_batch())
+        losses.append(float(m["loss"]))
+        if step % 50 == 0 or step == steps - 1:
+            wire = f" wire_floats={int(m['wire_floats']):,}" if "wire_floats" in m else ""
+            print(f"[{label}] step {step:4d} loss {losses[-1]:.4f}{wire}")
+    print(f"[{label}] final avg-loss(last 20): {sum(losses[-20:])/20:.4f} "
+          f"({time.time()-t0:.0f}s)")
+    return losses
+
+
+def main():
+    dense = run(None, label="dense")
+    comp = run(CompressConfig(gamma=0.1, chunk_p=1 << 12, error_feedback=True),
+               label="sketch γ=0.1+EF")
+    gap = sum(comp[-20:]) / 20 - sum(dense[-20:]) / 20
+    print(f"compression loss gap after 300 steps: {gap:+.4f} nats "
+          f"(wire traffic ↓ {1/0.1:.0f}×)")
+
+
+if __name__ == "__main__":
+    main()

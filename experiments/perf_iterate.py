@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: lower one cell under a named strategy variant and
+print the three roofline terms + memory (used to produce EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python experiments/perf_iterate.py <arch> <shape> <variant>
+
+Variants are defined in VARIANTS below; 'baseline' is the dry-run default.
+"""
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def main(arch: str, shape_name: str, variant: str):
+    from repro.configs.registry import get_arch, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import probe_cell, roofline_terms
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainer import TrainerConfig, lower_cell
+    from repro.launch.dryrun import arch_trainer_config
+
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=False)
+    base_t = arch_trainer_config(arch, shape.kind)
+
+    VARIANTS = {
+        "baseline": (cfg, base_t),
+        # dense cells: drop TP, fold model axis into FSDP/batch
+        "dp_only": (cfg, dataclasses.replace(base_t, dp_only=True, sp=False)),
+        # microbatching: 4 accumulation steps
+        "accum4": (cfg, dataclasses.replace(base_t, accum_steps=4)),
+        "dp_only_accum4": (cfg, dataclasses.replace(base_t, dp_only=True, sp=False, accum_steps=4)),
+        # bigger flash tiles (fewer scan steps, more VMEM)
+        "chunk2k": (cfg, dataclasses.replace(base_t, q_chunk=2048, kv_chunk=2048)),
+        # MoE: tighter capacity
+        "cap1.0": (dataclasses.replace(cfg, capacity_factor=1.0), base_t),
+        # MoE: EP off (pjit-partitioned local dispatch)
+        "no_ep": (cfg, dataclasses.replace(base_t, use_ep=False)),
+        # no sequence parallelism
+        "no_sp": (cfg, dataclasses.replace(base_t, sp=False)),
+        # SSD chunk sweep (ssm archs)
+        "ssd_q128": (dataclasses.replace(cfg, ssm_chunk=128), base_t),
+        "ssd_q32": (dataclasses.replace(cfg, ssm_chunk=32), base_t),
+        # no activation remat (trade memory for recompute bytes/flops)
+        "noremat": (dataclasses.replace(cfg, remat=False), base_t),
+        "dp_only_noremat": (dataclasses.replace(cfg, remat=False),
+                            dataclasses.replace(base_t, dp_only=True, sp=False)),
+        # selective remat: keep flash-attention outputs (skip its recompute)
+        "dp_only_saveattn": (dataclasses.replace(cfg, remat_policy="save_attn"),
+                             dataclasses.replace(base_t, dp_only=True, sp=False)),
+        "dp_only_ssdq128": (dataclasses.replace(cfg, ssm_chunk=128),
+                            dataclasses.replace(base_t, dp_only=True, sp=False)),
+        # paper technique: sketched gradient compression γ=0.05 + error feedback
+        "compress05": (cfg, dataclasses.replace(
+            base_t, dp_only=True, sp=False,
+            compress=__import__("repro.core.grad_compress", fromlist=["CompressConfig"]).CompressConfig(
+                gamma=0.05, chunk_p=1 << 14, error_feedback=True))),
+    }
+    cfg_v, tcfg_v = VARIANTS[variant]
+
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg_v, shape, mesh, tcfg_v)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes + ma.output_size_in_bytes)
+    del compiled, lowered
+    probe = probe_cell(cfg_v, shape, mesh, tcfg_v)
+    terms = roofline_terms(probe["per_device"], mesh.size, cfg_v, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "peak_GB": round(peak / 2**30, 2),
+        "terms": {k: (round(v, 4) if isinstance(v, float) else v) for k, v in terms.items()},
+        "wire_by_kind_GB": {k: round(v / 2**30, 2)
+                            for k, v in probe["per_device"]["wire_by_kind"].items()},
+        "wall_s": round(time.time() - t0, 1),
+    }
+    out = f"experiments/perf/{arch}__{shape_name}__{variant}.json"
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], sys.argv[3])

@@ -1,0 +1,1 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401

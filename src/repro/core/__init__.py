@@ -1,0 +1,15 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- ros:         HD preconditioning (Eq. 1)
+- sampling:    m-of-p uniform sampling without replacement, compact sparse rows
+- sketch:      fused one-pass precondition+sample operator
+- estimators:  unbiased mean / covariance estimators (Thms 4, 6)
+- bounds:      the paper's finite-sample guarantees
+- pca:         sparsified PCA
+- kmeans:      sparsified K-means (Alg. 1/2) + baselines
+- distributed: shard_map one-pass estimators
+- grad_compress: sketched gradient all-reduce (beyond-paper integration)
+"""
+from repro.core import bounds, estimators, ros, sampling, sketch  # noqa: F401
+from repro.core.sampling import SparseRows  # noqa: F401
+from repro.core.sketch import SketchSpec, make_spec  # noqa: F401

@@ -1,0 +1,58 @@
+"""Distributed one-pass sketching & estimation (paper §I: distributed-data setting).
+
+Under pjit global-view semantics the whole pipeline distributes with *sharding
+annotations only*: each data shard sketches its own samples locally
+(independent R_i per sample comes from the global PRNG semantics), and the
+only cross-shard traffic is the psum of the fixed-size accumulators —
+(p,) for the mean, (p,p) for the covariance, (K,p)+(K,p) for K-means updates.
+XLA inserts exactly those collectives; tests/test_distributed.py asserts
+bit-compatibility with the single-device path on a forced host mesh.
+
+For clusters: run one process per host with the same code; `jax.make_mesh`
+over all devices; the data pipeline feeds per-host shards (data/pipeline.py's
+(seed, step, shard) contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import estimators, kmeans, sketch
+from repro.core.sampling import SparseRows
+
+
+def shard_rows(x: jax.Array, mesh, axes=("data",)) -> jax.Array:
+    """Place (n, …) data row-sharded over the mesh's data axes."""
+    spec = P(axes if len(axes) > 1 else axes[0], *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def sketch_sharded(x: jax.Array, spec: sketch.SketchSpec, mesh, axes=("data",)) -> SparseRows:
+    """One-pass compress of row-sharded data; output stays row-sharded."""
+    xs = shard_rows(x, mesh, axes)
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+        return sketch.sketch(xs, spec)
+
+
+def distributed_mean(s: SparseRows, mesh) -> jax.Array:
+    """Thm-4 estimator over sharded sketches; psum of a (p,) accumulator."""
+    with mesh:
+        return jax.jit(estimators.mean_estimator)(s)
+
+
+def distributed_cov(s: SparseRows, mesh) -> jax.Array:
+    """Thm-6 estimator; the (p,p) accumulator is the only cross-shard tensor."""
+    with mesh:
+        return jax.jit(lambda t: estimators.cov_estimator(t, path="dense"))(s)
+
+
+def distributed_kmeans(s: SparseRows, k: int, key, mesh, n_init: int = 3,
+                       max_iter: int = 50):
+    """Sparsified K-means on sharded sketches (assignment stays local; the
+    center/count scatter-adds psum over the data axes)."""
+    with mesh:
+        return kmeans.sparse_kmeans_core(
+            s.values, s.indices, s.p, k, key, n_init=n_init, max_iter=max_iter
+        )

@@ -1,0 +1,142 @@
+"""Unbiased estimators recovered from sparsified data (paper §IV–V).
+
+Mean (Thm 4):      x̄̂ = (p/m)·(1/n) Σ_i R_iR_iᵀ x_i
+Covariance (Thm 6): Ĉ_emp = p(p−1)/(m(m−1))·(1/n) Σ_i w_i w_iᵀ,
+                   Ĉ_n = Ĉ_emp − (p−m)/(p−1)·diag(Ĉ_emp)   (unbiased)
+
+Both have a *streaming* form (constant-memory accumulators, one pass) and a
+*batch* form. The batch covariance offers two equivalent computation paths:
+
+- ``dense``: scatter to (n, p) then one MXU matmul WᵀW — the right choice on TPU
+  for n·p activations that fit;
+- ``compact``: scatter n·m² outer-product entries — the right choice when γ ≪ 1
+  and p is large (CPU / host aggregation).
+
+Estimates live in the *preconditioned* domain when the data was sketched with a
+ROS; PCA consumers either unmix eigenvectors (U = (HD)ᵀ Û) or work directly in
+the preconditioned domain (the spectrum is unchanged — HD is orthonormal).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import SparseRows
+
+
+# ---------------------------------------------------------------- mean ------
+
+def mean_estimator(s: SparseRows) -> jax.Array:
+    """Unbiased estimate of the sample mean (length p), Thm 4."""
+    n, m = s.values.shape
+    acc = jnp.zeros((s.p,), jnp.promote_types(s.values.dtype, jnp.float32))
+    acc = acc.at[s.indices.reshape(-1)].add(s.values.reshape(-1).astype(acc.dtype))
+    return acc * (s.p / (m * n))
+
+
+# ---------------------------------------------------------- covariance ------
+
+def _cov_scale(p: int, m: int) -> float:
+    if m < 2:
+        raise ValueError("covariance estimator needs m >= 2 (Thm B4, Eq. 50)")
+    return (p * (p - 1)) / (m * (m - 1))
+
+
+def _debias(c_emp_hat: jax.Array, p: int, m: int) -> jax.Array:
+    corr = (p - m) / (p - 1)
+    d = jnp.diagonal(c_emp_hat)
+    return c_emp_hat - corr * jnp.diag(d)
+
+
+@functools.partial(jax.jit, static_argnames=("path",))
+def cov_estimator(s: SparseRows, path: Literal["dense", "compact"] = "dense") -> jax.Array:
+    """Unbiased estimate Ĉ_n (p×p) of the empirical covariance (1/n)·XᵀX, Thm 6."""
+    n, m = s.values.shape
+    scale = _cov_scale(s.p, m)
+    if path == "dense":
+        w = s.to_dense().astype(jnp.float32)
+        c_emp_hat = scale / n * (w.T @ w)
+    else:
+        v = s.values.astype(jnp.float32)
+        outer = v[:, :, None] * v[:, None, :]                     # (n, m, m)
+        rows = s.indices[:, :, None]                              # (n, m, 1)
+        cols = s.indices[:, None, :]                              # (n, 1, m)
+        acc = jnp.zeros((s.p, s.p), jnp.float32)
+        c_emp_hat = scale / n * acc.at[
+            jnp.broadcast_to(rows, outer.shape).reshape(-1),
+            jnp.broadcast_to(cols, outer.shape).reshape(-1),
+        ].add(outer.reshape(-1))
+    return _debias(c_emp_hat, s.p, m)
+
+
+# ----------------------------------------------------------- streaming ------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    """Constant-memory accumulators for one-pass mean+covariance estimation.
+
+    sum_w:    (p,)   Σ R_iR_iᵀ x_i
+    sum_wwt:  (p, p) Σ w_i w_iᵀ       (only if track_cov)
+    count:    scalar n so far
+    """
+
+    sum_w: jax.Array
+    sum_wwt: jax.Array | None
+    count: jax.Array
+
+    def tree_flatten(self):
+        return (self.sum_w, self.sum_wwt, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def stream_init(p: int, track_cov: bool = True) -> StreamState:
+    return StreamState(
+        sum_w=jnp.zeros((p,), jnp.float32),
+        sum_wwt=jnp.zeros((p, p), jnp.float32) if track_cov else None,
+        count=jnp.zeros((), jnp.float32),
+    )
+
+
+@jax.jit
+def stream_update(state: StreamState, batch: SparseRows) -> StreamState:
+    """Fold one sketched batch into the accumulators (pure; jit/scan friendly)."""
+    n = batch.values.shape[0]
+    sum_w = state.sum_w.at[batch.indices.reshape(-1)].add(
+        batch.values.reshape(-1).astype(jnp.float32)
+    )
+    sum_wwt = state.sum_wwt
+    if sum_wwt is not None:
+        w = batch.to_dense().astype(jnp.float32)
+        sum_wwt = sum_wwt + w.T @ w
+    return StreamState(sum_w, sum_wwt, state.count + n)
+
+
+def stream_finalize_mean(state: StreamState, m: int) -> jax.Array:
+    p = state.sum_w.shape[0]
+    return state.sum_w * (p / (m * state.count))
+
+
+def stream_finalize_cov(state: StreamState, m: int) -> jax.Array:
+    p = state.sum_w.shape[0]
+    c_emp_hat = _cov_scale(p, m) / state.count * state.sum_wwt
+    return _debias(c_emp_hat, p, m)
+
+
+# ------------------------------------------------- reference quantities -----
+
+def empirical_mean(x: jax.Array) -> jax.Array:
+    return jnp.mean(x.astype(jnp.float32), axis=0)
+
+
+def empirical_cov(x: jax.Array) -> jax.Array:
+    """(1/n)·XᵀX — the paper's C_emp (uncentered second moment), rows=samples."""
+    x = x.astype(jnp.float32)
+    return x.T @ x / x.shape[0]

@@ -1,0 +1,139 @@
+"""Sketched gradient compression — the paper's estimator applied to DP training.
+
+Two modes (DESIGN.md §2):
+
+**shared-mask** (default, communication-optimal): all workers use the SAME
+per-step mask R_t (derived from the step key), so the DP reduction only touches
+the m kept coordinates — the all-reduce shrinks from p to m = γ·p floats.
+Over steps, masks are independent ⇒ with error feedback this is preconditioned
+rand-k: the ROS smoothing (Thm 1) is what makes *uniform* index sampling
+competitive with magnitude-aware top-k, with zero index traffic (a seed).
+
+**per-worker** (paper-faithful Thm 4): every worker draws its own R_i and the
+averaged estimator (p/m)(1/n_w)ΣR_iR_iᵀ(HD g_i) is exactly the paper's sample
+mean — unbiased with the ℓ∞ bound (16). Realized as an all_gather of (values)
++ scatter-accumulate; the traffic is n_w·m per worker, winning when γ < 1/n_w
+(Cor. 5's log(n)/n budget as the fleet grows). Used inside shard_map.
+
+Gradients are flattened to one vector and chunked to ``chunk_p`` (power of two);
+each chunk gets the block-diagonal ROS — an orthonormal map, so all guarantees
+hold per chunk with p → chunk_p.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ros
+from repro.utils.prng import fold_in_str
+from repro.utils.tree import tree_flatten_to_vector
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    gamma: float = 0.1
+    chunk_p: int = 1 << 14            # ROS block size (power of two)
+    error_feedback: bool = True
+    mode: str = "shared-mask"         # or "per-worker"
+
+    @property
+    def m(self) -> int:
+        return max(1, int(round(self.gamma * self.chunk_p)))
+
+
+def _to_chunks(vec: jax.Array, chunk_p: int):
+    n = vec.shape[0]
+    pad = -n % chunk_p
+    v = jnp.pad(vec, (0, pad))
+    return v.reshape(-1, chunk_p), n
+
+
+def _mask_for_step(key: jax.Array, step: jax.Array, n_chunks: int, chunk_p: int, m: int):
+    """Per-step, per-chunk m-subset (shared across workers — seed only)."""
+    k = jax.random.fold_in(fold_in_str(key, "gc-mask"), step)
+    u = jax.random.uniform(k, (n_chunks, chunk_p))
+    _, idx = jax.lax.top_k(u, m)
+    return jnp.sort(idx.astype(jnp.int32), axis=-1)
+
+
+def compress_decompress(vec: jax.Array, key: jax.Array, step: jax.Array,
+                        cfg: CompressConfig, unbiased: bool | None = None):
+    """Shared-mask round trip g → ĝ on one worker's (or the averaged) gradient.
+
+    Returns (g_hat, kept_values) — in a real collective only ``kept_values``
+    (m per chunk) crosses the network; the reconstruction is local.
+
+    ``unbiased=True`` applies the paper's (p/m) rescale (Thm 4 estimator).
+    With error feedback the compressor must be CONTRACTIVE, so the rescale is
+    dropped (rand-k + EF convention) — the residual loop restores the missing
+    mass over steps; (p/m)-rescaled EF residuals diverge (‖I − (p/m)RRᵀ‖ ≫ 1).
+    """
+    if unbiased is None:
+        unbiased = not cfg.error_feedback
+    chunks, n = _to_chunks(vec, cfg.chunk_p)
+    nc, cp = chunks.shape
+    signs_key = fold_in_str(key, "gc-signs")
+    y = ros.precondition(chunks, signs_key, "hadamard")
+    idx = _mask_for_step(key, step, nc, cp, cfg.m)
+    vals = jnp.take_along_axis(y, idx, axis=-1)               # ← the wire payload
+    scale = (cp / cfg.m) if unbiased else 1.0
+    y_hat = jnp.zeros_like(y).at[jnp.arange(nc)[:, None], idx].set(vals) * scale
+    g_hat = ros.unmix(y_hat, signs_key, "hadamard").reshape(-1)[:n]
+    return g_hat, vals
+
+
+def compress_grads(grads: Any, key: jax.Array, step: jax.Array, cfg: CompressConfig,
+                   residual: Any | None = None):
+    """Apply sketch compression to a gradient pytree (+ error feedback).
+
+    Returns (g_hat pytree, new_residual pytree or None, wire_floats int).
+    """
+    vec, unflatten = tree_flatten_to_vector(grads)
+    if residual is not None:
+        rvec, _ = tree_flatten_to_vector(residual)
+        vec = vec + rvec
+    g_hat_vec, vals = compress_decompress(vec, key, step, cfg)
+    new_residual = None
+    if cfg.error_feedback:
+        new_residual = unflatten(vec - g_hat_vec)
+    return unflatten(g_hat_vec), new_residual, int(np.prod(vals.shape))
+
+
+def perworker_mean_estimate(local_vec: jax.Array, key: jax.Array, step: jax.Array,
+                            cfg: CompressConfig, axis_names) -> jax.Array:
+    """Paper-faithful Thm-4 estimator across DP workers (call inside shard_map).
+
+    Each worker samples its own mask (folded by axis index); the mean of the
+    scattered, rescaled samples is psum'd — unbiased for the mean gradient.
+    """
+    chunks, n = _to_chunks(local_vec, cfg.chunk_p)
+    nc, cp = chunks.shape
+    signs_key = fold_in_str(key, "gc-signs")                  # shared unitary
+    y = ros.precondition(chunks, signs_key, "hadamard")
+    widx = sum(jax.lax.axis_index(a) * 131 for a in axis_names)
+    wkey = jax.random.fold_in(jax.random.fold_in(fold_in_str(key, "gc-mask"), step), widx)
+    u = jax.random.uniform(wkey, (nc, cp))
+    _, idx = jax.lax.top_k(u, cfg.m)
+    vals = jnp.take_along_axis(y, idx, axis=-1)
+    scat = jnp.zeros_like(y).at[jnp.arange(nc)[:, None], idx].set(vals) * (cp / cfg.m)
+    n_w = 1
+    for a in axis_names:
+        scat = jax.lax.psum(scat, a)
+        n_w *= jax.lax.axis_size(a)
+    y_mean = scat / n_w
+    return ros.unmix(y_mean, signs_key, "hadamard").reshape(-1)[:n]
+
+
+def wire_bytes(p_total: int, cfg: CompressConfig, n_workers: int) -> dict:
+    """Napkin accounting used by EXPERIMENTS.md §Perf."""
+    dense = 2 * p_total * 4                                   # ring all-reduce ≈ 2p
+    if cfg.mode == "shared-mask":
+        comp = 2 * int(p_total * cfg.gamma) * 4
+    else:
+        comp = n_workers * int(p_total * cfg.gamma) * 8       # values+indices gather
+    return {"dense_bytes": dense, "compressed_bytes": comp, "ratio": comp / dense}

@@ -1,0 +1,333 @@
+"""Sparsified K-means (paper §VI, Algs. 1–2) plus the comparison baselines of §VII.
+
+All cluster solvers share the same shape conventions:
+  data rows = samples; centers (K, p); assignments (n,) int32.
+
+Solvers
+-------
+- :func:`kmeans`                    — standard Lloyd + K-means++ (the reference).
+- :func:`sparsified_kmeans`         — Alg. 1: one pass (precondition→sample→cluster
+                                      on the sparse matrix), optional Alg. 2 second pass.
+- :func:`feature_extraction_kmeans` — Boutsidis et al. [36]: Z = XΩᵀ, Ω random signs.
+- :func:`feature_selection_kmeans`  — [36]: leverage-score row (feature) sampling.
+
+The sparse assignment step is the compute hot-spot; the reference here is
+gather-based, and ``repro.kernels.sparse_assign`` provides the TPU Pallas kernel
+(one-hot MXU form) behind the same signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ros, sketch
+from repro.core.sampling import SparseRows, subsample
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KMeansResult:
+    assignments: jax.Array          # (n,) int32
+    centers: jax.Array              # (K, p) in the ORIGINAL domain
+    objective: jax.Array            # final value of the solver's objective
+    n_iter: jax.Array               # iterations of the final (best) run
+    centers_pre: jax.Array | None = None  # (K, p_pad) preconditioned domain (sparsified only)
+
+    def tree_flatten(self):
+        return (self.assignments, self.centers, self.objective, self.n_iter, self.centers_pre), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ------------------------------------------------------------ distances -----
+
+def dense_sq_dists(x: jax.Array, centers: jax.Array) -> jax.Array:
+    """(n, K) squared Euclidean distances."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(centers * centers, axis=1)
+    return x2 - 2.0 * x @ centers.T + c2[None, :]
+
+
+def sparse_sq_dists(values: jax.Array, indices: jax.Array, centers: jax.Array) -> jax.Array:
+    """(n, K) sparsified distances ‖z_i − R_iᵀ μ_k‖² (Eq. 35), gather reference.
+
+    Only the sampled coordinates of each row participate — this is what realizes
+    the γ = m/p flop reduction (O(nmK) instead of O(npK)).
+    """
+    g = centers.T[indices]                                   # (n, m, K)
+    return jnp.sum((values[..., None] - g) ** 2, axis=1)
+
+
+# ----------------------------------------------------------- K-means++ ------
+
+def _kpp_init(key: jax.Array, dist_to_center: Callable[[int], jax.Array], n: int, k: int,
+              gather_row: Callable[[jax.Array], jax.Array], p: int, dtype) -> jax.Array:
+    """Greedy K-means++ D²-seeding (kmeans++ with ``n_cand`` trial centers per
+    step, keeping the one that most reduces the potential — as in sklearn).
+
+    dist_to_center(row_dense) -> (n,) squared distances of every sample to a
+    candidate center given as a dense p-vector. gather_row(i) -> dense p-vector
+    for sample i.
+    """
+    n_cand = 2 + int(np.ceil(np.log(max(k, 2))))
+    k0, key = jax.random.split(key)
+    first = gather_row(jax.random.randint(k0, (), 0, n))
+    centers = jnp.zeros((k, p), dtype).at[0].set(first)
+    min_d = dist_to_center(first)
+
+    def body(j, carry):
+        centers, min_d, key = carry
+        key, kc = jax.random.split(key)
+        # D² sampling of n_cand candidates (guard all-zero with the floor)
+        logits = jnp.log(jnp.maximum(min_d, 1e-30))
+        idxs = jax.random.categorical(kc, logits, shape=(n_cand,))
+        cands = jax.vmap(gather_row)(idxs)                   # (n_cand, p)
+        new_ds = jax.vmap(dist_to_center)(cands)             # (n_cand, n)
+        pots = jnp.sum(jnp.minimum(min_d[None, :], new_ds), axis=1)
+        best = jnp.argmin(pots)
+        centers = centers.at[j].set(cands[best])
+        min_d = jnp.minimum(min_d, new_ds[best])
+        return centers, min_d, key
+
+    centers, _, _ = jax.lax.fori_loop(1, k, body, (centers, min_d, key))
+    return centers
+
+
+def kpp_init_dense(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    n, p = x.shape
+
+    def dist(c):
+        return jnp.sum((x - c[None, :]) ** 2, axis=1)
+
+    return _kpp_init(key, dist, n, k, lambda i: x[i], p, x.dtype)
+
+
+def kpp_init_sparse(key: jax.Array, values: jax.Array, indices: jax.Array, p: int, k: int) -> jax.Array:
+    """K-means++ under the sparsified metric: candidate centers are scattered
+    sparse rows; distances use only each row's sampled coordinates (Eq. 35)."""
+    n, m = values.shape
+
+    def gather_row(i):
+        return jnp.zeros((p,), values.dtype).at[indices[i]].set(values[i])
+
+    def dist(c):
+        g = c[indices]                                       # (n, m)
+        return jnp.sum((values - g) ** 2, axis=1)
+
+    return _kpp_init(key, dist, n, k, gather_row, p, values.dtype)
+
+
+# ------------------------------------------------------------ Lloyd loops ---
+
+def _lloyd_dense(x: jax.Array, mu0: jax.Array, max_iter: int, tol: float):
+    n, p = x.shape
+    k = mu0.shape[0]
+
+    def cond(c):
+        it, _, shift = c[0], c[1], c[2]
+        return (it < max_iter) & (shift > tol)
+
+    def body(c):
+        it, mu, _ = c
+        d = dense_sq_dists(x, mu)
+        a = jnp.argmin(d, axis=1)
+        oh = jax.nn.one_hot(a, k, dtype=x.dtype)             # (n, K)
+        sums = oh.T @ x                                      # (K, p)
+        counts = jnp.sum(oh, axis=0)
+        new_mu = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], mu)
+        shift = jnp.max(jnp.abs(new_mu - mu))
+        return it + 1, new_mu, shift
+
+    it, mu, _ = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), mu0, jnp.full((), jnp.inf, x.dtype)))
+    d = dense_sq_dists(x, mu)
+    a = jnp.argmin(d, axis=1).astype(jnp.int32)
+    obj = jnp.sum(jnp.min(d, axis=1))
+    return mu, a, obj, it
+
+
+def _lloyd_sparse(values: jax.Array, indices: jax.Array, p: int, mu0: jax.Array,
+                  max_iter: int, tol: float, assign_fn=None):
+    """Lloyd on compact sparse rows: Eq. (36) assignment + Eq. (39) update."""
+    n, m = values.shape
+    k = mu0.shape[0]
+    assign_fn = assign_fn or sparse_sq_dists
+
+    def cond(c):
+        it, _, shift = c[0], c[1], c[2]
+        return (it < max_iter) & (shift > tol)
+
+    def body(c):
+        it, mu, _ = c
+        d = assign_fn(values, indices, mu)
+        a = jnp.argmin(d, axis=1)
+        rows = jnp.broadcast_to(a[:, None], indices.shape)
+        sums = jnp.zeros((k, p), values.dtype).at[rows, indices].add(values)
+        counts = jnp.zeros((k, p), values.dtype).at[rows, indices].add(1.0)
+        # coordinates never sampled in a cluster keep their previous value
+        new_mu = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), mu)
+        shift = jnp.max(jnp.abs(new_mu - mu))
+        return it + 1, new_mu, shift
+
+    it, mu, _ = jax.lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), mu0, jnp.full((), jnp.inf, values.dtype)))
+    d = assign_fn(values, indices, mu)
+    a = jnp.argmin(d, axis=1).astype(jnp.int32)
+    obj = jnp.sum(jnp.min(d, axis=1))
+    return mu, a, obj, it
+
+
+# ------------------------------------------------------------- solvers ------
+
+@functools.partial(jax.jit, static_argnames=("k", "n_init", "max_iter"))
+def kmeans(x: jax.Array, k: int, key: jax.Array, n_init: int = 5,
+           max_iter: int = 100, tol: float = 1e-6) -> KMeansResult:
+    """Standard K-means (Lloyd) with K-means++ seeding, best of ``n_init`` runs."""
+
+    def one_run(rkey):
+        mu0 = kpp_init_dense(rkey, x, k)
+        return _lloyd_dense(x, mu0, max_iter, tol)
+
+    mus, assigns, objs, iters = jax.lax.map(one_run, jax.random.split(key, n_init))
+    best = jnp.argmin(objs)
+    return KMeansResult(assigns[best], mus[best], objs[best], iters[best])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "p", "n_init", "max_iter", "assign_fn"))
+def sparse_kmeans_core(values: jax.Array, indices: jax.Array, p: int, k: int, key: jax.Array,
+                       n_init: int = 5, max_iter: int = 100, tol: float = 1e-6,
+                       assign_fn=None):
+    """Lloyd on an already-sketched matrix (domain-agnostic); best of n_init."""
+
+    def one_run(rkey):
+        mu0 = kpp_init_sparse(rkey, values, indices, p, k)
+        return _lloyd_sparse(values, indices, p, mu0, max_iter, tol, assign_fn)
+
+    mus, assigns, objs, iters = jax.lax.map(one_run, jax.random.split(key, n_init))
+    best = jnp.argmin(objs)
+    return mus[best], assigns[best], objs[best], iters[best]
+
+
+def sparsified_kmeans(x: jax.Array, k: int, key: jax.Array, gamma: float | None = None,
+                      m: int | None = None, transform: ros.Transform = "hadamard",
+                      precondition: bool = True, two_pass: bool = False,
+                      n_init: int = 5, max_iter: int = 100, tol: float = 1e-6,
+                      assign_fn=None) -> KMeansResult:
+    """Alg. 1 (one-pass) / Alg. 2 (``two_pass=True``) sparsified K-means.
+
+    ``precondition=False`` gives the paper's no-ROS ablation baseline.
+    """
+    n, p = x.shape
+    spec = sketch.make_spec(p, key, gamma=gamma, m=m,
+                            transform=transform if precondition else "dct")
+    if precondition:
+        s = sketch.sketch(x, spec)
+        pp = spec.p_pad
+    else:
+        s = subsample(x, spec.mask_key(), spec.m)
+        pp = p
+
+    mu_pre, a, obj, it = sparse_kmeans_core(
+        s.values, s.indices, pp, k, spec.signs_key(), n_init, max_iter, tol, assign_fn
+    )
+    centers = sketch.unmix_dense(mu_pre, spec) if precondition else mu_pre
+
+    if two_pass:
+        # Alg. 2: one more pass over the ORIGINAL data — recompute centers as
+        # true sample means of assigned points, and reassign in the original domain.
+        oh = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        sums = oh.T @ x.astype(jnp.float32)
+        counts = jnp.sum(oh, axis=0)
+        centers2 = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], centers)
+        d = dense_sq_dists(x.astype(jnp.float32), centers)   # reassign w/ 1-pass centers
+        a = jnp.argmin(d, axis=1).astype(jnp.int32)
+        obj = jnp.sum(jnp.min(d, axis=1))
+        centers = centers2
+
+    return KMeansResult(a, centers, obj, it, centers_pre=mu_pre)
+
+
+def feature_extraction_kmeans(x: jax.Array, k: int, m: int, key: jax.Array,
+                              two_pass: bool = False, n_init: int = 5,
+                              max_iter: int = 100, tol: float = 1e-6) -> KMeansResult:
+    """Boutsidis et al. feature extraction: cluster Z = XΩᵀ/√m, Ω ∈ {±1}^{m×p}.
+
+    One-pass center estimates use the pseudo-inverse lift Ω⁺ (the paper's Fig. 9
+    shows these are poor — kept faithful); ``two_pass`` recomputes them from X.
+    """
+    n, p = x.shape
+    komega, krun = jax.random.split(key)
+    omega = jax.random.rademacher(komega, (m, p), dtype=jnp.float32) / np.sqrt(m)
+    z = x.astype(jnp.float32) @ omega.T
+    res = kmeans(z, k, krun, n_init=n_init, max_iter=max_iter, tol=tol)
+    # lift centers with the pseudo-inverse (rank-m, inconsistent — see §VII-B)
+    centers = res.centers @ jnp.linalg.pinv(omega).T
+    a, obj = res.assignments, res.objective
+    if two_pass:
+        oh = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        counts = jnp.sum(oh, axis=0)
+        centers = jnp.where(counts[:, None] > 0,
+                            (oh.T @ x.astype(jnp.float32)) / jnp.maximum(counts, 1.0)[:, None],
+                            centers)
+    return KMeansResult(a, centers, obj, res.n_iter)
+
+
+def leverage_scores(x: jax.Array, rank: int, key: jax.Array, oversample: int = 10) -> jax.Array:
+    """Approximate row (feature) leverage scores via a randomized range finder [7].
+
+    Returns (p,) scores of Xᵀ's rows = feature importances for feature selection.
+    """
+    n, p = x.shape
+    xt = x.astype(jnp.float32).T                             # (p, n) features-as-rows
+    g = jax.random.normal(key, (n, rank + oversample), jnp.float32)
+    ys = xt @ g                                              # (p, r+o)
+    q, _ = jnp.linalg.qr(ys)                                 # (p, r+o) orthonormal
+    scores = jnp.sum(q[:, :rank] ** 2, axis=1)
+    return scores / jnp.sum(scores)
+
+
+def feature_selection_kmeans(x: jax.Array, k: int, m: int, key: jax.Array,
+                             two_pass: bool = False, n_init: int = 5,
+                             max_iter: int = 100, tol: float = 1e-6) -> KMeansResult:
+    """[36] feature selection: sample m features by leverage scores, cluster there.
+
+    Requires ≥3 passes over the data (score pass, sampling pass, clustering) —
+    included as the paper's multi-pass baseline.
+    """
+    n, p = x.shape
+    kscore, ksel, krun = jax.random.split(key, 3)
+    scores = leverage_scores(x, rank=k, key=kscore)
+    sel = jax.random.choice(ksel, p, (m,), replace=False, p=scores)
+    # rescale by 1/sqrt(m q_j) as in [36]
+    z = x[:, sel].astype(jnp.float32) / jnp.sqrt(m * scores[sel])[None, :]
+    res = kmeans(z, k, krun, n_init=n_init, max_iter=max_iter, tol=tol)
+    centers = jnp.zeros((k, p), jnp.float32).at[:, sel].set(res.centers * jnp.sqrt(m * scores[sel])[None, :])
+    a = res.assignments
+    if two_pass:
+        oh = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        counts = jnp.sum(oh, axis=0)
+        centers = jnp.where(counts[:, None] > 0,
+                            (oh.T @ x.astype(jnp.float32)) / jnp.maximum(counts, 1.0)[:, None],
+                            centers)
+    return KMeansResult(a, centers, res.objective, res.n_iter)
+
+
+# -------------------------------------------------------------- metrics -----
+
+def clustering_accuracy(pred: jax.Array, true: jax.Array, k: int) -> float:
+    """Best-permutation label accuracy (Hungarian matching), as in §VII-B."""
+    from scipy.optimize import linear_sum_assignment
+
+    pred = np.asarray(pred)
+    true = np.asarray(true)
+    conf = np.zeros((k, k))
+    for i in range(k):
+        for j in range(k):
+            conf[i, j] = np.sum((pred == i) & (true == j))
+    ri, ci = linear_sum_assignment(-conf)
+    return float(conf[ri, ci].sum() / len(true))

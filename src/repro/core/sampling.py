@@ -1,0 +1,102 @@
+"""Element-wise uniform sampling without replacement (the R_i R_iᵀ step).
+
+Each sample keeps exactly ``m`` of ``p`` coordinates, chosen uniformly at random
+without replacement, **with an independent draw per sample** — the property the
+paper's consistency results hinge on (§VII-B discussion).
+
+Sparse data is stored as a *compact dense pair* ``(values (n, m), indices (n, m))``
+rather than CSR/CSC: TPUs have no sparse memory path, and the compact pair keeps
+the γ = m/p compute win as a reduced contraction dimension on the MXU (see
+DESIGN.md §3.2). Indices are sorted ascending per row for locality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseRows:
+    """Exactly-m-sparse rows of an (n, p) matrix in compact form.
+
+    values:  (n, m) — the kept entries.
+    indices: (n, m) int32 — their column positions, sorted ascending per row.
+    p:       full dimensionality (static).
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    p: int
+
+    # -- pytree plumbing (p is static aux data) --
+    def tree_flatten(self):
+        return (self.values, self.indices), self.p
+
+    @classmethod
+    def tree_unflatten(cls, p, children):
+        return cls(children[0], children[1], p)
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def gamma(self) -> float:
+        return self.m / self.p
+
+    def to_dense(self) -> jax.Array:
+        """Dense (n, p) with zeros at unsampled coordinates: R_i R_iᵀ y_i."""
+        n, m = self.values.shape
+        out = jnp.zeros((n, self.p), self.values.dtype)
+        rows = jnp.arange(n)[:, None]
+        return out.at[rows, self.indices].add(self.values)
+
+    def nbytes(self) -> int:
+        return self.values.size * self.values.dtype.itemsize + self.indices.size * self.indices.dtype.itemsize
+
+
+def sample_indices(key: jax.Array, n: int, p: int, m: int) -> jax.Array:
+    """(n, m) int32 — m distinct columns per row, uniform without replacement.
+
+    top-k of i.i.d. uniforms is a uniformly random m-subset; we sort for locality.
+    """
+    if not (0 < m <= p):
+        raise ValueError(f"need 0 < m <= p, got m={m}, p={p}")
+    u = jax.random.uniform(key, (n, p))
+    _, idx = jax.lax.top_k(u, m)
+    return jnp.sort(idx.astype(jnp.int32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def subsample(y: jax.Array, key: jax.Array, m: int) -> SparseRows:
+    """Keep m of p entries of each row of ``y`` (n, p), independent per row."""
+    n, p = y.shape
+    idx = sample_indices(key, n, p, m)
+    vals = jnp.take_along_axis(y, idx, axis=-1)
+    return SparseRows(vals, idx, p)
+
+
+def scatter_to_dense(values: jax.Array, indices: jax.Array, p: int) -> jax.Array:
+    """Functional form of SparseRows.to_dense for raw (values, indices)."""
+    return SparseRows(values, indices, p).to_dense()
+
+
+def counts_per_coordinate(indices: jax.Array, p: int, dtype=jnp.float32) -> jax.Array:
+    """(p,) — how many rows sampled each coordinate (the n_k^{(j)} of Eq. 39)."""
+    return jnp.zeros((p,), dtype).at[indices.reshape(-1)].add(1.0)
+
+
+def row_sampled_gather(dense_vecs: jax.Array, indices: jax.Array) -> jax.Array:
+    """R_iᵀ v for a batch: gather ``dense_vecs`` (n, p) or (p,) at (n, m) indices."""
+    if dense_vecs.ndim == 1:
+        return dense_vecs[indices]
+    return jnp.take_along_axis(dense_vecs, indices, axis=-1)

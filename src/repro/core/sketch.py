@@ -1,0 +1,80 @@
+"""The one-pass sketch: precondition (HD) then subsample (R_i R_iᵀ), fused.
+
+This is the paper's full compression operator. A :class:`SketchSpec` captures
+everything needed to interpret / unmix a sketch later (transform type, D's key,
+original p) so that streaming consumers never revisit raw data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ros
+from repro.core.sampling import SparseRows, subsample
+from repro.utils.prng import fold_in_str
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static + key state describing a sketch stream."""
+
+    p: int                      # original dimensionality
+    m: int                      # kept coordinates per sample
+    transform: ros.Transform = "hadamard"
+    key: jax.Array | None = None  # root key; D uses fold("signs"), R_i use fold("mask")
+
+    @property
+    def p_pad(self) -> int:
+        return ros.pad_len(self.p, self.transform)
+
+    @property
+    def gamma(self) -> float:
+        return self.m / self.p_pad
+
+    def signs_key(self) -> jax.Array:
+        return fold_in_str(self.key, "ros-signs")
+
+    def mask_key(self) -> jax.Array:
+        return fold_in_str(self.key, "sample-mask")
+
+
+def make_spec(p: int, key: jax.Array, gamma: float | None = None, m: int | None = None,
+              transform: ros.Transform = "hadamard") -> SketchSpec:
+    pp = ros.pad_len(p, transform)
+    if m is None:
+        if gamma is None:
+            raise ValueError("provide gamma or m")
+        m = max(1, int(round(gamma * pp)))
+    return SketchSpec(p=p, m=int(m), transform=transform, key=key)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "m", "transform"))
+def _sketch_impl(x, signs_key, mask_key, p, m, transform):
+    y = ros.precondition(x, signs_key, transform, p_orig=p)
+    return subsample(y, mask_key, m)
+
+
+def sketch(x: jax.Array, spec: SketchSpec, batch_key: jax.Array | None = None) -> SparseRows:
+    """Compress a batch of rows (n, p) → SparseRows (n, m) in one fused pass.
+
+    ``batch_key`` distinguishes batches of a stream so every sample gets an
+    independent R_i; defaults to the spec's mask key (fine for one-shot use).
+    """
+    mask_key = batch_key if batch_key is not None else spec.mask_key()
+    return _sketch_impl(x, spec.signs_key(), mask_key, spec.p, spec.m, spec.transform)
+
+
+def unmix_dense(w_dense: jax.Array, spec: SketchSpec) -> jax.Array:
+    """(HD)ᵀ applied to dense vectors living in the preconditioned domain."""
+    return ros.unmix(w_dense, spec.signs_key(), spec.transform, p_orig=spec.p)
+
+
+def compression_ratio(spec: SketchSpec, value_bytes: int = 4, index_bytes: int = 4) -> float:
+    """Stored bytes per sample vs. dense fp32 — the paper's storage story."""
+    dense = spec.p * 4
+    sketched = spec.m * (value_bytes + index_bytes)
+    return sketched / dense

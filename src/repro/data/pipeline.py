@@ -1,0 +1,110 @@
+"""Streaming data pipeline: deterministic, resumable, shard-aware.
+
+Design for 1000+ nodes (DESIGN.md §5):
+- every batch is a pure function of (root seed, step, shard) — no coordination,
+  so any worker can regenerate any batch (straggler backup dispatch = another
+  worker computes the same (step, shard) batch; exactly-once by construction);
+- pipeline state is one integer cursor (+ the seed), checkpointed with the model;
+- an optional one-pass **sketch stage** (the paper's compression) runs over
+  vector-valued streams before they leave the ingest host — the downstream PCA /
+  K-means consumers never see dense data.
+
+Real deployments swap ``SyntheticLMSource`` for a tokenized file/GCS reader with
+the same (seed, step, shard) → batch contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sketch_mod
+
+
+@dataclasses.dataclass
+class PipelineState:
+    seed: int
+    step: int = 0
+
+    def to_json(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PipelineState":
+        return cls(seed=int(d["seed"]), step=int(d["step"]))
+
+
+class SyntheticLMSource:
+    """Deterministic synthetic token stream (zipf-ish unigram + shifted labels)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int, seed: int = 0):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = global_batch
+        self.state = PipelineState(seed=seed)
+        probs = 1.0 / np.arange(1, vocab_size + 1) ** 1.1
+        self._probs = probs / probs.sum()
+
+    def _batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.state.seed, step))
+        toks = rng.choice(self.vocab, size=(self.batch, self.seq + 1), p=self._probs)
+        toks = toks.astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> dict:
+        b = self._batch_at(self.state.step)
+        self.state.step += 1
+        return b
+
+    def batch_for(self, step: int) -> dict:
+        """Backup-dispatch hook: regenerate any step's batch on any worker."""
+        return self._batch_at(step)
+
+
+class VectorStreamSource:
+    """Deterministic stream of p-dimensional samples (for PCA/K-means at scale)."""
+
+    def __init__(self, p: int, batch: int, seed: int = 0, mode: str = "lowrank", k: int = 8):
+        self.p, self.batch, self.mode, self.k = p, batch, mode, k
+        self.state = PipelineState(seed=seed)
+        rng = np.random.default_rng(seed)
+        u, _ = np.linalg.qr(rng.normal(size=(p, k)))
+        self._u = u.astype(np.float32)
+        self._lam = np.linspace(10, 2, k).astype(np.float32)
+
+    def next_batch(self) -> np.ndarray:
+        rng = np.random.default_rng((self.state.seed, self.state.step))
+        self.state.step += 1
+        kappa = rng.normal(size=(self.batch, self.k)).astype(np.float32)
+        x = (kappa * self._lam) @ self._u.T
+        x += 0.05 * rng.normal(size=(self.batch, self.p)).astype(np.float32)
+        return x
+
+
+class SketchingPipeline:
+    """Wraps a vector source with the paper's one-pass compression.
+
+    Emits SparseRows batches; every batch gets an independent mask key
+    (fold of the spec key and the step) — the paper's per-sample R_i property.
+    """
+
+    def __init__(self, source: VectorStreamSource, spec: sketch_mod.SketchSpec):
+        self.source = source
+        self.spec = spec
+
+    def next_batch(self):
+        step = self.source.state.step
+        x = self.source.next_batch()
+        bk = jax.random.fold_in(self.spec.mask_key(), step)
+        return sketch_mod.sketch(jnp.asarray(x), self.spec, batch_key=bk)
+
+    @property
+    def state(self) -> PipelineState:
+        return self.source.state

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots.
+
+- fwht:          fused ROS preconditioning y = H(d⊙x) — Kronecker MXU form
+- sparse_assign: sparsified K-means assignment on compact sparse rows
+- ops:           public wrappers (backend auto-selection)
+- ref:           pure-jnp oracles used for validation
+"""
+from repro.kernels import fwht, ops, ref, sparse_assign  # noqa: F401

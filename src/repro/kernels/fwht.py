@@ -1,0 +1,95 @@
+"""Fused ROS preconditioning kernel: y = H·(d ⊙ x) as Kronecker-factored MXU matmuls.
+
+TPU adaptation (DESIGN.md §3.1): GPU FWHTs use warp-shuffle butterflies; the TPU
+equivalent is the Kronecker identity
+
+    H_p = H_a ⊗ H_b   (p = a·b, Sylvester ordering)
+    H_p x = vec( H_a · mat_{a×b}(x) · H_bᵀ )      (row-major reshape)
+
+so the whole transform becomes two dense matmuls on the systolic array, with the
+sign flip (D) fused into the same VMEM round-trip. Cost p·(a+b) MACs/row instead
+of the butterfly's p·log₂p VPU ops — fewer passes over VMEM and ~all of it on
+the MXU. For p ≤ 256 a single dense H_p matmul is used (a = 1).
+
+The kernel tiles rows; each grid step owns a (block_rows, p) tile resident in
+VMEM. H_a, H_b (and the sign vector) are small and replicated to every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.ros import hadamard_matrix
+
+# largest p the single-tile kernel supports: (block_rows × p) must fit VMEM.
+MAX_P = 1 << 15
+
+
+def factor_p(p: int) -> tuple[int, int]:
+    """Split p = a·b with b the MXU-friendly inner factor (b ≥ 128 when possible)."""
+    if p & (p - 1):
+        raise ValueError(f"p must be a power of two, got {p}")
+    if p <= 256:
+        return 1, p
+    k = p.bit_length() - 1
+    b = 1 << max(7, (k + 1) // 2)    # inner factor ≥ 128
+    return p // b, b
+
+
+def default_block_rows(p: int, dtype=jnp.float32, vmem_budget: int = 6 << 20) -> int:
+    """Rows per tile so that in+out tiles fit the VMEM budget."""
+    bytes_per_row = 2 * p * jnp.dtype(dtype).itemsize
+    br = max(8, vmem_budget // max(1, bytes_per_row))
+    return int(min(256, 1 << int(np.floor(np.log2(br)))))
+
+
+def _kernel(x_ref, d_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
+    x = x_ref[...] * d_ref[...]                              # sign flip (D), fused
+    bn = x.shape[0]
+    f32 = jnp.float32
+    if a == 1:
+        y = jax.lax.dot(x, hb_ref[...], preferred_element_type=f32)
+    else:
+        # inner factor: contract the trailing b axis with H_b
+        y = jax.lax.dot(x.reshape(bn * a, b), hb_ref[...], preferred_element_type=f32)
+        # outer factor: contract the a axis with H_a
+        y = y.reshape(bn, a, b).transpose(0, 2, 1).reshape(bn * b, a)
+        y = jax.lax.dot(y, ha_ref[...], preferred_element_type=f32)
+        y = y.reshape(bn, b, a).transpose(0, 2, 1).reshape(bn, a * b)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def hd_precondition(x: jax.Array, signs: jax.Array, block_rows: int | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """y = H·(signs ⊙ x) along the last axis. x: (n, p), p a power of two ≤ 2^15."""
+    n, p = x.shape
+    if p > MAX_P:
+        raise ValueError(f"p={p} exceeds single-tile kernel limit {MAX_P}; chunk first")
+    a, b = factor_p(p)
+    br = block_rows or default_block_rows(p, x.dtype)
+    n_pad = -n % br
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    ha = hadamard_matrix(a, x.dtype) if a > 1 else jnp.zeros((1, 1), x.dtype)
+    hb = hadamard_matrix(b, x.dtype)
+    d2 = signs.astype(x.dtype)[None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, a=a, b=b),
+        grid=((n + n_pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, p), lambda i: (i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((max(a, 1), max(a, 1)), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((n + n_pad), p), x.dtype),
+        interpret=interpret,
+    )(x, d2, ha, hb)
+    return out[:n] if n_pad else out

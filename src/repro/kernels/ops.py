@@ -1,0 +1,50 @@
+"""Public jit'd wrappers for the Pallas kernels, with backend auto-selection.
+
+On TPU the compiled kernels run natively; elsewhere (this CI container is
+CPU-only) they execute via ``interpret=True`` (Pallas interpreter) or fall back
+to the jnp oracles for speed. Call sites in core/ go through these wrappers so
+the backend choice is one switch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fwht as _fwht
+from repro.kernels import ref as _ref
+from repro.kernels import sparse_assign as _sa
+
+
+@functools.cache
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def hd_precondition(x: jax.Array, signs: jax.Array, mode: str = "auto") -> jax.Array:
+    """Fused y = H(d⊙x). mode ∈ {auto, kernel, interpret, ref}."""
+    if mode == "auto":
+        mode = "kernel" if _on_tpu() else "ref"
+    if mode == "ref":
+        return _ref.ref_hd_precondition(x, signs)
+    return _fwht.hd_precondition(x, signs, interpret=(mode == "interpret"))
+
+
+def sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array, mode: str = "auto"):
+    """(dists, argmin) for sparsified K-means assignment."""
+    if mode == "auto":
+        mode = "kernel" if _on_tpu() else "ref"
+    if mode == "ref":
+        return _ref.ref_sparse_assign(values, indices, centers)
+    return _sa.sparse_assign(values, indices, centers, interpret=(mode == "interpret"))
+
+
+def kernel_assign_fn(mode: str = "auto"):
+    """Adapter matching core.kmeans assign_fn signature (returns distances only)."""
+
+    def fn(values, indices, centers):
+        d, _ = sparse_assign(values, indices, centers, mode=mode)
+        return d
+
+    return fn

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True on
+CPU, compiled on TPU) across shape/dtype sweeps — see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ros
+
+
+def ref_hd_precondition(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """y = H·(d ⊙ x) along the last axis — oracle for kernels.fwht.
+
+    ``x``: (n, p) with p a power of two; ``signs``: (p,) of ±1.
+    """
+    return ros.fwht(x * signs[None, :])
+
+
+def ref_sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array):
+    """Sparsified K-means assignment oracle — kernels.sparse_assign.
+
+    values (n, m), indices (n, m) int32 (distinct per row), centers (K, p).
+    Returns (dists (n, K), argmin (n,) int32) of ‖z_i − R_iᵀμ_k‖² (paper Eq. 36).
+    """
+    g = centers.T[indices]                                   # (n, m, K)
+    d = jnp.sum((values[..., None] - g) ** 2, axis=1)
+    return d, jnp.argmin(d, axis=1).astype(jnp.int32)

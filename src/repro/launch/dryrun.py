@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). 512 host devices back both production meshes:
+16×16 single-pod and 2×16×16 multi-pod.
+
+Per cell this records: memory_analysis (bytes/device — proves it fits),
+cost_analysis (flops/bytes for §Roofline), and the collective mix; with
+``--roofline`` it additionally runs the unrolled depth probes (single-pod
+only) and emits the three roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--roofline] [--out DIR]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def arch_trainer_config(arch: str, shape_kind: str):
+    """Per-arch memory/optimizer presets (DESIGN.md §4 notes)."""
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainer import TrainerConfig
+
+    opt = OptConfig()
+    if arch == "kimi-k2-1t-a32b":
+        # 1T params on 16 GB chips: factored second moment, no first moment
+        opt = OptConfig(momentum=False, factored=True, moment_dtype="bfloat16")
+    elif arch == "qwen3-moe-235b-a22b":
+        opt = OptConfig(moment_dtype="bfloat16")
+    return TrainerConfig(opt=opt, sp=True)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             roofline: bool = False) -> dict:
+    from repro.configs.registry import cell_is_runnable, get_arch, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import probe_cell, roofline_terms
+    from repro.roofline.hlo import collective_stats
+    from repro.train.trainer import lower_cell
+
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    ok, why = cell_is_runnable(arch, shape_name)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = why
+        return rec
+
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    tcfg = arch_trainer_config(arch, shape.kind)
+
+    try:
+        t0 = time.time()
+        lowered, meta = lower_cell(cfg, shape, mesh, tcfg)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        coll = collective_stats(compiled.as_text())
+        peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes + ma.output_size_in_bytes)
+        # analytic TPU-target projection (CPU backend widens bf16 DUS to f32
+        # inside fusions and charges full-size temps — see roofline/memmodel.py)
+        from repro.launch.mesh import dp_axes_of
+        from repro.roofline.analysis import count_params
+        from repro.roofline.memmodel import peak_model
+        import numpy as _np
+
+        n_dp = int(_np.prod([mesh.shape[a] for a in dp_axes_of(mesh)]))
+        n_tp = mesh.shape.get("model", 1)
+        model = peak_model(
+            cfg, shape, n_chips, n_dp, n_tp, count_params(cfg)["total"],
+            sp=tcfg.sp, momentum=tcfg.opt.momentum, factored=tcfg.opt.factored,
+            moment_bytes=2 if tcfg.opt.moment_dtype == "bfloat16" else 4,
+        )
+        rec.update({
+            "status": "ok",
+            "kind": meta["kind"],
+            "n_chips": n_chips,
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": peak,
+                "fits_16GB": peak < (16 << 30),
+                "modeled_tpu_peak_bytes": model["total"],
+                "modeled_components": model["components"],
+                "modeled_fits_16GB": model["fits_16GB"],
+            },
+            "cost": {"flops_per_device": ca.get("flops", 0.0),
+                     "bytes_per_device": ca.get("bytes accessed", 0.0)},
+            "collectives_steady": {k: v for k, v in coll["by_kind"].items()},
+        })
+        del compiled, lowered
+        if roofline and mesh_kind == "single":
+            probe = probe_cell(cfg, shape, mesh, tcfg)
+            rec["roofline"] = {
+                **probe,
+                "terms": roofline_terms(probe["per_device"], n_chips, cfg, shape),
+            }
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ARCHS, SHAPES
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}.json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skip"):
+                            print(f"cached  {arch} × {shape} × {mesh_kind}")
+                            continue
+                rec = run_cell(arch, shape, mesh_kind, args.out, roofline=args.roofline)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" peak={rec['memory']['peak_bytes']/2**30:.1f}GB"
+                             f" fits={rec['memory']['fits_16GB']}"
+                             f" compile={rec['compile_s']}s")
+                if status == "fail":
+                    n_fail += 1
+                    extra = " " + rec["error"][:160]
+                print(f"{status:5s}  {arch} × {shape} × {mesh_kind}{extra}", flush=True)
+    print(f"done, failures={n_fail}")
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

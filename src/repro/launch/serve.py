@@ -1,0 +1,82 @@
+"""Serving launcher: batched prefill + decode loop for any arch.
+
+``python -m repro.launch.serve --arch glm4-9b --reduced --batch 4 --prompt-len 16 --gen 8``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_arch
+    from repro.models.api import get_api
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    api = get_api(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_params(key)
+    B = args.batch
+    max_len = args.prompt_len + args.gen
+    prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+
+    t0 = time.time()
+    if cfg.family == "audio":
+        from repro.models import encdec
+
+        frames = 0.1 * jax.random.normal(key, (B, args.prompt_len, cfg.d_model))
+        cache = encdec.init_decode_cache(params, frames, cfg, max_len, dtype=jnp.float32)
+        cur = jnp.zeros((B, 1), jnp.int32)
+        toks = []
+        for t in range(args.gen):
+            logits, cache = api.decode_fn(params, cur, cache, jnp.int32(t + 1))
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            toks.append(cur)
+        out = jnp.concatenate(toks, 1)
+    else:
+        # prefill then greedy decode
+        if cfg.family in ("dense", "moe", "vlm"):
+            logits, cache = api.prefill_fn(params, {"tokens": prompt}, cache_dtype=jnp.float32)
+            cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, args.gen), (0, 0), (0, 0)))
+                     for k, v in cache.items()}
+        else:
+            cache = api.init_decode_state(B, max_len)
+            logits = None
+            for t in range(args.prompt_len):
+                logits, cache = api.decode_fn(params, prompt[:, t:t+1], cache, jnp.int32(t + 1))
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        toks = [cur]
+        decode = jax.jit(api.decode_fn)
+        for t in range(args.gen - 1):
+            logits, cache = decode(params, cur, cache, jnp.int32(args.prompt_len + t + 1))
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            toks.append(cur)
+        out = jnp.concatenate(toks, 1)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({B*args.gen/dt:.1f} tok/s incl. compile)")
+    print("sample tokens:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

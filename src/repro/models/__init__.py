@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures as composable functional modules."""
+from repro.models.api import ModelAPI, get_api, input_specs  # noqa: F401
+from repro.models.transformer import Dist, NO_DIST  # noqa: F401

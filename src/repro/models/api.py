@@ -1,0 +1,160 @@
+"""Unified per-architecture API: init / loss / prefill / decode + input specs.
+
+Everything the launcher, trainer, server and dry-run need, keyed by config
+family. ``input_specs`` returns jax.ShapeDtypeStruct trees (no allocation) —
+the dry-run lowers against these directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, mamba_lm, ssm
+from repro.models import transformer as tr
+from repro.models.transformer import NO_DIST, Dist
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., Any]             # (params, batch, dist) -> (loss, metrics)
+    prefill_fn: Callable[..., Any]          # (params, batch, dist) -> (logits, cache)
+    decode_fn: Callable[..., Any]           # (params, token, cache, cur_len, dist) -> (logits, cache)
+    init_decode_state: Callable[..., Any]   # (batch, max_len) -> cache/state pytree
+
+
+def _tokens_spec(shape: ShapeConfig, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), dtype)
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def loss_fn(params, batch, dist=NO_DIST, **kw):
+            return tr.lm_loss(params, batch, cfg, dist, **kw)
+
+        def prefill_fn(params, batch, dist=NO_DIST, **kw):
+            return tr.prefill(params, batch["tokens"], cfg, dist,
+                              positions=batch.get("positions"),
+                              vision_embeds=batch.get("vision_embeds"), **kw)
+
+        def decode_fn(params, token, cache, cur_len, dist=NO_DIST):
+            return tr.decode_step(params, token, cache, cur_len, cfg, dist)
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: tr.init_lm_params(key, cfg),
+            loss_fn=loss_fn,
+            prefill_fn=prefill_fn,
+            decode_fn=decode_fn,
+            init_decode_state=lambda batch, max_len: tr.init_kv_cache(cfg, batch, max_len),
+        )
+    if fam == "ssm":
+        def ssm_prefill(params, batch, dist=NO_DIST, **kw):
+            # prompt pass returning per-layer recurrent states
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            x = dist.constrain(x, dist.dp_axes, None, None)
+            from repro.models.common import rms_norm
+
+            def body(x, lp):
+                h = rms_norm(x, lp["ln"], cfg.rms_eps)
+                y, st = ssm.mamba2_forward(lp["mamba"], h, cfg, return_state=True, dist=dist)
+                return x + y, st
+
+            x, states = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+            x = rms_norm(x[:, -1], params["final_norm"], cfg.rms_eps)
+            return x @ params["lm_head"], states
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: mamba_lm.init_mamba_lm_params(key, cfg),
+            loss_fn=lambda params, batch, dist=NO_DIST, **kw: mamba_lm.mamba_lm_loss(params, batch, cfg, dist),
+            prefill_fn=ssm_prefill,
+            decode_fn=lambda params, token, cache, cur_len, dist=NO_DIST: mamba_lm.decode_step(
+                params, token, cache, cur_len, cfg, dist),
+            init_decode_state=lambda batch, max_len: mamba_lm.init_decode_state(cfg, batch),
+        )
+    if fam == "hybrid":
+        def hyb_prefill(params, batch, dist=NO_DIST, **kw):
+            # training-style pass is the prefill compute; decode states are
+            # rebuilt via the same scan with state collection
+            logits = hybrid.forward(params, batch["tokens"], cfg, dist, **kw)
+            return logits[:, -1], None
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: hybrid.init_hybrid_params(key, cfg),
+            loss_fn=lambda params, batch, dist=NO_DIST, **kw: hybrid.hybrid_loss(params, batch, cfg, dist, **kw),
+            prefill_fn=hyb_prefill,
+            decode_fn=lambda params, token, cache, cur_len, dist=NO_DIST: hybrid.decode_step(
+                params, token, cache, cur_len, cfg, dist),
+            init_decode_state=lambda batch, max_len: hybrid.init_decode_state(cfg, batch, max_len),
+        )
+    if fam == "audio":
+        def audio_loss(params, batch, dist=NO_DIST, **kw):
+            return encdec.encdec_loss(params, batch, cfg, dist, **kw)
+
+        def audio_prefill(params, batch, dist=NO_DIST, max_len: int = 128, **kw):
+            cache = encdec.init_decode_cache(params, batch["frames"], cfg, max_len, dist)
+            return None, cache
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_encdec_params(key, cfg),
+            loss_fn=audio_loss,
+            prefill_fn=audio_prefill,
+            decode_fn=lambda params, token, cache, cur_len, dist=NO_DIST: encdec.decode_step(
+                params, token, cache, cur_len, cfg, dist),
+            init_decode_state=None,  # built by prefill (needs encoder output)
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# -------------------------------------------------------------- input specs --
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape) cell.
+
+    train  → the kwargs of loss_fn's ``batch``
+    prefill→ the kwargs of prefill_fn's ``batch``
+    decode → (token, cache/state, cur_len) for decode_fn
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {"tokens": tok}
+        if shape.kind == "train":
+            batch["labels"] = tok
+        if cfg.family == "vlm":
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+            if shape.kind == "prefill":
+                batch.pop("tokens")  # prefill = encode; decode budget is static
+        return {"batch": batch}
+    # decode: one new token against a cache of length S
+    api = get_api(cfg)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    if cfg.family == "audio":
+        cache = encdec_cache_specs(cfg, B, S)
+        return {"token": token, "cache": cache, "cur_len": jax.ShapeDtypeStruct((), jnp.int32)}
+    cache = jax.eval_shape(lambda: api.init_decode_state(B, S))
+    return {"token": token, "cache": cache, "cur_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def encdec_cache_specs(cfg: ModelConfig, B: int, max_len: int) -> dict:
+    hd, kv = cfg.hd, cfg.n_kv_heads
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.n_layers, B, max_len, kv, hd), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((cfg.n_layers, B, max_len, kv, hd), jnp.bfloat16),
+        "xk": jax.ShapeDtypeStruct((cfg.n_layers, B, max_len, kv, hd), jnp.bfloat16),
+        "xv": jax.ShapeDtypeStruct((cfg.n_layers, B, max_len, kv, hd), jnp.bfloat16),
+    }

@@ -1,0 +1,123 @@
+"""Attention: chunked (flash-style) training/prefill path + cached decode path.
+
+Memory-efficient attention is implemented as an online-softmax double loop
+(lax.map over query chunks, lax.scan over KV chunks) so peak activation memory
+is O(q_chunk × kv_chunk) per head group instead of O(S²) — required for the
+32k/500k-token cells on 16 GB chips. GQA is handled by grouping query heads
+over KV heads; sliding-window and bidirectional (encoder / cross) variants are
+flags. Decode attends over a (possibly sequence-sharded) KV cache with plain
+einsums — XLA turns the softmax/contraction over the sharded axis into the
+psum-style collectives recorded in the roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(…, q, k) additive bias from position masks."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                    window: int = 0, q_offset: int = 0, q_chunk: int = 512,
+                    kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention. q (B,Sq,H,hd); k,v (B,Skv,Hkv,hd); GQA by grouping.
+
+    Returns (B, Sq, H, hd). Chunk sizes are clipped to the sequence lengths.
+    """
+    import math
+
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qc = math.gcd(Sq, min(q_chunk, Sq))      # largest chunk dividing the length
+    kc = math.gcd(Skv, min(kv_chunk, Skv))
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).reshape(B, Sq, Hkv, G, hd)
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * qc, qc, axis=1)      # (B,qc,Hkv,G,hd)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            acc, mx, den = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)   # (B,kc,Hkv,hd)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32), kb.astype(jnp.float32))
+            k_pos = ki * kc + jnp.arange(kc)
+            s = s + _mask_bias(q_pos, k_pos, causal, window)
+            new_mx = jnp.maximum(mx, jnp.max(s, axis=-1))
+            p = jnp.exp(s - new_mx[..., None])
+            corr = jnp.exp(mx - new_mx)
+            den = den * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (acc, new_mx, den), None
+
+        acc0 = jnp.zeros((B, Hkv, G, qc, hd), jnp.float32)
+        mx0 = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        den0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        (acc, _, den), _ = jax.lax.scan(kv_step, (acc0, mx0, den0), jnp.arange(nk))
+        out = acc / jnp.maximum(den[..., None], 1e-30)
+        # cast per chunk so the stacked (nq, …) buffer is input-dtype, not f32
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)      # (B,qc,Hkv,G,hd)
+
+    if nq == 1:
+        out = q_block(0)
+    else:
+        outs = jax.lax.map(q_block, jnp.arange(nq))                     # (nq,B,qc,Hkv,G,hd)
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, G, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token attention over a KV cache.
+
+    q (B,1,H,hd); caches (B,Smax,Hkv,hd); cur_len: scalar int — tokens valid in
+    the cache *including* the current one. Positions ≥ cur_len are masked; with
+    a sliding window, positions ≤ cur_len−window are too.
+    """
+    B, _, H, hd = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32))
+    pos = jnp.arange(Smax)
+    ok = pos[None, :] < cur_len
+    if window > 0:
+        ok &= pos[None, :] > (cur_len - 1 - window)
+    s = jnp.where(ok[:, None, None, :] if ok.ndim == 2 else ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write new (B,1,Hkv,hd) into cache (B,Smax,Hkv,hd) at sequence index pos."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), pos, axis=1)
+
+
+def init_attn_params(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype) -> dict:
+    from repro.models.common import truncated_normal_init
+
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": truncated_normal_init(kq, (d, n_heads * head_dim), 1.0, dtype),
+        "wk": truncated_normal_init(kk, (d, n_kv * head_dim), 1.0, dtype),
+        "wv": truncated_normal_init(kv, (d, n_kv * head_dim), 1.0, dtype),
+        "wo": truncated_normal_init(ko, (n_heads * head_dim, d), 1.0, dtype),
+    }

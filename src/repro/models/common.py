@@ -1,0 +1,127 @@
+"""Shared model building blocks: norms, MLPs, embeddings, RoPE (incl. M-RoPE).
+
+Pure-functional style: ``init_*`` builds param dicts, ``apply`` fns are stateless.
+All matmuls take ``preferred_element_type=f32`` style accumulation via the
+``compute_dtype``/``param_dtype`` policy in ModelConfig.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    """MaxText-style scaled trunc-normal (std = scale / sqrt(fan_in))."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)  # stored as offset from 1
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x·gate) ⊙ (x·up) )."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def init_swiglu(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": truncated_normal_init(k1, (d, f), 1.0, dtype),
+        "up": truncated_normal_init(k2, (d, f), 1.0, dtype),
+        "down": truncated_normal_init(k3, (f, d), 1.0, dtype),
+    }
+
+
+def apply_swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["gate"], p["up"], p["down"])
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                            # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the rotary dims are split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions_3d: (3, B, S); sections sum to hd//2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                            # (hd/2,)
+    # pick the position stream per rotary dim
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=hd // 2)
+    pos = jnp.take(positions_3d, sec_id, axis=0)             # (hd/2, B, S) — gather streams
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ----
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    # one-hot-free gather; XLA partitions this over a vocab-sharded table
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    return x @ table.T.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None,
+                       chunks: int = 8):
+    """Mean token NLL with f32 logsumexp, chunked + rematted over tokens so the
+    f32 logits copy never materializes at full (B·S, V) size (≈2.5 GB/device
+    per copy for the 151k-vocab cells)."""
+    b, s, v = logits.shape
+    # chunk along S (unsharded under SP; B is data-sharded, V vocab-sharded —
+    # flattening/splitting those would force GSPMD replication)
+    nc = chunks if s % chunks == 0 else 1
+    lg = jnp.moveaxis(logits.reshape(b, nc, s // nc, v), 1, 0)   # (nc,B,S/nc,V)
+    lb = jnp.moveaxis(labels.reshape(b, nc, s // nc), 1, 0)
+
+    @jax.checkpoint
+    def chunk_nll(lg, lb):
+        lg = lg.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    nll = jnp.moveaxis(jax.lax.map(lambda args: chunk_nll(*args), (lg, lb)), 0, 1)
+    nll = nll.reshape(b, s)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

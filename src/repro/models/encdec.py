@@ -1,0 +1,199 @@
+"""Encoder-decoder backbone (SeamlessM4T-style): audio-frame encoder + text decoder.
+
+The modality frontend is a stub — the encoder consumes precomputed frame
+embeddings (B, S_enc, d) from input_specs(). Decoder blocks: causal self-attn,
+cross-attn into the encoder output, SwiGLU FFN. Decode keeps a self-attention
+KV cache plus a one-shot cross-attention KV computed from the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    apply_rope,
+    apply_swiglu,
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_rms,
+    init_swiglu,
+    rms_norm,
+    truncated_normal_init,
+)
+from repro.models.transformer import NO_DIST, Dist
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype):
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": init_rms(cfg.d_model),
+        "ln2": init_rms(cfg.d_model),
+        "attn": attn.init_attn_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype),
+        "mlp": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype):
+    ka, kc, kf = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms(cfg.d_model),
+        "ln_x": init_rms(cfg.d_model),
+        "ln2": init_rms(cfg.d_model),
+        "attn": attn.init_attn_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype),
+        "xattn": attn.init_attn_params(kc, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype),
+        "mlp": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(jax.random.split(ke, cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(jax.random.split(kd, cfg.n_layers))
+    return {
+        "embed": init_embedding(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": init_rms(cfg.d_model),
+        "final_norm": init_rms(cfg.d_model),
+        "lm_head": truncated_normal_init(kh, (cfg.d_model, cfg.vocab_size), 1.0, dtype),
+    }
+
+
+def _mha(p, xq, xkv, cfg, positions_q, positions_kv, causal, dist: Dist,
+         q_chunk=512, kv_chunk=1024, use_rope=True):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    q = (xq @ p["wq"]).reshape(B, Sq, cfg.n_heads, cfg.hd)
+    k = (xkv @ p["wk"]).reshape(B, Skv, cfg.n_kv_heads, cfg.hd)
+    v = (xkv @ p["wv"]).reshape(B, Skv, cfg.n_kv_heads, cfg.hd)
+    q = dist.constrain(q, dist.dp_axes, None, dist.head_axis, None)
+    k = dist.constrain(k, dist.dp_axes, None, dist.kv_head_axis, None)
+    if use_rope:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    out = attn.flash_attention(q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out.reshape(B, Sq, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, dist: Dist = NO_DIST,
+           q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """frames (B, S_enc, d) → encoder states (B, S_enc, d). Bidirectional."""
+    B, S, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = frames
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        x = x + _mha(lp["attn"], h, h, cfg, pos, pos, causal=False, dist=dist,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + apply_swiglu(lp["mlp"], h)
+        x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=cfg.scan_unroll)
+    return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def forward(params, frames: jax.Array, tokens: jax.Array, cfg: ModelConfig,
+            dist: Dist = NO_DIST, q_chunk: int = 512, kv_chunk: int = 1024):
+    """(frames (B,Se,d), tokens (B,Sd)) → logits (B, Sd, V)."""
+    enc = encode(params, frames, cfg, dist, q_chunk, kv_chunk)
+    B, Sd = tokens.shape
+    Se = enc.shape[1]
+    pos_d = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+    pos_e = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    x = embed(params["embed"], tokens)
+    x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        x = x + _mha(lp["attn"], h, h, cfg, pos_d, pos_d, causal=True, dist=dist,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+        h = rms_norm(x, lp["ln_x"], cfg.rms_eps)
+        x = x + _mha(lp["xattn"], h, enc, cfg, pos_d, pos_e, causal=False, dist=dist,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk, use_rope=False)
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + apply_swiglu(lp["mlp"], h)
+        x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["lm_head"]
+    return dist.constrain(logits, dist.dp_axes, None, dist.tp_axis)
+
+
+def encdec_loss(params, batch: dict, cfg: ModelConfig, dist: Dist = NO_DIST,
+                q_chunk: int = 512, kv_chunk: int = 1024):
+    logits = forward(params, batch["frames"], batch["tokens"], cfg, dist, q_chunk, kv_chunk)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"nll": loss}
+
+
+# ------------------------------------------------------------------ decode --
+
+def init_decode_cache(params, frames: jax.Array, cfg: ModelConfig, max_len: int,
+                      dist: Dist = NO_DIST, dtype=jnp.bfloat16) -> dict:
+    """Run the encoder once; precompute cross K/V; allocate self-attn cache."""
+    enc = encode(params, frames, cfg, dist)
+    B = frames.shape[0]
+    Se = enc.shape[1]
+
+    def cross_kv(lp):
+        k = (enc @ lp["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        v = (enc @ lp["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        return k.astype(dtype), v.astype(dtype)
+
+    xk, xv = jax.vmap(cross_kv)(params["dec_layers"])
+    shape = (cfg.n_layers, B, max_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "xk": xk,
+        "xv": xv,
+    }
+
+
+def decode_step(params, token: jax.Array, cache: dict, cur_len: jax.Array,
+                cfg: ModelConfig, dist: Dist = NO_DIST):
+    B = token.shape[0]
+    x = embed(params["embed"], token)
+    pos = (cur_len - 1) * jnp.ones((B, 1), jnp.int32)
+
+    def body(x, layer):
+        lp, kc, vc, xk, xv = layer
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        q = (h @ lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        k = (h @ lp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        v = (h @ lp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        kc = attn.update_cache(kc, k, cur_len - 1)
+        vc = attn.update_cache(vc, v, cur_len - 1)
+        out = attn.decode_attention(q, kc, vc, cur_len)
+        x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        # cross attention over the full (precomputed) encoder KV
+        h = rms_norm(x, lp["ln_x"], cfg.rms_eps)
+        q = (h @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        out = attn.decode_attention(q, xk, xv, jnp.int32(xk.shape[1]))
+        x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["xattn"]["wo"]
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + apply_swiglu(lp["mlp"], h)
+        return x, (kc, vc)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=cfg.scan_unroll,
+    )
+    cache = dict(cache, k=nk, v=nv)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return (x @ params["lm_head"])[:, 0], cache

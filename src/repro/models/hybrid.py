@@ -1,0 +1,193 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a weight-tied shared attention block.
+
+38 scanned Mamba2 layers; after every ``attn_every``-th layer the SAME
+(attention + FFN) transformer block is applied (weight tying across call sites,
+per Zamba2 — we omit the per-site LoRA deltas, noted in DESIGN.md). Each call
+site has its own KV cache at decode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.common import (
+    apply_rope,
+    apply_swiglu,
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_rms,
+    init_swiglu,
+    rms_norm,
+    truncated_normal_init,
+)
+from repro.models.transformer import NO_DIST, Dist
+
+
+def n_shared_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def shared_flags(cfg: ModelConfig) -> jax.Array:
+    """(L,) 1 where the shared block runs after that mamba layer."""
+    idx = jnp.arange(1, cfg.n_layers + 1)
+    return ((idx % cfg.attn_every) == 0).astype(jnp.int32)
+
+
+def init_hybrid_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, km, ka, kf, kh = jax.random.split(key, 5)
+    layers = jax.vmap(lambda k: {
+        "ln": init_rms(cfg.d_model),
+        "mamba": ssm.init_mamba2_params(k, cfg, dtype),
+    })(jax.random.split(km, cfg.n_layers))
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "shared": {
+            "ln1": init_rms(cfg.d_model),
+            "ln2": init_rms(cfg.d_model),
+            "attn": attn.init_attn_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype),
+            "mlp": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+        },
+        "final_norm": init_rms(cfg.d_model),
+        "lm_head": truncated_normal_init(kh, (cfg.d_model, cfg.vocab_size), 1.0, dtype),
+    }
+
+
+def _shared_block(sp, x, cfg, positions, dist: Dist, q_chunk, kv_chunk):
+    B, S, _ = x.shape
+    h = rms_norm(x, sp["ln1"], cfg.rms_eps)
+    q = (h @ sp["attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (h @ sp["attn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (h @ sp["attn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attn.flash_attention(q, k, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + out.reshape(B, S, cfg.n_heads * cfg.hd) @ sp["attn"]["wo"]
+    h = rms_norm(x, sp["ln2"], cfg.rms_eps)
+    return x + apply_swiglu(sp["mlp"], h)
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, dist: Dist = NO_DIST,
+            q_chunk: int = 512, kv_chunk: int = 1024):
+    """Segmented layout: scan each run of ``attn_every`` mamba layers, then
+    apply the shared block once — no lax.cond in the hot loop (a cond puts the
+    shared block's compute/collectives into EVERY layer's static cost and can
+    degrade to select-executes-both under partitioning; §Perf zamba2 log)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    shared = params["shared"]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.rms_eps)
+        x = x + ssm.mamba2_forward(lp["mamba"], h, cfg, dist=dist)
+        x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def shared_fn(x):
+        return _shared_block(shared, x, cfg, positions, dist, q_chunk, kv_chunk)
+
+    if cfg.remat:
+        shared_fn = jax.checkpoint(shared_fn)
+
+    period = cfg.attn_every
+    n_full = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_full * period
+    # one nested scan over (groups × period) — reshaping the stacked params
+    # keeps the grad accumulation a plain scan cotangent (a python loop over
+    # slices materializes one full-size zero-padded cotangent per segment)
+    main = jax.tree.map(
+        lambda a: a[: n_full * period].reshape((n_full, period) + a.shape[1:]),
+        params["layers"])
+
+    def group(x, gp):
+        x, _ = jax.lax.scan(body, x, gp, unroll=cfg.scan_unroll)
+        return shared_fn(x), None
+
+    x, _ = jax.lax.scan(group, x, main, unroll=cfg.scan_unroll)
+    if n_tail:
+        tail = jax.tree.map(lambda a: a[n_full * period:], params["layers"])
+        x, _ = jax.lax.scan(body, x, tail, unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x @ params["lm_head"]
+
+
+def hybrid_loss(params, batch: dict, cfg: ModelConfig, dist: Dist = NO_DIST,
+                q_chunk: int = 512, kv_chunk: int = 1024):
+    logits = forward(params, batch["tokens"], cfg, dist, q_chunk, kv_chunk)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"nll": loss}
+
+
+# ------------------------------------------------------------------ decode --
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    sites = n_shared_sites(cfg)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_ch), dtype),
+        "k": jnp.zeros((sites, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((sites, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def decode_step(params, token: jax.Array, state: dict, cur_len: jax.Array,
+                cfg: ModelConfig, dist: Dist = NO_DIST):
+    B = token.shape[0]
+    x = embed(params["embed"], token)
+    pos = (cur_len - 1) * jnp.ones((B, 1), jnp.int32)
+    flags = shared_flags(cfg)
+    shared = params["shared"]
+
+    def shared_decode(x, kc, vc):
+        h = rms_norm(x, shared["ln1"], cfg.rms_eps)
+        q = (h @ shared["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        k = (h @ shared["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        v = (h @ shared["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        kc = attn.update_cache(kc, k, cur_len - 1)
+        vc = attn.update_cache(vc, v, cur_len - 1)
+        out = attn.decode_attention(q, kc, vc, cur_len)
+        x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ shared["attn"]["wo"]
+        h = rms_norm(x, shared["ln2"], cfg.rms_eps)
+        return x + apply_swiglu(shared["mlp"], h), kc, vc
+
+    def body(carry, layer):
+        x, site, kall, vall = carry
+        lp, sst, cst, flag = layer
+        h = rms_norm(x, lp["ln"], cfg.rms_eps)
+        y, new_state = ssm.mamba2_decode_step(lp["mamba"], h, {"ssm": sst, "conv": cst}, cfg)
+        x = x + y
+
+        def with_attn(op):
+            x, site, kall, vall = op
+            kc = jax.lax.dynamic_index_in_dim(kall, site, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vall, site, 0, keepdims=False)
+            x, kc, vc = shared_decode(x, kc, vc)
+            kall = jax.lax.dynamic_update_index_in_dim(kall, kc, site, 0)
+            vall = jax.lax.dynamic_update_index_in_dim(vall, vc, site, 0)
+            return x, site + 1, kall, vall
+
+        x, site, kall, vall = jax.lax.cond(flag > 0, with_attn, lambda op: op, (x, site, kall, vall))
+        return (x, site, kall, vall), (new_state["ssm"], new_state["conv"])
+
+    (x, _, nk, nv), (nssm, nconv) = jax.lax.scan(
+        body,
+        (x, jnp.int32(0), state["k"], state["v"]),
+        (params["layers"], state["ssm"], state["conv"], flags),
+        unroll=cfg.scan_unroll,
+    )
+    new_state = {"ssm": nssm, "conv": nconv, "k": nk, "v": nv}
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return (x @ params["lm_head"])[:, 0], new_state

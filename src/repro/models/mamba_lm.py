@@ -1,0 +1,84 @@
+"""Mamba2 LM (attention-free): embed → scanned Mamba2 layers → head.
+
+Constant-size recurrent state (no KV cache) — the long_500k decode cell costs
+the same per token as short contexts; this is the arch where the sub-quadratic
+requirement is structural.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.common import (
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_rms,
+    rms_norm,
+    truncated_normal_init,
+)
+from repro.models.transformer import NO_DIST, Dist
+
+
+def init_mamba_lm_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, km, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: {
+        "ln": init_rms(cfg.d_model),
+        "mamba": ssm.init_mamba2_params(k, cfg, dtype),
+    })(jax.random.split(km, cfg.n_layers))
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": init_rms(cfg.d_model),
+        "lm_head": truncated_normal_init(kh, (cfg.d_model, cfg.vocab_size), 1.0, dtype),
+    }
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, dist: Dist = NO_DIST, **_):
+    x = embed(params["embed"], tokens)
+    x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.rms_eps)
+        x = x + ssm.mamba2_forward(lp["mamba"], h, cfg, dist=dist)
+        x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x @ params["lm_head"]
+
+
+def mamba_lm_loss(params, batch: dict, cfg: ModelConfig, dist: Dist = NO_DIST, **kw):
+    logits = forward(params, batch["tokens"], cfg, dist)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"nll": loss}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def decode_step(params, token: jax.Array, state: dict, cur_len, cfg: ModelConfig,
+                dist: Dist = NO_DIST):
+    x = embed(params["embed"], token)
+
+    def body(x, layer):
+        lp, sst, cst = layer
+        h = rms_norm(x, lp["ln"], cfg.rms_eps)
+        y, ns = ssm.mamba2_decode_step(lp["mamba"], h, {"ssm": sst, "conv": cst}, cfg)
+        return x + y, (ns["ssm"], ns["conv"])
+
+    x, (nssm, nconv) = jax.lax.scan(body, x, (params["layers"], state["ssm"], state["conv"]),
+                                    unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return (x @ params["lm_head"])[:, 0], {"ssm": nssm, "conv": nconv}

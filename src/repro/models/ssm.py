@@ -1,0 +1,182 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked training scan + O(1) decode.
+
+Faithful to "Transformers are SSMs" (arXiv:2405.21060) with ngroups=1:
+  in_proj → [z | x | B | C | dt], causal depthwise conv on (x,B,C), scalar-A SSD
+  with chunked block decomposition (intra-chunk quadratic + inter-chunk state
+  recurrence), gated RMSNorm, out_proj.
+
+The chunked form is TPU-friendly: each chunk's intra term is a (Q×Q) masked
+matmul on the MXU and the inter-chunk recurrence is a length-S/Q lax.scan over
+a small (H, N, P) state — this is the sub-quadratic path that makes the
+long_500k cells runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import truncated_normal_init
+
+
+def init_mamba2_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = din + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_proj = 2 * din + 2 * n + h
+    return {
+        "in_proj": truncated_normal_init(k1, (d, d_proj), 1.0, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.full((h,), np.log(np.expm1(0.01)), jnp.float32),   # softplus⁻¹(0.01)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": truncated_normal_init(k4, (din, d), 1.0, dtype),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din : 2 * din + 2 * n]
+    dt = proj[..., 2 * din + 2 * n :]
+    return z, xbc, dt
+
+
+def causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. xbc (B, S, C); w (W, C)."""
+    wdt = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (wdt - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(wdt))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_mat: jax.Array,
+                c_mat: jax.Array, chunk: int):
+    """SSD scan. x (B,S,H,P), dt (B,S,H), a (H,)<0, b/c (B,S,N). Returns (y, final_state)."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+
+    xr = x.reshape(B, nc, Q, H, P).astype(f32)
+    dtr = dt.reshape(B, nc, Q, H).astype(f32)
+    br = b_mat.reshape(B, nc, Q, N).astype(f32)
+    cr = c_mat.reshape(B, nc, Q, N).astype(f32)
+
+    da = dtr * a[None, None, None, :]                        # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(da, axis=2)                             # inclusive
+    seg_total = cum[:, :, -1, :]                             # (B,nc,H)
+
+    # --- intra-chunk (quadratic within chunk, MXU matmuls) -------------------
+    scores = jnp.einsum("bcin,bcjn->bcij", cr, br)           # (B,nc,Q,Q)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # cum_i − cum_j (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    w_ij = scores[..., None] * decay                         # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w_ij, dtr, xr)
+
+    # --- chunk states ---------------------------------------------------------
+    dec_end = jnp.exp(seg_total[:, :, None, :] - cum)        # (B,nc,Q,H)
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", br, dtr * dec_end, xr)  # (B,nc,H,N,P)
+
+    # --- inter-chunk recurrence ----------------------------------------------
+    def step(carry, inp):
+        s_chunk, t_chunk = inp                               # (B,H,N,P), (B,H)
+        before = carry
+        new = before * jnp.exp(t_chunk)[:, :, None, None] + s_chunk
+        return new, before
+
+    init = jnp.zeros((B, H, N, P), f32)
+    final, before_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(seg_total, 1, 0))
+    )
+    before_states = jnp.moveaxis(before_states, 0, 1)        # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", cr, before_states) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def mamba2_forward(params: dict, u: jax.Array, cfg, return_state: bool = False,
+                   dist=None):
+    """Full layer: u (B, S, d_model) → (B, S, d_model) [, recurrent state].
+
+    With a Dist context, SSD heads are sharded over the TP axis (H=64 splits
+    evenly on 16-way meshes); the sequence/chunk axes stay unsharded so the
+    inter-chunk lax.scan never walks a partitioned dimension (which forces
+    involuntary replication — dry-run finding).
+    """
+    from repro.models.common import rms_norm
+
+    B, S, d = u.shape
+    din, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = u @ params["in_proj"]
+    z, xbc_raw, dt = _split_proj(proj, cfg)
+    xbc = causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :din].reshape(B, S, h, pdim)
+    b_mat = xbc[..., din : din + n]
+    c_mat = xbc[..., din + n :]
+    if dist is not None and dist.mesh is not None and dist.tp_axis and h % dist.mesh.shape[dist.tp_axis] == 0:
+        xs = dist.constrain(xs, dist.dp_axes, None, dist.tp_axis, None)
+        z = dist.constrain(z, dist.dp_axes, None, dist.tp_axis)  # din = H·P aligns
+        b_mat = dist.constrain(b_mat, dist.dp_axes, None, None)
+        c_mat = dist.constrain(c_mat, dist.dp_axes, None, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    y, final = ssd_chunked(xs, dt, a, b_mat, c_mat, cfg.ssm_chunk)
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B, S, din)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        wdt = cfg.conv_width
+        conv_state = jnp.pad(xbc_raw, ((0, 0), (max(0, wdt - 1 - S), 0), (0, 0)))[:, -(wdt - 1):, :]
+        return out, {"ssm": final, "conv": conv_state}
+    return out
+
+
+# ------------------------------------------------------------------ decode ---
+
+def init_mamba2_state(cfg, batch: int, dtype) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode_step(params: dict, u: jax.Array, state: dict, cfg):
+    """One-token recurrent step. u (B, 1, d) → (y (B,1,d), new_state)."""
+    from repro.models.common import rms_norm
+
+    B = u.shape[0]
+    din, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = u[:, 0] @ params["in_proj"]                       # (B, d_proj)
+    z, xbc, dt = _split_proj(proj, cfg)
+    # conv over the rolling window
+    win = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.sum(win * params["conv_w"][None].astype(win.dtype), axis=1) + params["conv_b"].astype(win.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:]
+    xs = conv_out[..., :din].reshape(B, h, pdim).astype(jnp.float32)
+    b_mat = conv_out[..., din : din + n].astype(jnp.float32)
+    c_mat = conv_out[..., din + n :].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dtv * a[None, :])                           # (B, H)
+    new_ssm = state["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", b_mat, dtv, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_mat, new_ssm)           # (B,H,P)
+    y = y + params["d_skip"][None, :, None] * xs
+    y = y.reshape(B, din).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"ssm": new_ssm, "conv": new_conv}

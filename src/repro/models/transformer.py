@@ -1,0 +1,360 @@
+"""Decoder-only LM covering the dense / MoE / VLM / local-global families.
+
+Pure-functional params; layers are stacked and scanned (one compiled layer body
+regardless of depth — essential for 512-device AOT lowering times), with
+per-layer static variation (gemma local/global, kimi leading-dense) expressed
+as scanned flag arrays + lax.cond. Distribution is injected via a ``Dist``
+context: activation sharding constraints at block boundaries, shard_map EP for
+MoE, and sequence-sharded KV caches for decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import (
+    apply_mrope,
+    apply_rope,
+    apply_swiglu,
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_rms,
+    init_swiglu,
+    rms_norm,
+    truncated_normal_init,
+    unembed,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Distribution context threaded through model code (None ⇒ single device)."""
+
+    mesh: Any = None
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str | None = "model"
+    head_axis: str | None = None   # q-head sharding (only when H % tp == 0)
+    kv_head_axis: str | None = None
+    use_ep: bool = True            # MoE: shard_map all-to-all EP over tp_axis
+    sp: bool = False               # sequence-parallel activations between blocks
+    seq_shard_cache: bool = False  # decode: shard KV cache sequence over tp_axis
+
+    @property
+    def seq_axis(self) -> str | None:
+        """Megatron-SP: activations between blocks are sequence-sharded over TP."""
+        return self.tp_axis if self.sp else None
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+
+NO_DIST = Dist()
+
+
+# ------------------------------------------------------------------ params --
+
+def _init_block(key, cfg: ModelConfig, moe_layer: bool) -> dict:
+    ka, kf = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "ln1": init_rms(cfg.d_model),
+        "ln2": init_rms(cfg.d_model),
+        "attn": attn.init_attn_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype),
+    }
+    if moe_layer:
+        p["moe"] = moe_mod.init_moe_params(
+            kf, cfg.d_model, cfg.moe_d_ff, cfg.n_experts, cfg.n_shared_experts, cfg.moe_d_ff, dtype
+        )
+    else:
+        p["mlp"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_lm_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kl, kp, kh = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    moe_scan = cfg.family == "moe"
+    layer_keys = jax.random.split(kl, n_scan)
+    layers = jax.vmap(lambda k: _init_block(k, cfg, moe_scan))(layer_keys)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": init_rms(cfg.d_model),
+        "lm_head": truncated_normal_init(kh, (cfg.d_model, cfg.vocab_size), 1.0, dtype),
+    }
+    if cfg.first_k_dense:
+        pre_keys = jax.random.split(kp, cfg.first_k_dense)
+        params["pre_layers"] = [
+            _init_block(pre_keys[i], cfg, moe_layer=False) for i in range(cfg.first_k_dense)
+        ]
+    return params
+
+
+def layer_flags(cfg: ModelConfig) -> jax.Array:
+    """(n_scan,) int32 — 1 where a gemma-style layer is GLOBAL attention."""
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    if cfg.local_global_ratio:
+        period = cfg.local_global_ratio + 1
+        return ((jnp.arange(n_scan) % period) == (period - 1)).astype(jnp.int32)
+    return jnp.ones((n_scan,), jnp.int32)
+
+
+# ----------------------------------------------------------------- forward --
+
+def _apply_positional(q, k, cfg: ModelConfig, positions, is_global):
+    """RoPE / M-RoPE with gemma's dual-theta handled by a traced select."""
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        return q, k
+    if cfg.rope_theta_global:
+        ql = apply_rope(q, positions, cfg.rope_theta)
+        kl = apply_rope(k, positions, cfg.rope_theta)
+        qg = apply_rope(q, positions, cfg.rope_theta_global)
+        kg = apply_rope(k, positions, cfg.rope_theta_global)
+        sel = is_global.astype(q.dtype)
+        return ql + sel * (qg - ql), kl + sel * (kg - kl)
+    return apply_rope(q, positions, cfg.rope_theta), apply_rope(k, positions, cfg.rope_theta)
+
+
+def _attention_block(p, x, cfg: ModelConfig, positions, is_global, dist: Dist,
+                     q_chunk: int, kv_chunk: int, collect_kv: bool = False):
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    h = dist.constrain(h, dist.dp_axes, dist.seq_axis, None)
+    q = (h @ p["attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = dist.constrain(q, dist.dp_axes, None, dist.head_axis, None)
+    k = dist.constrain(k, dist.dp_axes, None, dist.kv_head_axis, None)
+    q, k = _apply_positional(q, k, cfg, positions, is_global)
+    if cfg.sliding_window and cfg.local_global_ratio:
+        # both window and global branches are compiled once; flag selects
+        out = jax.lax.cond(
+            is_global > 0,
+            lambda args: attn.flash_attention(*args, causal=True, window=0,
+                                              q_chunk=q_chunk, kv_chunk=kv_chunk),
+            lambda args: attn.flash_attention(*args, causal=True, window=cfg.sliding_window,
+                                              q_chunk=q_chunk, kv_chunk=kv_chunk),
+            (q, k, v),
+        )
+    else:
+        out = attn.flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = jax.ad_checkpoint.checkpoint_name(out, "attn_out")
+    x = x + out @ p["attn"]["wo"]
+    if collect_kv:
+        return x, (k, v)
+    return x
+
+
+def _ffn_block(p, x, cfg: ModelConfig, dist: Dist):
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        n_ep = dist.mesh.shape[dist.tp_axis] if (dist.mesh is not None and dist.tp_axis) else 1
+        # all-to-all EP needs the sequence to split across the expert axis;
+        # decode (S=1) falls through to the pjit-partitioned local path.
+        if dist.mesh is not None and dist.use_ep and x.shape[1] % n_ep == 0:
+            h = dist.constrain(h, dist.dp_axes, dist.tp_axis, None)
+            y, aux = moe_mod.moe_apply_ep(
+                p["moe"], h, cfg.experts_per_token, cfg.capacity_factor,
+                dist.mesh, dist.dp_axes, dist.tp_axis,
+            )
+        else:
+            B, S, d = h.shape
+            y, aux = moe_mod.moe_apply_local(
+                p["moe"], h.reshape(B * S, d), cfg.experts_per_token, cfg.capacity_factor
+            )
+            y = y.reshape(B, S, d)
+    else:
+        y = apply_swiglu(p["mlp"], h)
+    return x + y, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, dist: Dist = NO_DIST,
+            positions: jax.Array | None = None, vision_embeds: jax.Array | None = None,
+            q_chunk: int = 512, kv_chunk: int = 1024):
+    """tokens (B, S) → (logits (B, S, V), aux_loss)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    if vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(x, vision_embeds.astype(x.dtype), (0, 1, 0))
+        del nv
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions = jnp.broadcast_to(pos[None], (3, B, S)) if cfg.mrope_sections else pos
+    x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+
+    flags = layer_flags(cfg)
+
+    def body(x, layer):
+        lp, flag = layer
+        x = _attention_block(lp, x, cfg, positions, flag, dist, q_chunk, kv_chunk)
+        x, aux = _ffn_block(lp, x, cfg, dist)
+        x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+        return x, aux
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.save_only_these_names("attn_out")
+                  if cfg.remat_policy == "save_attn" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    def pre_block(x, pre):
+        x = _attention_block(pre, x, cfg, positions, jnp.int32(1), dist, q_chunk, kv_chunk)
+        x, _ = _ffn_block(pre, x, cfg, dist)
+        return x
+
+    if cfg.remat:
+        pre_block = jax.checkpoint(pre_block)  # unscanned layers need remat too
+    for pre in params.get("pre_layers", []):
+        x = pre_block(x, pre)
+
+    x, auxs = jax.lax.scan(body, x, (params["layers"], flags), unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["lm_head"]
+    logits = dist.constrain(logits, dist.dp_axes, None, dist.tp_axis)
+    return logits, jnp.sum(auxs)
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig, dist: Dist = NO_DIST,
+            q_chunk: int = 512, kv_chunk: int = 1024):
+    logits, aux = forward(
+        params, batch["tokens"], cfg, dist,
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+        q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss + cfg.router_aux_coef * aux, {"nll": loss, "aux": aux}
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig, dist: Dist = NO_DIST,
+            positions: jax.Array | None = None, vision_embeds: jax.Array | None = None,
+            q_chunk: int = 512, kv_chunk: int = 1024, cache_dtype=jnp.bfloat16):
+    """Process a prompt, returning (last-token logits (B, V), KV cache).
+
+    The cache holds post-RoPE keys (matching decode_step's convention).
+    """
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    if vision_embeds is not None:
+        x = jax.lax.dynamic_update_slice(x, vision_embeds.astype(x.dtype), (0, 1, 0))
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions = jnp.broadcast_to(pos[None], (3, B, S)) if cfg.mrope_sections else pos
+    x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+    flags = layer_flags(cfg)
+
+    def body(x, layer):
+        lp, flag = layer
+        x, (k, v) = _attention_block(lp, x, cfg, positions, flag, dist, q_chunk, kv_chunk,
+                                     collect_kv=True)
+        x, _ = _ffn_block(lp, x, cfg, dist)
+        x = dist.constrain(x, dist.dp_axes, dist.seq_axis, None)
+        return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    cache = {}
+    if cfg.first_k_dense:
+        pk, pv = [], []
+        for pre in params["pre_layers"]:
+            x, (k, v) = _attention_block(pre, x, cfg, positions, jnp.int32(1), dist,
+                                         q_chunk, kv_chunk, collect_kv=True)
+            x, _ = _ffn_block(pre, x, cfg, dist)
+            pk.append(k.astype(cache_dtype))
+            pv.append(v.astype(cache_dtype))
+        cache["pre_k"] = jnp.stack(pk)
+        cache["pre_v"] = jnp.stack(pv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], flags), unroll=cfg.scan_unroll)
+    cache["k"] = ks
+    cache["v"] = vs
+    x = rms_norm(x[:, -1], params["final_norm"], cfg.rms_eps)
+    logits = x @ params["lm_head"]
+    return logits, cache
+
+
+# ------------------------------------------------------------------ decode --
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    shape = (n_scan, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if cfg.first_k_dense:
+        pshape = (cfg.first_k_dense, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        cache["pre_k"] = jnp.zeros(pshape, dtype)
+        cache["pre_v"] = jnp.zeros(pshape, dtype)
+    return cache
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict, cur_len: jax.Array,
+                cfg: ModelConfig, dist: Dist = NO_DIST):
+    """One incremental decode step.
+
+    token (B, 1) int32; ``cur_len`` — number of valid tokens *after* this one.
+    Returns (logits (B, V), new_cache).
+    """
+    B = token.shape[0]
+    x = embed(params["embed"], token)                        # (B, 1, d)
+    pos = (cur_len - 1) * jnp.ones((B, 1), jnp.int32)
+    positions = jnp.broadcast_to(pos[None], (3, B, 1)) if cfg.mrope_sections else pos
+    flags = layer_flags(cfg)
+
+    def one_layer(lp, x, kc, vc, flag):
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        q = (h @ lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        k = (h @ lp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        v = (h @ lp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+        q, k = _apply_positional(q, k, cfg, positions, flag)
+        kc = attn.update_cache(kc, k, cur_len - 1)
+        vc = attn.update_cache(vc, v, cur_len - 1)
+        window = 0
+        if cfg.sliding_window and not cfg.local_global_ratio:
+            window = cfg.sliding_window
+        if cfg.sliding_window and cfg.local_global_ratio:
+            out = jax.lax.cond(
+                flag > 0,
+                lambda a: attn.decode_attention(*a, window=0),
+                lambda a: attn.decode_attention(*a, window=cfg.sliding_window),
+                (q, kc, vc, cur_len),
+            )
+        else:
+            out = attn.decode_attention(q, kc, vc, cur_len, window=window)
+        x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        x, _ = _ffn_block(lp, x, cfg, dist)
+        return x, kc, vc
+
+    for i, pre in enumerate(params.get("pre_layers", [])):
+        x, nk, nv = one_layer(pre, x, cache["pre_k"][i], cache["pre_v"][i], jnp.int32(1))
+        cache = dict(cache, pre_k=cache["pre_k"].at[i].set(nk), pre_v=cache["pre_v"].at[i].set(nv))
+
+    def body(x, layer):
+        lp, kc, vc, flag = layer
+        x, nk, nv = one_layer(lp, x, kc, vc, flag)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"], flags),
+                               unroll=cfg.scan_unroll)
+    cache = dict(cache, k=nk, v=nv)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, cache

@@ -1,0 +1,161 @@
+"""Three-term roofline from AOT-compiled artifacts (no hardware required).
+
+Method (EXPERIMENTS.md §Roofline):
+1. XLA's cost analysis counts while-loop bodies ONCE, so layer-scanned models
+   undercount. We lower two *unrolled* depth probes (scan_unroll = depth ⇒
+   every layer instance visible to the static analysis) at FULL width on the
+   production mesh and extrapolate affinely in the scan trip count:
+       f(L) = intercept + slope·L,  slope = (f(d₂)−f(d₁))/(d₂−d₁).
+2. Shapes in partitioned HLO are per-device ⇒ flops/bytes/wire are per-chip.
+       compute    = flops/chip ÷ 197 TF/s
+       memory     = bytes/chip ÷ 819 GB/s
+       collective = wire bytes/chip ÷ 50 GB/s per link
+3. MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode) with
+   N_active counting routed experts at top-k/E weight; the ratio
+   MODEL_FLOPS/HLO_FLOPs exposes remat/causal/cond-branch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.api import get_api
+from repro.roofline import hw
+from repro.roofline.hlo import collective_stats
+from repro.utils.tree import tree_count_params
+
+
+def count_params(cfg: ModelConfig) -> dict:
+    """Total and activated (per-token) parameter counts from the real param tree."""
+    api = get_api(cfg)
+    specs = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_leaves_with_path(specs)
+    total = expert = embed = enc = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        ks = jax.tree_util.keystr(path)
+        if "moe" in ks and ("w_gate" in ks or "w_up" in ks or "w_down" in ks):
+            expert += n
+        if ks.endswith("embed']"):
+            embed += n          # gather: ~0 matmul flops
+        if "enc_layers" in ks:
+            enc += n
+    active = total - expert - embed
+    if cfg.n_experts:
+        active += expert * cfg.experts_per_token / cfg.n_experts
+    return {"total": total, "active": int(active), "expert": expert,
+            "embed": embed, "encoder": enc}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference fwd), D = processed tokens.
+
+    N_active excludes embedding gathers; enc-dec prefill (= encode only) uses
+    the encoder share of the parameters.
+    """
+    counts = count_params(cfg)
+    n_active = counts["active"]
+    if shape.kind == "prefill" and cfg.family == "audio":
+        n_active = counts["encoder"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # decode: one token per seq
+
+
+def probe_depths(cfg: ModelConfig) -> tuple[int, int]:
+    period = cfg.attn_every or 1
+    return period, 2 * period
+
+
+def _probe_cfg(cfg: ModelConfig, depth: int) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        n_layers=depth + cfg.first_k_dense,
+        n_enc_layers=depth if cfg.n_enc_layers else 0,
+        scan_unroll=max(depth, 1),
+    )
+
+
+def probe_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, tcfg=None) -> dict:
+    """Lower+compile the two unrolled depth probes; extrapolate to full depth."""
+    from repro.train.trainer import TrainerConfig, lower_cell
+
+    tcfg = tcfg or TrainerConfig(sp=True)
+    d1, d2 = probe_depths(cfg)
+    results = []
+    for d in (d1, d2):
+        t0 = time.time()
+        lowered, _ = lower_cell(_probe_cfg(cfg, d), shape, mesh, tcfg)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        txt = compiled.as_text()
+        coll = collective_stats(txt)
+        results.append({
+            "depth": d,
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": coll["total_wire_bytes"],
+            "by_kind": {k: v["wire_bytes"] for k, v in coll["by_kind"].items()},
+            "compile_s": time.time() - t0,
+        })
+        del lowered, compiled, txt
+
+    L_full = cfg.n_layers - cfg.first_k_dense
+    # slopes are physically ≥ 0 (adding layers can't remove work); tiny negative
+    # slopes appear on intercept-dominated cells when the two probes partition
+    # slightly differently — clamp instead of extrapolating below the probe.
+    def extrap(key):
+        f1, f2 = results[0][key], results[1][key]
+        slope = max((f2 - f1) / (d2 - d1), 0.0)
+        return max(f1 + slope * (L_full - d1), f1), slope
+
+    flops, flops_slope = extrap("flops")
+    bytes_, bytes_slope = extrap("bytes")
+    wire, wire_slope = extrap("wire")
+    kinds = sorted(set(results[0]["by_kind"]) | set(results[1]["by_kind"]))
+    by_kind = {}
+    for k in kinds:
+        f1 = results[0]["by_kind"].get(k, 0.0)
+        f2 = results[1]["by_kind"].get(k, 0.0)
+        slope_k = max((f2 - f1) / (d2 - d1), 0.0)
+        by_kind[k] = max(f1 + slope_k * (L_full - d1), f1)
+
+    return {
+        "per_device": {"flops": flops, "bytes": bytes_, "wire_bytes": wire, "wire_by_kind": by_kind},
+        "slopes": {"flops": flops_slope, "bytes": bytes_slope, "wire": wire_slope},
+        "probes": results,
+    }
+
+
+def roofline_terms(per_device: dict, n_chips: int, cfg, shape) -> dict:
+    t_comp = per_device["flops"] / hw.PEAK_FLOPS_BF16
+    t_mem = per_device["bytes"] / hw.HBM_BW
+    t_coll = per_device["wire_bytes"] / hw.ICI_BW
+    dominant = max(
+        [("compute", t_comp), ("memory", t_mem), ("collective", t_coll)], key=lambda kv: kv[1]
+    )[0]
+    mf = model_flops(cfg, shape)
+    hlo_global = per_device["flops"] * n_chips
+    step_time = max(t_comp, t_mem, t_coll)    # perfect-overlap lower bound
+    mfu = mf / (n_chips * hw.PEAK_FLOPS_BF16 * step_time) if step_time > 0 else 0.0
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": mfu,             # MODEL_FLOPS-based MFU at the bound
+    }

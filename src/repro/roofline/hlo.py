@@ -1,0 +1,89 @@
+"""Collective accounting from partitioned HLO text.
+
+After SPMD partitioning, shapes in ``compiled.as_text()`` are PER-DEVICE, so
+summed bytes here are per-chip; the roofline's ``/(chips × link_bw)`` over
+global bytes is equivalent to ``/link_bw`` over these.
+
+Wire-byte model per op (ring algorithms, group size g):
+    all-reduce:          2·B·(g−1)/g      (reduce-scatter + all-gather phases)
+    all-gather:          B_result·(g−1)/g
+    reduce-scatter:      B_operand·(g−1)/g
+    all-to-all:          B·(g−1)/g
+    collective-permute:  B                 (point-to-point)
+
+Ops inside while loops appear once in the text — callers use the unrolled depth
+probes (roofline.analysis) so every instance is visible.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+    r"([^)]*)\)"
+)
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m and m.group(1):
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 2) -> dict:
+    """Per-kind (wire_bytes, count) + total, from one HLO module text."""
+    out: dict = defaultdict(lambda: {"wire_bytes": 0.0, "count": 0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_s, kind, operands_s = m.groups()
+        if "-done(" in line:
+            continue  # the -start op carries the shape; -done would double count
+        g = _group_size(line, default_group)
+        rb = _shape_bytes(result_s)
+        ob = _shape_bytes(operands_s)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * rb * frac
+        elif kind == "all-gather":
+            wire = rb * frac
+        elif kind == "reduce-scatter":
+            wire = max(ob, rb) * frac
+        elif kind == "all-to-all":
+            wire = rb * frac
+        else:  # collective-permute
+            wire = float(rb)
+        out[kind]["wire_bytes"] += wire
+        out[kind]["count"] += 1
+    total = sum(v["wire_bytes"] for v in out.values())
+    return {"by_kind": dict(out), "total_wire_bytes": total}

@@ -1,0 +1,6 @@
+"""Target hardware constants (TPU v5e, per assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16 << 30         # 16 GB per chip

@@ -1,0 +1,97 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(dir_: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_table(recs):
+    lines = ["| arch | shape | mesh | kind | status | peak GB/chip | fits 16GB | compile s |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | skip: sub-quadratic rule | — | — | — |")
+            continue
+        if r["status"] == "fail":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | FAIL: {r['error'][:60]} | — | — | — |")
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | ok "
+            f"| {fmt_bytes(m['peak_bytes'])} | {'✓' if m['fits_16GB'] else '✗'} "
+            f"| {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = ["| arch | shape | t_comp | t_mem | t_coll | dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "single" or "roofline" not in r:
+            continue
+        t = r["roofline"]["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} | {fmt_s(t['t_memory_s'])} "
+            f"| {fmt_s(t['t_collective_s'])} | **{t['dominant']}** | {t['model_flops']:.3g} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def collective_mix(recs):
+    lines = ["| arch | shape | all-gather GB | all-reduce GB | reduce-scatter GB | all-to-all GB | permute GB |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "single" or "roofline" not in r:
+            continue
+        bk = r["roofline"]["per_device"]["wire_by_kind"]
+        g = lambda k: f"{bk.get(k, 0)/2**30:.2f}"  # noqa: E731
+        lines.append(f"| {r['arch']} | {r['shape']} | {g('all-gather')} | {g('all-reduce')} "
+                     f"| {g('reduce-scatter')} | {g('all-to-all')} | {g('collective-permute')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_fail = sum(r["status"] == "fail" for r in recs)
+    n_skip = sum(r["status"] == "skip" for r in recs)
+    print(f"### Dry-run status: {n_ok} ok / {n_skip} skip / {n_fail} fail\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single-pod, per chip)\n")
+    print(roofline_table(recs))
+    print("\n### Collective mix (per chip per step)\n")
+    print(collective_mix(recs))
+
+
+if __name__ == "__main__":
+    main()

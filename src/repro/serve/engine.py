@@ -1,0 +1,83 @@
+"""Batched serving engine: request queue → batched prefill → lockstep decode.
+
+Static batching with early-retire masking: a wave of up to ``n_slots``
+requests is admitted together (prompts right-aligned by padding to the wave's
+max prompt length), decoded in lockstep with ONE jitted step per token, and
+retired per-request when its budget is exhausted — finished slots continue to
+decode but their outputs are masked (the standard static-batch serving
+pattern; per-slot cache offsets for true continuous batching would need a
+vectorized cur_len in the decode path, noted as future work in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Wave-batched greedy decoding over a fixed KV budget."""
+
+    def __init__(self, api: ModelAPI, params, n_slots: int = 4, max_len: int = 128):
+        if api.cfg.family == "audio":
+            raise NotImplementedError("enc-dec serving uses launch/serve.py directly")
+        self.api, self.params = api, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.queue: deque[Request] = deque()
+        self._decode = jax.jit(lambda p, t, c, l: api.decode_fn(p, t, c, l))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        b = self.n_slots
+        plen = max(len(r.prompt) for r in wave)
+        prompts = np.zeros((b, plen), np.int32)
+        for s, r in enumerate(wave):
+            prompts[s, plen - len(r.prompt):] = r.prompt      # right-aligned
+        cache = self.api.init_decode_state(b, self.max_len)
+        tok = None
+        for t in range(plen):
+            tok, cache = self._decode(self.params, jnp.asarray(prompts[:, t:t + 1]),
+                                      cache, jnp.int32(t + 1))
+        cur = jnp.argmax(tok, -1).astype(jnp.int32)[:, None]
+        budgets = np.array([r.max_new for r in wave] + [0] * (b - len(wave)))
+        for s, r in enumerate(wave):
+            r.out.append(int(cur[s, 0]))
+            budgets[s] -= 1
+        steps = 0
+        while (budgets > 0).any() and plen + steps < self.max_len - 1:
+            tok, cache = self._decode(self.params, cur, cache,
+                                      jnp.int32(plen + steps + 2))
+            cur = jnp.argmax(tok, -1).astype(jnp.int32)[:, None]
+            for s, r in enumerate(wave):
+                if budgets[s] > 0:
+                    r.out.append(int(cur[s, 0]))
+                    budgets[s] -= 1
+                    if budgets[s] == 0:
+                        r.done = True
+            steps += 1
+        for r in wave:
+            r.done = True
+
+    def run(self) -> list[Request]:
+        finished: list[Request] = []
+        while self.queue:
+            wave = [self.queue.popleft() for _ in range(min(self.n_slots, len(self.queue)))]
+            self._run_wave(wave)
+            finished.extend(wave)
+        return finished

@@ -1,0 +1,1 @@
+from repro.train import checkpoint, optimizer, sharding, trainer  # noqa: F401

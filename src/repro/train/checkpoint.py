@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: async save, manifest-driven restore, elastic re-mesh.
+
+Layout (one directory per step):
+    ckpt_dir/step_000123/
+        manifest.json      — tree structure, shapes/dtypes, mesh, pipeline state
+        arrays.npz         — flattened leaves keyed by tree path
+
+Restore is *elastic*: arrays are loaded host-side and re-placed under any target
+mesh/sharding (device counts may differ between save and restore — the ZeRO/TP
+layout is recomputed from the sharding rules, not read from the snapshot).
+A ``latest`` pointer file enables crash-restart without coordination; writes go
+through a temp dir + atomic rename so a mid-write failure never corrupts the
+latest checkpoint (the standard single-writer protocol; on a real cluster, each
+host writes its addressable shards — the code path is the same modulo the
+gather).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+_SAVE_LOCK = threading.Lock()
+_PENDING: list[threading.Thread] = []
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    return {jax.tree_util.keystr(k): np.asarray(v) for k, v in flat}
+
+
+def save(ckpt_dir: str, step: int, state: Any, extra: dict | None = None,
+         async_: bool = True, keep_last: int = 3):
+    """Snapshot ``state`` (+ JSON-serializable ``extra`` e.g. pipeline cursors)."""
+
+    # materialize on host BEFORE returning (state may be donated by the next step)
+    arrays = _flatten(state)
+    treedef = jax.tree_util.tree_structure(state)
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": list(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "extra": extra or {},
+        "time": time.time(),
+    }
+
+    def _write():
+        with _SAVE_LOCK:
+            final = os.path.join(ckpt_dir, f"step_{step:09d}")
+            tmp = final + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+                f.write(os.path.basename(final))
+            os.replace(os.path.join(ckpt_dir, "latest.tmp"), os.path.join(ckpt_dir, "latest"))
+            _gc(ckpt_dir, keep_last)
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        _PENDING.append(t)
+    else:
+        _write()
+
+
+def wait_for_pending():
+    for t in list(_PENDING):
+        t.join()
+        _PENDING.remove(t)
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step_dir(ckpt_dir: str) -> str | None:
+    ptr = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return os.path.join(ckpt_dir, f.read().strip())
+
+
+def restore(ckpt_dir: str, like: Any, shardings: Any | None = None) -> tuple[Any, dict]:
+    """Load the latest checkpoint into the structure of ``like`` and (optionally)
+    re-place under new ``shardings`` — this is the elastic-restart path.
+
+    Returns (state, extra). Raises FileNotFoundError if no checkpoint exists.
+    """
+    d = latest_step_dir(ckpt_dir)
+    if d is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_like = jax.tree_util.tree_leaves_with_path(like)
+    leaves = []
+    for k, spec in flat_like:
+        ks = jax.tree_util.keystr(k)
+        if ks not in data:
+            raise KeyError(f"checkpoint missing leaf {ks}")
+        arr = data[ks]
+        want_dt = np.dtype(jax.numpy.dtype(spec.dtype)) if hasattr(spec, "dtype") else arr.dtype
+        leaves.append(arr.astype(want_dt, copy=False))
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, meta.get("extra", {})

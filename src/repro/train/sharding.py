@@ -1,0 +1,137 @@
+"""Name-based sharding rules: param path regex → PartitionSpec.
+
+TP+FSDP by default: the ``model`` axis carries tensor/expert/vocab parallelism,
+the data axes carry FSDP (ZeRO-3-style parameter sharding). SSM params are
+FSDP-only (1–2 B-param models don't need TP; avoids unaligned splits of the
+fused in_proj). A dim is only sharded when divisible by the axis size —
+otherwise the rule falls back to replication on that dim (logged by the
+dry-run as a "sharding fallback").
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.tree import tree_map_with_path_names
+
+# (regex over 'path/to/leaf', spec builder) — first match wins.
+# fsdp = data axes tuple, tp = 'model'.
+RULES: list[tuple[str, Any]] = [
+    (r"embed$", lambda fsdp, tp: P(tp, fsdp)),
+    (r"lm_head$", lambda fsdp, tp: P(fsdp, tp)),
+    (r"attn/wq$|attn/wk$|attn/wv$|xattn/wq$|xattn/wk$|xattn/wv$", lambda fsdp, tp: P(fsdp, tp)),
+    (r"attn/wo$|xattn/wo$", lambda fsdp, tp: P(tp, fsdp)),
+    (r"mlp/gate$|mlp/up$|shared/gate$|shared/up$", lambda fsdp, tp: P(fsdp, tp)),
+    (r"mlp/down$|shared/down$", lambda fsdp, tp: P(tp, fsdp)),
+    (r"moe/router$", lambda fsdp, tp: P(fsdp, None)),
+    (r"moe/w_gate$|moe/w_up$", lambda fsdp, tp: P(tp, fsdp, None)),
+    (r"moe/w_down$", lambda fsdp, tp: P(tp, None, fsdp)),
+    (r"mamba/in_proj$", lambda fsdp, tp: P(fsdp, None)),
+    (r"mamba/out_proj$", lambda fsdp, tp: P(tp, fsdp)),
+    (r"mamba/conv_w$|mamba/conv_b$", lambda fsdp, tp: P()),
+    (r".*", lambda fsdp, tp: P()),          # norms, scalars, biases → replicated
+]
+
+
+def _fits(dim: int | None, axes, mesh: Mesh) -> bool:
+    if dim is None or axes is None:
+        return True
+    size = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple) else (axes,))]))
+    return dim % size == 0
+
+
+def spec_for(name: str, shape: tuple[int, ...], mesh: Mesh, scanned: bool,
+             dp_only: bool = False) -> P:
+    """Resolve the sharding spec for one param; scanned params get a leading
+    (replicated) layer dim prepended. ``dp_only`` folds the model axis into
+    FSDP (no tensor parallelism) — the right strategy for small-dense cells
+    where TP collectives dominate (§Perf)."""
+    if dp_only:
+        fsdp = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        tp = None
+    else:
+        fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        tp = "model" if "model" in mesh.axis_names else None
+    body_shape = shape[1:] if scanned else shape
+    for pat, builder in RULES:
+        if re.search(pat, name):
+            spec = builder(fsdp, tp)
+            parts = list(spec)
+            # pad/trim to rank, drop axes that don't divide the dim
+            parts = (parts + [None] * len(body_shape))[: len(body_shape)]
+            parts = [p if _fits(body_shape[i], p, mesh) else None for i, p in enumerate(parts)]
+            if scanned:
+                parts = [None] + parts
+            return P(*parts)
+    raise AssertionError("unreachable — catch-all rule")
+
+
+def param_shardings(param_specs: Any, mesh: Mesh, dp_only: bool = False) -> Any:
+    """NamedShardings for a param pytree (from jax.eval_shape or real arrays).
+
+    Params under 'layers/' are stacked (scanned) — detected by name prefix.
+    """
+
+    def f(name, leaf):
+        scanned = name.startswith(("layers/", "enc_layers/", "dec_layers/"))
+        spec = spec_for(name, tuple(leaf.shape), mesh, scanned, dp_only)
+        return NamedSharding(mesh, spec)
+
+    return tree_map_with_path_names(f, param_specs)
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh, dp_only: bool = False) -> Any:
+    """Batch dims sharded over the data axes; everything else replicated.
+
+    positions (3, B, S) put B on axis 1; scalars replicated.
+    """
+    axes = ("pod", "data", "model") if dp_only else ("pod", "data")
+    fsdp = tuple(a for a in axes if a in mesh.axis_names)
+
+    def f(name, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        if name.endswith("positions"):
+            return NamedSharding(mesh, P(None, fsdp, *([None] * (len(leaf.shape) - 2))))
+        if leaf.shape[0] % int(np.prod([mesh.shape[a] for a in fsdp])) == 0:
+            return NamedSharding(mesh, P(fsdp, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return tree_map_with_path_names(f, batch_specs)
+
+
+def cache_shardings(cache_specs: Any, mesh: Mesh, seq_axis_to_model: bool = True) -> Any:
+    """Decode caches: (L, B, S, kv, hd) → batch over data axes; sequence over
+    ``model`` (SP decode — lets 500k caches fit; attention reduces over shards).
+    SSM states (L, B, H, N, P): heads over model when divisible."""
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([mesh.shape[a] for a in fsdp]))
+    n_tp = mesh.shape.get("model", 1)
+
+    def f(name, leaf):
+        sh = leaf.shape
+        if len(sh) == 5 and name.split("/")[-1] in ("k", "v", "xk", "xv", "pre_k", "pre_v"):
+            b_ok = sh[1] % n_dp == 0
+            s_ok = seq_axis_to_model and sh[2] % n_tp == 0
+            return NamedSharding(mesh, P(None, fsdp if b_ok else None,
+                                         "model" if s_ok else None, None, None))
+        if len(sh) == 5 and name.endswith("ssm"):
+            b_ok = sh[1] % n_dp == 0
+            h_ok = sh[2] % n_tp == 0
+            return NamedSharding(mesh, P(None, fsdp if b_ok else None,
+                                         "model" if h_ok else None, None, None))
+        if len(sh) == 4 and name.endswith("conv"):
+            b_ok = sh[1] % n_dp == 0
+            c_ok = sh[3] % n_tp == 0
+            return NamedSharding(mesh, P(None, fsdp if b_ok else None, None,
+                                         "model" if c_ok else None))
+        if len(sh) >= 1 and sh[0] % n_dp == 0:
+            return NamedSharding(mesh, P(fsdp, *([None] * (len(sh) - 1))))
+        return NamedSharding(mesh, P())
+
+    return tree_map_with_path_names(f, cache_specs)

@@ -1,0 +1,273 @@
+"""Distributed trainer: pjit train/serve steps, sharded state, AOT lowering.
+
+Everything the launcher and the dry-run share lives here:
+  - make_dist(mesh, cfg):       distribution context (TP/FSDP/EP/SP knobs)
+  - build_state_specs(...):     abstract state pytree + NamedShardings
+  - make_train_step(...):       jitted (state, batch) → (state, metrics)
+  - lower_cell(...):            AOT .lower() for any (arch × shape × mesh) cell
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.grad_compress import CompressConfig, compress_grads
+from repro.launch.mesh import dp_axes_of, tp_axis_of
+from repro.models.api import ModelAPI, get_api, input_specs
+from repro.models.transformer import NO_DIST, Dist
+from repro.train import optimizer as opt_mod
+from repro.train import sharding as shard_mod
+from repro.utils.prng import fold_in_str
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    opt: opt_mod.OptConfig = opt_mod.OptConfig()
+    accum_steps: int = 1
+    compress: CompressConfig | None = None
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    sp: bool = False
+    use_ep: bool = True
+    donate: bool = True
+    dp_only: bool = False        # fold the model axis into FSDP/batch (no TP)
+
+
+def make_dist(mesh, cfg: ModelConfig, sp: bool = False, use_ep: bool = True,
+              dp_only: bool = False) -> Dist:
+    if mesh is None:
+        return NO_DIST
+    if dp_only:
+        return Dist(mesh=mesh, dp_axes=tuple(mesh.axis_names), tp_axis=None,
+                    head_axis=None, kv_head_axis=None, use_ep=False, sp=False)
+    dp = dp_axes_of(mesh)
+    tp = tp_axis_of(mesh)
+    n_tp = mesh.shape.get("model", 1)
+    # uneven head sharding (GSPMD pads, e.g. 56 heads → 4/4/…/3) beats
+    # replicating attention across the model axis (dry-run: 114 GB → fits)
+    head_ok = bool(cfg.n_heads) and cfg.n_heads >= n_tp
+    kv_ok = bool(cfg.n_kv_heads) and cfg.n_kv_heads >= n_tp
+    return Dist(
+        mesh=mesh, dp_axes=dp, tp_axis=tp,
+        head_axis=tp if head_ok else None,
+        kv_head_axis=tp if kv_ok else None,
+        use_ep=use_ep, sp=sp,
+    )
+
+
+# ------------------------------------------------------------ state specs ---
+
+def abstract_params(api: ModelAPI):
+    return jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+
+
+def abstract_state(api: ModelAPI, tcfg: TrainerConfig):
+    params = abstract_params(api)
+    opt = jax.eval_shape(lambda: opt_mod.init_opt_state(params, tcfg.opt))
+    state = {"params": params, "opt": opt}
+    if tcfg.compress is not None and tcfg.compress.error_feedback:
+        state["residual"] = jax.eval_shape(
+            lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+    return state
+
+
+def state_shardings(state_specs: Any, mesh, dp_only: bool = False) -> Any:
+    """Param shardings extend leaf-wise to optimizer moments & residuals."""
+    p_shard = shard_mod.param_shardings(state_specs["params"], mesh, dp_only)
+
+    def like_params(tree):
+        flat_p = jax.tree_util.tree_leaves_with_path(state_specs["params"])
+        shapes = {jax.tree_util.keystr(k): tuple(v.shape) for k, v in flat_p}
+        shard_by_key = {
+            jax.tree_util.keystr(k): s
+            for (k, _), s in zip(flat_p, jax.tree_util.tree_leaves(p_shard))
+        }
+
+        def f(path, leaf):
+            ks = jax.tree_util.keystr(path)
+            if ks in shapes and shapes[ks] == tuple(leaf.shape):
+                return shard_by_key[ks]
+            return NamedSharding(mesh, P())
+
+        return jax.tree_util.tree_map_with_path(f, tree)
+
+    def greedy(leaf):
+        """Factored-moment leaves: shard the first model-divisible dim over TP
+        and the next fsdp-divisible dim over the data axes."""
+        fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        n_tp = mesh.shape.get("model", 1)
+        n_dp = int(np.prod([mesh.shape[a] for a in fsdp]))
+        parts = [None] * len(leaf.shape)
+        for i, d in enumerate(leaf.shape):
+            if d % n_tp == 0 and d > 1:
+                parts[i] = "model"
+                break
+        for i, d in enumerate(leaf.shape):
+            if parts[i] is None and d % n_dp == 0 and d > 1:
+                parts[i] = fsdp
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    opt_sh = {
+        "v": jax.tree_util.tree_map(greedy, state_specs["opt"]["v"])
+        if _has_factored(state_specs["opt"]["v"]) else like_params(state_specs["opt"]["v"]),
+        "step": NamedSharding(mesh, P()),
+    }
+    if "m" in state_specs["opt"]:
+        opt_sh["m"] = like_params(state_specs["opt"]["m"])
+    out = {"params": p_shard, "opt": opt_sh}
+    if "residual" in state_specs:
+        out["residual"] = like_params(state_specs["residual"])
+    return out
+
+
+def _has_factored(v_tree) -> bool:
+    return any(isinstance(x, dict) and "row" in x
+               for x in jax.tree_util.tree_leaves(v_tree, is_leaf=lambda y: isinstance(y, dict)))
+
+
+def init_state(api: ModelAPI, tcfg: TrainerConfig, key) -> dict:
+    params = api.init_params(key)
+    state = {"params": params, "opt": opt_mod.init_opt_state(params, tcfg.opt)}
+    if tcfg.compress is not None and tcfg.compress.error_feedback:
+        state["residual"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+# -------------------------------------------------------------- train step --
+
+def make_train_fn(api: ModelAPI, tcfg: TrainerConfig, dist: Dist, key):
+    """The pure (state, batch) → (state, metrics) function (before jit)."""
+    gc_key = fold_in_str(key, "grad-compress")
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss_fn(params, batch, dist, q_chunk=tcfg.q_chunk,
+                                    kv_chunk=tcfg.kv_chunk)
+        return loss, metrics
+
+    def train_step(state, batch):
+        if tcfg.accum_steps > 1:
+            def micro(carry, mb):
+                acc_g, acc_l = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(state["params"], mb)
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((tcfg.accum_steps, x.shape[0] // tcfg.accum_steps) + x.shape[1:])
+                if hasattr(x, "shape") and x.ndim >= 1 else x,
+                batch,
+            )
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, loss), _ = jax.lax.scan(micro, (zero_g, 0.0), mb_batch)
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, grads)
+            loss = loss / tcfg.accum_steps
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch)
+
+        new_state = dict(state)
+        stats = {}
+        if tcfg.compress is not None:
+            grads, new_res, wire = compress_grads(
+                grads, gc_key, state["opt"]["step"], tcfg.compress,
+                residual=state.get("residual"),
+            )
+            if new_res is not None:
+                new_state["residual"] = new_res
+            stats["wire_floats"] = jnp.float32(wire)
+        new_params, new_opt, opt_stats = opt_mod.adamw_update(
+            grads, state["params"], state["opt"], tcfg.opt)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, {"loss": loss, **stats, **opt_stats, **{k: v for k, v in metrics.items()}}
+
+    return train_step
+
+
+# ----------------------------------------------------------- AOT lowering ---
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, tcfg: TrainerConfig | None = None,
+               key=None):
+    """AOT-lower the right step for one (arch × shape × mesh) cell.
+
+    train  → train_step(state, batch)
+    prefill→ prefill_fn(params, batch)
+    decode → decode_fn(params, token, cache, cur_len)
+    Returns (lowered, meta dict).
+    """
+    tcfg = tcfg or TrainerConfig()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    api = get_api(cfg)
+    dist = make_dist(mesh, cfg, sp=tcfg.sp, use_ep=tcfg.use_ep, dp_only=tcfg.dp_only)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state_specs = abstract_state(api, tcfg)
+        st_sh = state_shardings(state_specs, mesh, tcfg.dp_only)
+        b_sh = shard_mod.batch_shardings(specs["batch"], mesh, tcfg.dp_only)
+        fn = make_train_fn(api, tcfg, dist, key)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, NamedSharding(mesh, P())),
+            donate_argnums=(0,) if tcfg.donate else (),
+        )
+        lowered = jfn.lower(state_specs, specs["batch"])
+        return lowered, {"kind": "train"}
+
+    params_specs = abstract_params(api)
+    p_sh = shard_mod.param_shardings(params_specs, mesh, tcfg.dp_only)
+
+    if shape.kind == "prefill":
+        b_sh = shard_mod.batch_shardings(specs["batch"], mesh, tcfg.dp_only)
+
+        def prefill_step(params, batch):
+            return api.prefill_fn(params, batch, dist, q_chunk=tcfg.q_chunk,
+                                  kv_chunk=tcfg.kv_chunk)
+
+        # caches/states must come out sharded (batch→data, seq→model), else the
+        # stacked (L,B,S,kv,hd) output replicates across the model axis
+        out_spec = jax.eval_shape(prefill_step, params_specs, specs["batch"])
+        fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+        def out_sharding_for(leaf):
+            if leaf is None:
+                return None
+            sh = tuple(leaf.shape)
+            if len(sh) == 2:   # last-token logits (B, V)
+                ok_b = sh[0] % int(np.prod([mesh.shape[a] for a in fsdp])) == 0
+                return NamedSharding(mesh, P(fsdp if ok_b else None, None))
+            return None        # placeholder; 5D/4D handled below by cache rules
+
+        logits_sh = jax.tree.map(out_sharding_for, out_spec[0]) if out_spec[0] is not None else None
+        cache_sh = shard_mod.cache_shardings(out_spec[1], mesh) if out_spec[1] is not None else None
+        jfn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                      out_shardings=(logits_sh, cache_sh))
+        lowered = jfn.lower(params_specs, specs["batch"])
+        return lowered, {"kind": "prefill"}
+
+    # decode: one token against a seq_len cache
+    cache_specs = specs["cache"]
+    c_sh = shard_mod.cache_shardings(cache_specs, mesh)
+    tok_sh = shard_mod.batch_shardings(specs["token"], mesh)
+
+    def serve_step(params, token, cache, cur_len):
+        return api.decode_fn(params, token, cache, cur_len, dist)
+
+    jfn = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, tok_sh, c_sh, NamedSharding(mesh, P())),
+        donate_argnums=(2,) if tcfg.donate else (),
+    )
+    lowered = jfn.lower(params_specs, specs["token"], cache_specs, specs["cur_len"])
+    return lowered, {"kind": "decode"}

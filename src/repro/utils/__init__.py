@@ -1,0 +1,1 @@
+from repro.utils import prng, tree  # noqa: F401

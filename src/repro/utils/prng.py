@@ -1,0 +1,28 @@
+"""PRNG helpers: named key folding so every subsystem derives independent streams.
+
+All randomness in the framework flows from a single root key per run; subsystems
+fold in stable string tags so that adding a new consumer never perturbs existing
+streams (important for checkpoint/restart determinism).
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+
+
+def fold_in_str(key: jax.Array, tag: str) -> jax.Array:
+    """Derive a subkey from ``key`` using a stable hash of ``tag``."""
+    h = int.from_bytes(hashlib.sha256(tag.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def rademacher(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """±1 entries with equal probability (the diagonal of D in the ROS)."""
+    return jax.random.rademacher(key, shape, dtype=dtype)
+
+
+def key_for_step(key: jax.Array, step: jax.Array | int) -> jax.Array:
+    """Per-step key (used by e.g. the gradient sketch so every step resamples R_i)."""
+    return jax.random.fold_in(key, step)

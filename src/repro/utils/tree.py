@@ -1,0 +1,87 @@
+"""Pytree utilities shared by the optimizer / checkpointing / compression layers."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes across all array leaves."""
+    return sum(
+        np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "shape")
+    )
+
+
+def tree_count_params(tree: Any) -> int:
+    return sum(
+        int(np.prod(l.shape))
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "shape")
+    )
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, dtype or l.dtype), tree)
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(name, leaf)`` where name is a '/'-joined key path (for sharding rules)."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda path, l: fn(_name(path), l), tree)
+
+
+def tree_global_norm(tree: Any) -> jax.Array:
+    """Global ℓ2 norm with f32 ACCUMULATION but no f32 materialization — a
+    self-dot per leaf keeps bf16 gradients in their own dtype (a whole-tree
+    astype(f32) costs 2× the gradient memory in temporaries)."""
+
+    def leaf_sq(l):
+        # contract ALL dims in place — a reshape(-1) of a sharded tensor would
+        # force GSPMD to replicate it (dry-run: TBs of temp); full contraction
+        # partitions cleanly into local dots + psum
+        dims = tuple(range(l.ndim))
+        return jax.lax.dot_general(l, l, ((dims, dims), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    leaves = [leaf_sq(l) for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_flatten_to_vector(tree: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
+    """Flatten all leaves into one fp32 vector; returns (vector, unflatten_fn).
+
+    Used by the gradient sketch: the paper's estimator acts on vectors in R^p,
+    so we view the whole gradient pytree as one long vector.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,))
+
+    def unflatten(v: jax.Array) -> Any:
+        out, off = [], 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            out.append(v[off : off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return vec, unflatten

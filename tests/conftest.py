@@ -1,0 +1,21 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512 host devices."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clusters(key, n, p, k, sep=3.0, noise=0.5):
+    """Well-separated Gaussian blobs (paper Fig. 6 style). Returns (X, labels, centers)."""
+    import jax.numpy as jnp
+
+    ck, lk, nk = jax.random.split(key, 3)
+    centers = jax.random.normal(ck, (k, p)) * sep
+    labels = jax.random.randint(lk, (n,), 0, k)
+    x = centers[labels] + noise * jax.random.normal(nk, (n, p))
+    return x, labels, centers

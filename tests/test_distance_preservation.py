@@ -1,0 +1,41 @@
+"""Thm D6: the precondition+sample map preserves pairwise distances within
+[0.40, 1.48] when m exceeds the theorem's budget."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds, ros, sampling
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_pairwise_distance_preservation():
+    p, n_pairs = 4096, 200
+    beta = 5.0  # D6's constants are loose; need p ≫ m_min(β)
+    m_min = bounds.distance_preservation_min_m(beta, p)
+    m = int(np.ceil(m_min))
+    assert m < p
+
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x1 = jax.random.normal(k1, (n_pairs, p))
+    x2 = jax.random.normal(k2, (n_pairs, p))
+    diff = x1 - x2
+    y = ros.precondition(diff, k3, "hadamard")
+    s = sampling.subsample(y, jax.random.fold_in(k3, 1), m)
+    scaled = jnp.sqrt(p / m) * jnp.linalg.norm(s.values, axis=1)
+    ratio = scaled / jnp.linalg.norm(diff, axis=1)
+    frac_ok = float(jnp.mean((ratio >= 0.40) & (ratio <= 1.48)))
+    # theorem: each pair ok w.p. ≥ 1 − 3/β = 0.4 at β=5; empirically should be ≫
+    assert frac_ok >= 1.0 - 3.0 / beta, f"only {frac_ok:.2f} of pairs within D6 band"
+
+
+def test_distance_preservation_tighter_than_bound():
+    """Empirical concentration is much tighter than the worst-case constants."""
+    p, m = 512, 128
+    k1, k2 = jax.random.split(KEY)
+    diff = jax.random.normal(k1, (500, p))
+    y = ros.precondition(diff, k2, "hadamard")
+    s = sampling.subsample(y, jax.random.fold_in(k2, 1), m)
+    ratio = jnp.sqrt(p / m) * jnp.linalg.norm(s.values, axis=1) / jnp.linalg.norm(diff, axis=1)
+    assert 0.8 < float(jnp.mean(ratio)) < 1.2
+    assert float(jnp.std(ratio)) < 0.15

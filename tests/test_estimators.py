@@ -1,0 +1,108 @@
+"""Unbiasedness + concentration of the mean/covariance estimators (Thms 4 & 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bounds, estimators, sampling, sketch
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_mean_estimator_unbiased_mc():
+    """E[x̄̂] = x̄ — Monte-Carlo over independent sampling draws."""
+    n, p, m, reps = 64, 32, 8, 400
+    x = jax.random.normal(KEY, (n, p)) + jnp.arange(p) / p
+    mu = estimators.empirical_mean(x)
+
+    def one(k):
+        return estimators.mean_estimator(sampling.subsample(x, k, m))
+
+    est = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(1), reps))
+    bias = jnp.mean(est, axis=0) - mu
+    # MC std of the mean-of-estimates: generous 6σ-ish threshold
+    assert float(jnp.max(jnp.abs(bias))) < 6.0 * float(jnp.std(est) / np.sqrt(reps))
+
+
+def test_mean_error_within_thm4_bound():
+    n, p, m = 4096, 128, 38
+    x = jax.random.normal(KEY, (n, p)) * 0.3 + 1.0
+    s = sampling.subsample(x, jax.random.PRNGKey(3), m)
+    err = float(jnp.max(jnp.abs(estimators.mean_estimator(s) - estimators.empirical_mean(x))))
+    t = bounds.mean_error_bound(
+        0.01, n, m, p, float(bounds.max_abs(x)), float(bounds.max_coord_norm(x))
+    )
+    assert err <= t, f"ℓ∞ err {err} exceeded Thm 4 bound {t}"
+
+
+def test_cov_estimator_unbiased_mc():
+    n, p, m, reps = 32, 16, 6, 600
+    x = jax.random.normal(KEY, (n, p))
+    c = estimators.empirical_cov(x)
+
+    def one(k):
+        return estimators.cov_estimator(sampling.subsample(x, k, m))
+
+    est = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(1), reps))
+    bias = jnp.mean(est, axis=0) - c
+    assert float(jnp.max(jnp.abs(bias))) < 6.0 * float(jnp.std(est) / np.sqrt(reps))
+
+
+def test_cov_paths_agree():
+    x = jax.random.normal(KEY, (50, 40))
+    s = sampling.subsample(x, KEY, 10)
+    np.testing.assert_allclose(
+        estimators.cov_estimator(s, path="dense"),
+        estimators.cov_estimator(s, path="compact"),
+        atol=1e-3,
+    )
+
+
+def test_cov_error_within_thm6_bound():
+    """Preconditioned data: spectral error ≤ Thm 6 bound at δ₂ = 0.01."""
+    n, p, m = 2000, 128, 38
+    spec = sketch.make_spec(p, KEY, m=m)
+    x = jax.random.normal(jax.random.PRNGKey(7), (n, p))
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)  # normalized columns (paper setup)
+    from repro.core import ros
+
+    y = ros.precondition(x, spec.signs_key(), "hadamard")
+    s = sampling.subsample(y, spec.mask_key(), m)
+    c_emp = estimators.empirical_cov(y)
+    err = float(jnp.linalg.norm(estimators.cov_estimator(s) - c_emp, ord=2))
+    terms = bounds.cov_bound_from_data(y, m)
+    t = terms.error_bound(0.01)
+    assert err <= t, f"spectral err {err} exceeded Thm 6 bound {t}"
+
+
+def test_streaming_equals_batch():
+    n, p, m, nb = 160, 64, 16, 4
+    x = jax.random.normal(KEY, (n, p))
+    keys = jax.random.split(jax.random.PRNGKey(2), nb)
+    batches = [sampling.subsample(x[i * 40 : (i + 1) * 40], keys[i], m) for i in range(nb)]
+
+    st = estimators.stream_init(p)
+    for b in batches:
+        st = estimators.stream_update(st, b)
+    mean_stream = estimators.stream_finalize_mean(st, m)
+    cov_stream = estimators.stream_finalize_cov(st, m)
+
+    allv = jnp.concatenate([b.values for b in batches])
+    alli = jnp.concatenate([b.indices for b in batches])
+    s_all = sampling.SparseRows(allv, alli, p)
+    np.testing.assert_allclose(mean_stream, estimators.mean_estimator(s_all), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(cov_stream, estimators.cov_estimator(s_all), rtol=1e-4, atol=1e-5)
+
+
+def test_bound_inversions_consistent():
+    """failure_prob(error_bound(δ)) == δ for Thm 4, 6, 7 inversions."""
+    n, m, p = 1000, 30, 100
+    t = bounds.mean_error_bound(0.01, n, m, p, 0.5, 3.0)
+    assert np.isclose(bounds.mean_failure_prob(t, n, m, p, 0.5, 3.0), 0.01, rtol=1e-6)
+
+    terms = bounds.CovBoundTerms(L=0.3, sigma_sq=0.02, p=p)
+    t6 = terms.error_bound(0.05)
+    assert np.isclose(terms.failure_prob(t6), 0.05, rtol=1e-6)
+
+    t7 = bounds.hk_error_bound(0.001, n_k=500, m=m, p=p)
+    assert np.isclose(bounds.hk_failure_prob(t7, 500, m, p), 0.001, rtol=1e-6)

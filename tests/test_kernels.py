@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import fwht, ops, ref, sparse_assign
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("p", [64, 128, 256, 512, 2048, 8192])
+@pytest.mark.parametrize("n", [1, 16, 37])
+def test_fwht_kernel_shapes(p, n):
+    x = jax.random.normal(KEY, (n, p), jnp.float32)
+    s = jax.random.rademacher(jax.random.PRNGKey(1), (p,), jnp.float32)
+    y = fwht.hd_precondition(x, s, interpret=True)
+    np.testing.assert_allclose(y, ref.ref_hd_precondition(x, s), atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_kernel_dtypes(dtype):
+    p, n = 512, 9
+    x = jax.random.normal(KEY, (n, p)).astype(dtype)
+    s = jax.random.rademacher(jax.random.PRNGKey(1), (p,), jnp.float32).astype(dtype)
+    y = fwht.hd_precondition(x, s, interpret=True)
+    r = ref.ref_hd_precondition(x.astype(jnp.float32), s.astype(jnp.float32))
+    tol = 2e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(y.astype(jnp.float32), r, atol=tol)
+
+
+def test_fwht_kernel_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        fwht.factor_p(100)
+
+
+@pytest.mark.parametrize("shape", [(33, 256, 16, 5), (64, 1024, 64, 10), (17, 512, 128, 3), (5, 128, 2, 2)])
+def test_sparse_assign_kernel_shapes(shape):
+    n, p, m, k = shape
+    kv, ki, kc = jax.random.split(jax.random.PRNGKey(n), 3)
+    vals = jax.random.normal(kv, (n, m), jnp.float32)
+    u = jax.random.uniform(ki, (n, p))
+    idx = jnp.sort(jax.lax.top_k(u, m)[1].astype(jnp.int32), axis=-1)
+    ctr = jax.random.normal(kc, (k, p), jnp.float32)
+    d, a = sparse_assign.sparse_assign(vals, idx, ctr, interpret=True)
+    dr, ar = ref.ref_sparse_assign(vals, idx, ctr)
+    np.testing.assert_allclose(d, dr, atol=1e-3)
+    assert bool(jnp.all(a == ar))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    logp=st.integers(min_value=6, max_value=11),
+    n=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_fwht_kernel_random(logp, n, seed):
+    p = 1 << logp
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, p), jnp.float32)
+    s = jax.random.rademacher(jax.random.fold_in(key, 1), (p,), jnp.float32)
+    y = fwht.hd_precondition(x, s, interpret=True)
+    np.testing.assert_allclose(y, ref.ref_hd_precondition(x, s), atol=2e-4)
+
+
+def test_ops_wrappers_dispatch():
+    x = jax.random.normal(KEY, (8, 256), jnp.float32)
+    s = jax.random.rademacher(jax.random.PRNGKey(1), (256,), jnp.float32)
+    np.testing.assert_allclose(
+        ops.hd_precondition(x, s, mode="interpret"),
+        ops.hd_precondition(x, s, mode="ref"),
+        atol=2e-4,
+    )
+    vals = jax.random.normal(KEY, (8, 16), jnp.float32)
+    idx = jnp.sort(jax.lax.top_k(jax.random.uniform(KEY, (8, 256)), 16)[1].astype(jnp.int32), axis=-1)
+    ctr = jax.random.normal(KEY, (4, 256), jnp.float32)
+    d1, a1 = ops.sparse_assign(vals, idx, ctr, mode="interpret")
+    d2, a2 = ops.sparse_assign(vals, idx, ctr, mode="ref")
+    np.testing.assert_allclose(d1, d2, atol=1e-3)
+    assert bool(jnp.all(a1 == a2))
+
+
+def test_kernel_assign_fn_in_lloyd():
+    """The kernel adapter slots into the Lloyd loop and matches the ref path."""
+    from repro.core import kmeans as km
+
+    n, p, m, k = 60, 128, 16, 3
+    kv, ki = jax.random.split(KEY)
+    vals = jax.random.normal(kv, (n, m), jnp.float32)
+    idx = jnp.sort(jax.lax.top_k(jax.random.uniform(ki, (n, p)), m)[1].astype(jnp.int32), axis=-1)
+    mu_ref, a_ref, o_ref, _ = km.sparse_kmeans_core(vals, idx, p, k, KEY, n_init=2, max_iter=10)
+    fn = __import__("repro.kernels.ops", fromlist=["kernel_assign_fn"]).kernel_assign_fn("ref")
+    mu_k, a_k, o_k, _ = km.sparse_kmeans_core(vals, idx, p, k, KEY, n_init=2, max_iter=10, assign_fn=fn)
+    np.testing.assert_allclose(mu_ref, mu_k, atol=1e-4)
+    assert bool(jnp.all(a_ref == a_k))

@@ -1,0 +1,81 @@
+"""Cluster solvers: accuracy on separated blobs, center consistency, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans as km
+from tests.conftest import make_clusters
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_clusters(KEY, n=1500, p=128, k=5)
+
+
+def _center_err(c, true):
+    from scipy.optimize import linear_sum_assignment
+
+    d = np.linalg.norm(np.asarray(c)[:, None, :] - np.asarray(true)[None, :, :], axis=-1)
+    ri, ci = linear_sum_assignment(d)
+    return float(d[ri, ci].mean())
+
+
+def test_standard_kmeans(blobs):
+    x, labels, centers = blobs
+    res = km.kmeans(x, 5, jax.random.PRNGKey(1), n_init=3, max_iter=50)
+    assert km.clustering_accuracy(res.assignments, labels, 5) > 0.95
+    assert _center_err(res.centers, centers) < 1.0
+
+
+@pytest.mark.parametrize("precondition", [True, False])
+def test_sparsified_kmeans(blobs, precondition):
+    x, labels, centers = blobs
+    res = km.sparsified_kmeans(
+        x, 5, jax.random.PRNGKey(2), gamma=0.25, precondition=precondition, n_init=3, max_iter=50
+    )
+    assert km.clustering_accuracy(res.assignments, labels, 5) > 0.9
+    if precondition:
+        # one-pass center estimates are consistent (paper §VII-B)
+        assert _center_err(res.centers, centers) < 2.0
+
+
+def test_two_pass_improves_centers(blobs):
+    x, labels, centers = blobs
+    r1 = km.sparsified_kmeans(x, 5, jax.random.PRNGKey(3), gamma=0.15, n_init=3, max_iter=50)
+    r2 = km.sparsified_kmeans(x, 5, jax.random.PRNGKey(3), gamma=0.15, two_pass=True, n_init=3, max_iter=50)
+    assert _center_err(r2.centers, centers) <= _center_err(r1.centers, centers) + 1e-6
+
+
+def test_feature_extraction_center_inconsistency(blobs):
+    """Pseudo-inverse-lifted FE centers are far worse than sparsified centers —
+    the paper's core argument for per-sample sampling operators (Fig. 9)."""
+    x, labels, centers = blobs
+    fe = km.feature_extraction_kmeans(x, 5, m=32, key=jax.random.PRNGKey(4), n_init=3, max_iter=50)
+    sp = km.sparsified_kmeans(x, 5, jax.random.PRNGKey(5), gamma=0.25, n_init=3, max_iter=50)
+    assert km.clustering_accuracy(fe.assignments, labels, 5) > 0.9  # assignments fine
+    assert _center_err(fe.centers, centers) > 3 * _center_err(sp.centers, centers)
+
+
+def test_feature_selection_runs(blobs):
+    x, labels, _ = blobs
+    fs = km.feature_selection_kmeans(x, 5, m=32, key=jax.random.PRNGKey(6), n_init=3, max_iter=50)
+    assert km.clustering_accuracy(fs.assignments, labels, 5) > 0.8
+
+
+def test_empty_cluster_guard():
+    """K > #distinct points: counts==0 coordinates keep previous centers, no NaNs."""
+    x = jnp.ones((10, 16))
+    res = km.kmeans(x, 3, KEY, n_init=1, max_iter=5)
+    assert bool(jnp.all(jnp.isfinite(res.centers)))
+
+
+def test_sparse_assign_matches_dense_when_full():
+    """γ=1 (m=p): sparsified metric reduces to the plain Euclidean metric."""
+    x, _, _ = make_clusters(jax.random.PRNGKey(9), n=50, p=32, k=3)
+    idx = jnp.tile(jnp.arange(32, dtype=jnp.int32)[None], (50, 1))
+    d_sparse = km.sparse_sq_dists(x, idx, x[:3])
+    d_dense = km.dense_sq_dists(x, x[:3])
+    np.testing.assert_allclose(d_sparse, d_dense, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,69 @@
+"""Roofline machinery: HLO collective parser, memory model, param counting."""
+import jax
+import numpy as np
+
+from repro.configs.registry import get_arch, get_shape
+from repro.roofline.analysis import count_params, model_flops, probe_depths
+from repro.roofline.hlo import collective_stats
+from repro.roofline.memmodel import peak_model
+
+HLO = """
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag.1 = bf16[64,256]{1,0} all-gather(bf16[4,256]{1,0} %y), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[2,8]{1,0} reduce-scatter(f32[32,8]{1,0} %z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[4,4]{1,0} collective-permute(f32[4,4]{1,0} %w), source_target_pairs={{0,1}}
+  %aa = (f32[8,8]{1,0}) all-to-all(f32[8,8]{1,0} %v), replica_groups=[32,8]<=[256]
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    st = collective_stats(HLO)
+    bk = st["by_kind"]
+    # all-reduce: 2·B·(g−1)/g with g=16, B=16·128·4
+    assert np.isclose(bk["all-reduce"]["wire_bytes"], 2 * 16 * 128 * 4 * 15 / 16)
+    # all-gather: result bytes × (g−1)/g
+    assert np.isclose(bk["all-gather"]["wire_bytes"], 64 * 256 * 2 * 15 / 16)
+    # reduce-scatter uses the (larger) operand
+    assert np.isclose(bk["reduce-scatter"]["wire_bytes"], 32 * 8 * 4 * 3 / 4)
+    assert np.isclose(bk["collective-permute"]["wire_bytes"], 4 * 4 * 4)
+    assert bk["all-to-all"]["count"] == 1
+    assert st["total_wire_bytes"] > 0
+
+
+def test_count_params_families():
+    kimi = count_params(get_arch("kimi-k2-1t-a32b"))
+    assert 0.9e12 < kimi["total"] < 1.2e12, kimi["total"]        # ~1T total
+    assert 25e9 < kimi["active"] < 40e9, kimi["active"]           # ~32B active
+    ds = count_params(get_arch("deepseek-coder-33b"))
+    assert 30e9 < ds["total"] < 40e9, ds["total"]
+    mb = count_params(get_arch("mamba2-1.3b"))
+    assert 1.0e9 < mb["total"] < 1.8e9, mb["total"]
+    q3 = count_params(get_arch("qwen3-moe-235b-a22b"))
+    assert 2.0e11 < q3["total"] < 2.7e11 and 1.8e10 < q3["active"] < 2.6e10
+
+
+def test_model_flops_scaling():
+    cfg = get_arch("glm4-9b")
+    t = model_flops(cfg, get_shape("train_4k"))
+    p = model_flops(cfg, get_shape("prefill_32k"))
+    assert np.isclose(t / p, 3.0, rtol=1e-6)      # 6ND vs 2ND at equal tokens
+    d = model_flops(cfg, get_shape("decode_32k"))
+    assert d < p / 1000                            # one token per sequence
+
+
+def test_probe_depths_respect_period():
+    assert probe_depths(get_arch("glm4-9b")) == (1, 2)
+    assert probe_depths(get_arch("zamba2-1.2b")) == (6, 12)
+
+
+def test_memmodel_sane_and_monotone():
+    cfg = get_arch("glm4-9b")
+    shape = get_shape("train_4k")
+    n = count_params(cfg)["total"]
+    m256 = peak_model(cfg, shape, 256, 16, 16, n)
+    m512 = peak_model(cfg, shape, 512, 32, 16, n)
+    assert m512["total"] < m256["total"]           # more chips → less per chip
+    assert 2 << 30 < m256["total"] < 20 << 30      # sane absolute range
+    # decode fits easily
+    md = peak_model(cfg, get_shape("decode_32k"), 256, 16, 16, n)
+    assert md["total"] < m256["total"]

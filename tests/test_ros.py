@@ -1,0 +1,80 @@
+"""ROS preconditioning: unitarity, inversion, smoothing guarantees (Thm 1, Cor 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.fft as sf
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ros
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("p", [2, 8, 64, 128, 1024])
+def test_fwht_matches_dense_hadamard(p):
+    x = jax.random.normal(KEY, (5, p))
+    h = ros.hadamard_matrix(p)
+    np.testing.assert_allclose(ros.fwht(x), x @ h.T, atol=1e-4)
+
+
+@pytest.mark.parametrize("p", [4, 32, 256])
+def test_fwht_self_inverse_and_isometry(p):
+    x = jax.random.normal(KEY, (7, p))
+    y = ros.fwht(x)
+    np.testing.assert_allclose(ros.fwht(y), x, atol=1e-4)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=1), jnp.linalg.norm(x, axis=1), rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("p", [10, 100, 784, 1000])
+def test_dct_matches_scipy(p):
+    x = np.random.default_rng(p).normal(size=(4, p)).astype(np.float32)
+    np.testing.assert_allclose(
+        ros._dct_ii_ortho(jnp.asarray(x)), sf.dct(x, axis=-1, norm="ortho"), atol=1e-3
+    )
+    np.testing.assert_allclose(
+        ros._dct_iii_ortho(jnp.asarray(sf.dct(x, axis=-1, norm="ortho"))), x, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("transform", ["hadamard", "dct"])
+@pytest.mark.parametrize("p", [100, 512, 784])
+def test_precondition_unmix_roundtrip(transform, p):
+    x = jax.random.normal(KEY, (6, p))
+    y = ros.precondition(x, KEY, transform, p_orig=p)
+    assert y.shape[-1] == ros.pad_len(p, transform)
+    np.testing.assert_allclose(ros.unmix(y, KEY, transform, p_orig=p), x, atol=1e-4)
+    # isometry survives padding
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=1), jnp.linalg.norm(x, axis=1), rtol=1e-4
+    )
+
+
+def test_smoothing_cor2():
+    """Cor. 2: after ROS, max |entry| of unit-norm samples ≲ √(2/η·log(2np/α)/p)."""
+    n, p = 256, 512
+    x = jnp.zeros((n, p)).at[jnp.arange(n), jax.random.randint(KEY, (n,), 0, p)].set(1.0)
+    # spiky input: ‖X‖_max = 1 (worst case). After ROS every entry is O(1/√p).
+    y = ros.precondition(x, KEY, "hadamard")
+    from repro.core.bounds import ros_max_entry_bound
+
+    bound = ros_max_entry_bound(n, p, alpha=0.01)
+    assert float(jnp.max(jnp.abs(y))) <= bound
+    assert float(jnp.max(jnp.abs(y))) >= (1.0 - 1e-5) / np.sqrt(p)  # can't beat perfect spread
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logp=st.integers(min_value=1, max_value=9),
+    n=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_hd_is_orthonormal(logp, n, seed):
+    """Property: HD preserves inner products (orthonormality), any size/seed."""
+    p = 1 << logp
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, p))
+    y = ros.precondition(x, key, "hadamard")
+    np.testing.assert_allclose(y @ y.T, x @ x.T, atol=1e-3 * p)

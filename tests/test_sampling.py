@@ -1,0 +1,83 @@
+"""Sampling matrices: exact-m sparsity, distinctness, uniform marginals (Lemma B5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_exact_m_distinct_sorted():
+    idx = sampling.sample_indices(KEY, 100, 64, 16)
+    assert idx.shape == (100, 16)
+    assert bool(jnp.all(jnp.diff(idx, axis=1) > 0))  # sorted & distinct
+    assert bool(jnp.all((idx >= 0) & (idx < 64)))
+
+
+def test_lemma_b5_uniform_marginals():
+    """Each coordinate kept w.p. m/p — χ² sanity check over many draws."""
+    n, p, m = 20000, 32, 8
+    idx = sampling.sample_indices(KEY, n, p, m)
+    counts = np.bincount(np.asarray(idx).ravel(), minlength=p)
+    expected = n * m / p
+    # std of binomial(n, m/p) ≈ √(n·γ(1−γ)); allow 5σ
+    sigma = np.sqrt(n * (m / p) * (1 - m / p))
+    assert np.all(np.abs(counts - expected) < 5 * sigma)
+
+
+def test_subsample_to_dense_roundtrip():
+    y = jax.random.normal(KEY, (10, 64))
+    s = sampling.subsample(y, KEY, 16)
+    d = s.to_dense()
+    assert int(jnp.sum(d != 0)) <= 10 * 16
+    # kept entries match the original exactly
+    rows = jnp.arange(10)[:, None]
+    np.testing.assert_allclose(d[rows, s.indices], s.values)
+    np.testing.assert_allclose(s.values, y[rows, s.indices])
+
+
+def test_sparserows_is_pytree():
+    s = sampling.subsample(jax.random.normal(KEY, (4, 32)), KEY, 8)
+    s2 = jax.tree.map(lambda a: a * 2, s)
+    assert isinstance(s2, sampling.SparseRows)
+    assert s2.p == 32
+    np.testing.assert_allclose(s2.values, s.values * 2)
+    # jit through it
+    f = jax.jit(lambda sr: sr.to_dense().sum())
+    f(s)
+
+
+def test_norm_reduction_cor3():
+    """Cor. 3: after preconditioning, ‖w‖² ≈ (m/p)·‖x‖² up to log factors."""
+    from repro.core import ros
+    from repro.core.bounds import rho_bound
+
+    n, p, m = 128, 512, 64
+    x = jnp.zeros((n, p)).at[:, 0].set(1.0)  # adversarial: all energy in one coord
+    y = ros.precondition(x, KEY, "hadamard")
+    s = sampling.subsample(y, jax.random.PRNGKey(1), m)
+    ratios = jnp.sum(s.values**2, axis=1) / jnp.sum(x**2, axis=1)
+    rho = rho_bound(n, p, m, alpha=0.01)
+    assert float(jnp.max(ratios)) <= rho
+    # without preconditioning the same data keeps either all or none of the norm
+    s0 = sampling.subsample(x, jax.random.PRNGKey(2), m)
+    r0 = jnp.sum(s0.values**2, axis=1) / jnp.sum(x**2, axis=1)
+    assert set(np.unique(np.asarray(r0))) <= {0.0, 1.0}
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=2, max_value=100),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_exact_sparsity(p, frac, seed):
+    m = max(1, int(frac * p))
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.normal(key, (3, p)) + 1.0  # nonzero everywhere
+    s = sampling.subsample(y, key, m)
+    d = s.to_dense()
+    assert bool(jnp.all(jnp.sum(d != 0, axis=1) == m))
