@@ -22,6 +22,7 @@ def main() -> None:
         fig8_kmeans_timing,
         grad_compress_bench,
         kernel_bench,
+        stream_bench,
     )
 
     suites = [
@@ -35,6 +36,7 @@ def main() -> None:
         ("bigdata_kmeans", bigdata_kmeans.run),
         ("kernel_bench", kernel_bench.run),
         ("grad_compress_bench", grad_compress_bench.run),
+        ("stream_bench", stream_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -1,12 +1,18 @@
 """Distributed one-pass sketching & estimation (paper §I: distributed-data setting).
 
-Under pjit global-view semantics the whole pipeline distributes with *sharding
-annotations only*: each data shard sketches its own samples locally
-(independent R_i per sample comes from the global PRNG semantics), and the
-only cross-shard traffic is the psum of the fixed-size accumulators —
+Each data shard sketches its own samples locally (independent R_i per sample),
+and the only cross-shard traffic is the psum of the fixed-size accumulators —
 (p,) for the mean, (p,p) for the covariance, (K,p)+(K,p) for K-means updates.
-XLA inserts exactly those collectives; tests/test_distributed.py asserts
-bit-compatibility with the single-device path on a forced host mesh.
+The mean/covariance reductions delegate to the explicit shard_map collectives
+in ``repro.stream.sharded`` (one psum of the accumulator delta per call);
+K-means keeps global-view jit because Lloyd's loop interleaves many small
+reductions that XLA already lowers to the same psums. The *streaming* versions
+of all three — constant-memory, batch-at-a-time — live in
+``repro.stream.StreamEngine``.
+
+tests/test_distributed.py asserts equivalence with the single-device path on a
+forced host mesh (for K-means: up to a cluster relabelling — see the test's
+docstring for the tie-break diagnosis).
 
 For clusters: run one process per host with the same code; `jax.make_mesh`
 over all devices; the data pipeline feeds per-host shards (data/pipeline.py's
@@ -21,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import estimators, kmeans, sketch
 from repro.core.sampling import SparseRows
+from repro.stream import sharded as _sharded
 
 
 def shard_rows(x: jax.Array, mesh, axes=("data",)) -> jax.Array:
@@ -36,16 +43,14 @@ def sketch_sharded(x: jax.Array, spec: sketch.SketchSpec, mesh, axes=("data",)) 
         return sketch.sketch(xs, spec)
 
 
-def distributed_mean(s: SparseRows, mesh) -> jax.Array:
+def distributed_mean(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
     """Thm-4 estimator over sharded sketches; psum of a (p,) accumulator."""
-    with mesh:
-        return jax.jit(estimators.mean_estimator)(s)
+    return _sharded.sharded_mean(s, mesh, axes)
 
 
-def distributed_cov(s: SparseRows, mesh) -> jax.Array:
+def distributed_cov(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
     """Thm-6 estimator; the (p,p) accumulator is the only cross-shard tensor."""
-    with mesh:
-        return jax.jit(lambda t: estimators.cov_estimator(t, path="dense"))(s)
+    return _sharded.sharded_cov(s, mesh, axes)
 
 
 def distributed_kmeans(s: SparseRows, k: int, key, mesh, n_init: int = 3,

@@ -74,6 +74,9 @@ def cov_estimator(s: SparseRows, path: Literal["dense", "compact"] = "dense") ->
 
 
 # ----------------------------------------------------------- streaming ------
+# Minimal fold-a-batch accumulator, kept for small scripts and examples. The
+# full streaming subsystem — donated accumulators, shard_map distribution,
+# per-(step, shard) mask keys, streaming K-means — is repro.stream.StreamEngine.
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +85,8 @@ class StreamState:
 
     sum_w:    (p,)   Σ R_iR_iᵀ x_i
     sum_wwt:  (p, p) Σ w_i w_iᵀ       (only if track_cov)
-    count:    scalar n so far
+    count:    scalar n so far — int32, exact to 2^31 rows (f32 would silently
+              stop counting past 2^24 on the long streams the engine targets)
     """
 
     sum_w: jax.Array
@@ -101,27 +105,42 @@ def stream_init(p: int, track_cov: bool = True) -> StreamState:
     return StreamState(
         sum_w=jnp.zeros((p,), jnp.float32),
         sum_wwt=jnp.zeros((p, p), jnp.float32) if track_cov else None,
-        count=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
     )
+
+
+def stream_delta(batch: SparseRows, track_cov: bool = True) -> StreamState:
+    """One batch's contribution as a StreamState — local, no collectives, so a
+    distributed caller can psum it before :func:`stream_apply`."""
+    n = batch.values.shape[0]
+    sum_w = jnp.zeros((batch.p,), jnp.float32).at[batch.indices.reshape(-1)].add(
+        batch.values.reshape(-1).astype(jnp.float32)
+    )
+    sum_wwt = None
+    if track_cov:
+        w = batch.to_dense().astype(jnp.float32)
+        sum_wwt = w.T @ w
+    return StreamState(sum_w, sum_wwt, jnp.int32(n))
+
+
+def stream_apply(state: StreamState, delta: StreamState) -> StreamState:
+    """Fold a (possibly psum'd) delta into the accumulator."""
+    sum_wwt = state.sum_wwt
+    if sum_wwt is not None:
+        sum_wwt = sum_wwt + delta.sum_wwt
+    return StreamState(state.sum_w + delta.sum_w, sum_wwt, state.count + delta.count)
 
 
 @jax.jit
 def stream_update(state: StreamState, batch: SparseRows) -> StreamState:
     """Fold one sketched batch into the accumulators (pure; jit/scan friendly)."""
-    n = batch.values.shape[0]
-    sum_w = state.sum_w.at[batch.indices.reshape(-1)].add(
-        batch.values.reshape(-1).astype(jnp.float32)
-    )
-    sum_wwt = state.sum_wwt
-    if sum_wwt is not None:
-        w = batch.to_dense().astype(jnp.float32)
-        sum_wwt = sum_wwt + w.T @ w
-    return StreamState(sum_w, sum_wwt, state.count + n)
+    return stream_apply(state, stream_delta(batch, track_cov=state.sum_wwt is not None))
 
 
 def stream_finalize_mean(state: StreamState, m: int) -> jax.Array:
     p = state.sum_w.shape[0]
-    return state.sum_w * (p / (m * state.count))
+    # p/m first: keeps the divisor float (m·count could overflow int32)
+    return state.sum_w * (p / m / state.count)
 
 
 def stream_finalize_cov(state: StreamState, m: int) -> jax.Array:

@@ -124,7 +124,8 @@ def perworker_mean_estimate(local_vec: jax.Array, key: jax.Array, step: jax.Arra
     n_w = 1
     for a in axis_names:
         scat = jax.lax.psum(scat, a)
-        n_w *= jax.lax.axis_size(a)
+        # jax.lax.axis_size is absent in jax 0.4.x; psum of 1 is the portable form.
+        n_w *= jax.lax.psum(1, a)
     y_mean = scat / n_w
     return ros.unmix(y_mean, signs_key, "hadamard").reshape(-1)[:n]
 

@@ -114,11 +114,27 @@ def signs_for(key: jax.Array, p_padded: int, dtype=jnp.float32) -> jax.Array:
     return rademacher(key, (p_padded,), dtype=dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("transform", "p_orig"))
-def precondition(x: jax.Array, key: jax.Array, transform: Transform = "hadamard", p_orig: int | None = None) -> jax.Array:
+def resolve_impl(impl: str) -> str:
+    """Resolve the "auto" Hadamard backend: Pallas kernel on TPU, jnp elsewhere.
+
+    The single policy point shared by :func:`precondition` and sketch.sketch.
+    """
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("transform", "p_orig", "impl"))
+def precondition(x: jax.Array, key: jax.Array, transform: Transform = "hadamard",
+                 p_orig: int | None = None, impl: str = "jnp") -> jax.Array:
     """y = H D x along the last axis, zero-padding to the transform length.
 
     ``x``: (..., p). Returns (..., p_pad).
+
+    ``impl`` selects the Hadamard backend: ``"jnp"`` (butterfly reference),
+    ``"kernel"`` / ``"interpret"`` (the Pallas MXU kernel, chunked three-pass
+    above p = 2^15 — see repro.kernels.fwht), or ``"auto"`` (kernel on TPU,
+    jnp elsewhere). Non-Hadamard transforms always use the jnp path.
     """
     p = p_orig if p_orig is not None else x.shape[-1]
     pp = pad_len(p, transform)
@@ -126,6 +142,13 @@ def precondition(x: jax.Array, key: jax.Array, transform: Transform = "hadamard"
         pad = [(0, 0)] * (x.ndim - 1) + [(0, pp - x.shape[-1])]
         x = jnp.pad(x, pad)
     d = signs_for(key, pp, dtype=x.dtype)
+    impl = resolve_impl(impl)
+    if impl != "jnp" and transform == "hadamard":
+        from repro.kernels import fwht as _fwht  # deferred: kernels import this module
+
+        lead = x.shape[:-1]
+        y = _fwht.hd_precondition(x.reshape(-1, pp), d, interpret=(impl == "interpret"))
+        return y.reshape(*lead, pp)
     return apply_h(x * d, transform)
 
 

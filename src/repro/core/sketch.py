@@ -52,20 +52,24 @@ def make_spec(p: int, key: jax.Array, gamma: float | None = None, m: int | None 
     return SketchSpec(p=p, m=int(m), transform=transform, key=key)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "m", "transform"))
-def _sketch_impl(x, signs_key, mask_key, p, m, transform):
-    y = ros.precondition(x, signs_key, transform, p_orig=p)
+@functools.partial(jax.jit, static_argnames=("p", "m", "transform", "impl"))
+def _sketch_impl(x, signs_key, mask_key, p, m, transform, impl):
+    y = ros.precondition(x, signs_key, transform, p_orig=p, impl=impl)
     return subsample(y, mask_key, m)
 
 
-def sketch(x: jax.Array, spec: SketchSpec, batch_key: jax.Array | None = None) -> SparseRows:
+def sketch(x: jax.Array, spec: SketchSpec, batch_key: jax.Array | None = None,
+           impl: str = "auto") -> SparseRows:
     """Compress a batch of rows (n, p) → SparseRows (n, m) in one fused pass.
 
     ``batch_key`` distinguishes batches of a stream so every sample gets an
     independent R_i; defaults to the spec's mask key (fine for one-shot use).
+    ``impl`` picks the preconditioning backend (see ros.precondition); the
+    default uses the Pallas kernel on TPU and the jnp butterfly elsewhere.
     """
+    impl = ros.resolve_impl(impl)
     mask_key = batch_key if batch_key is not None else spec.mask_key()
-    return _sketch_impl(x, spec.signs_key(), mask_key, spec.p, spec.m, spec.transform)
+    return _sketch_impl(x, spec.signs_key(), mask_key, spec.p, spec.m, spec.transform, impl)
 
 
 def unmix_dense(w_dense: jax.Array, spec: SketchSpec) -> jax.Array:

@@ -69,7 +69,12 @@ class SyntheticLMSource:
 
 
 class VectorStreamSource:
-    """Deterministic stream of p-dimensional samples (for PCA/K-means at scale)."""
+    """Deterministic stream of p-dimensional samples (for PCA/K-means at scale).
+
+    Every batch is a pure function of (seed, step, shard) — the contract
+    repro.stream.StreamEngine consumes — so any worker can regenerate any
+    shard's batch without coordination.
+    """
 
     def __init__(self, p: int, batch: int, seed: int = 0, mode: str = "lowrank", k: int = 8):
         self.p, self.batch, self.mode, self.k = p, batch, mode, k
@@ -79,12 +84,21 @@ class VectorStreamSource:
         self._u = u.astype(np.float32)
         self._lam = np.linspace(10, 2, k).astype(np.float32)
 
-    def next_batch(self) -> np.ndarray:
-        rng = np.random.default_rng((self.state.seed, self.state.step))
-        self.state.step += 1
+    def batch_at(self, step: int, shard: int = 0, seed: int | None = None) -> np.ndarray:
+        """Regenerate the (step, shard) batch on any worker — (batch, p) f32.
+
+        ``seed`` overrides the constructed stream seed (StreamEngine forwards
+        its run seed here); None keeps ``self.state.seed``.
+        """
+        rng = np.random.default_rng((self.state.seed if seed is None else seed, step, shard))
         kappa = rng.normal(size=(self.batch, self.k)).astype(np.float32)
         x = (kappa * self._lam) @ self._u.T
         x += 0.05 * rng.normal(size=(self.batch, self.p)).astype(np.float32)
+        return x
+
+    def next_batch(self) -> np.ndarray:
+        x = self.batch_at(self.state.step)
+        self.state.step += 1
         return x
 
 
@@ -93,6 +107,11 @@ class SketchingPipeline:
 
     Emits SparseRows batches; every batch gets an independent mask key
     (fold of the spec key and the step) — the paper's per-sample R_i property.
+
+    This is the minimal pull-based wrapper; the full streaming subsystem
+    (donated accumulators, shard_map distribution, streaming K-means) is
+    ``repro.stream.StreamEngine``, which consumes the same sources via their
+    (seed, step, shard) ``batch_at`` contract.
     """
 
     def __init__(self, source: VectorStreamSource, spec: sketch_mod.SketchSpec):

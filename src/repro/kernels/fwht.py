@@ -13,6 +13,18 @@ the MXU. For p ≤ 256 a single dense H_p matmul is used (a = 1).
 
 The kernel tiles rows; each grid step owns a (block_rows, p) tile resident in
 VMEM. H_a, H_b (and the sign vector) are small and replicated to every step.
+
+**Large p (the streaming regime, p > 2^15):** a (block_rows, p) tile no longer
+fits VMEM, so the transform is *chunked* with the three-factor identity
+
+    H_p = H_a ⊗ H_b ⊗ H_c   (a·b·c = p, each factor ≤ 2^9)
+
+and realized as three passes over the data, each pass a tiled (rows, f) @ H_f
+matmul whose (block, f) chunks fit VMEM independent of p. The sign flip is
+fused into the first pass; the reorderings between passes are XLA transposes.
+This lifts the previous MAX_P = 2^15 ceiling to 2^27 — see
+:func:`hd_precondition_chunked` and tests/test_stream.py for the p = 2^17
+interpret-mode equivalence.
 """
 from __future__ import annotations
 
@@ -26,7 +38,9 @@ from jax.experimental import pallas as pl
 from repro.core.ros import hadamard_matrix
 
 # largest p the single-tile kernel supports: (block_rows × p) must fit VMEM.
-MAX_P = 1 << 15
+MAX_P_SINGLE = 1 << 15
+# largest p overall — the chunked three-pass schedule with factors ≤ 2^9.
+MAX_P = 1 << 27
 
 
 def factor_p(p: int) -> tuple[int, int]:
@@ -38,6 +52,24 @@ def factor_p(p: int) -> tuple[int, int]:
     k = p.bit_length() - 1
     b = 1 << max(7, (k + 1) // 2)    # inner factor ≥ 128
     return p // b, b
+
+
+def factor_p3(p: int) -> tuple[int, int, int]:
+    """Split p = a·b·c (Sylvester order) with every factor ≤ 2^9.
+
+    The trailing factors are filled greedily to 2^9 so the two hot passes
+    contract MXU-friendly 512-lane dimensions; the outer factor a absorbs the
+    remainder (a = 1 for p ≤ 2^18).
+    """
+    if p & (p - 1):
+        raise ValueError(f"p must be a power of two, got {p}")
+    k = p.bit_length() - 1
+    kc = min(9, k)
+    kb = min(9, k - kc)
+    ka = k - kc - kb
+    if ka > 9:
+        raise ValueError(f"p={p} exceeds chunked-kernel limit {MAX_P}")
+    return 1 << ka, 1 << kb, 1 << kc
 
 
 def default_block_rows(p: int, dtype=jnp.float32, vmem_budget: int = 6 << 20) -> int:
@@ -63,13 +95,104 @@ def _kernel(x_ref, d_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
+# ---------------------------------------------------- chunked three-pass ----
+
+def _pass_kernel(x_ref, h_ref, o_ref):
+    o_ref[...] = jax.lax.dot(
+        x_ref[...], h_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pass_signs_kernel(x_ref, s_ref, h_ref, o_ref):
+    o_ref[...] = jax.lax.dot(
+        x_ref[...] * s_ref[...], h_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _factor_pass(z: jax.Array, h: jax.Array, block_rows: int, interpret: bool,
+                 signs2d: jax.Array | None = None) -> jax.Array:
+    """One Kronecker-factor contraction: (R, f) @ H_f in (block_rows, f) chunks.
+
+    ``signs2d`` (rows_per_cycle, f), when given, is the D diagonal reshaped so
+    that the sign row for global row r is r mod rows_per_cycle; block_rows must
+    divide rows_per_cycle for the modular BlockSpec below to tile it exactly
+    (guaranteed by the power-of-two choices in :func:`hd_precondition_chunked`).
+    """
+    rows, f = z.shape
+    if rows % block_rows:
+        raise ValueError(f"block_rows={block_rows} must divide the pass row count {rows}")
+    if signs2d is not None and signs2d.shape[0] % block_rows:
+        raise ValueError(
+            f"block_rows={block_rows} must divide the sign cycle {signs2d.shape[0]}")
+    grid = (rows // block_rows,)
+    out_shape = jax.ShapeDtypeStruct(z.shape, z.dtype)
+    io_spec = pl.BlockSpec((block_rows, f), lambda i: (i, 0))
+    h_spec = pl.BlockSpec((f, f), lambda i: (0, 0))
+    if signs2d is None:
+        return pl.pallas_call(
+            _pass_kernel, grid=grid, in_specs=[io_spec, h_spec],
+            out_specs=io_spec, out_shape=out_shape, interpret=interpret,
+        )(z, h)
+    n_sign_blocks = signs2d.shape[0] // block_rows
+    sign_spec = pl.BlockSpec((block_rows, f), lambda i: (i % n_sign_blocks, 0))
+    return pl.pallas_call(
+        _pass_signs_kernel, grid=grid, in_specs=[io_spec, sign_spec, h_spec],
+        out_specs=io_spec, out_shape=out_shape, interpret=interpret,
+    )(z, signs2d, h)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def hd_precondition_chunked(x: jax.Array, signs: jax.Array,
+                            block_rows: int | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """y = H·(signs ⊙ x) for p > 2^15 via the chunked H_a ⊗ H_b ⊗ H_c schedule.
+
+    Three passes over the data, each a tiled small-f matmul whose working set is
+    (block_rows, f) ≤ (256, 512) regardless of p; the D sign flip rides the
+    first pass. Exact (up to f32 rounding) for any power of two p ≤ 2^27.
+    ``block_rows``, when given, caps the per-pass tile height and must be a
+    power of two (each pass validates divisibility against its row count).
+    """
+    n, p = x.shape
+    a, b, c = factor_p3(p)
+    dt = x.dtype
+    ab = a * b
+    cap = block_rows or 256
+
+    # pass 1 — contract c, signs fused. Rows of the (n·a·b, c) view cycle
+    # through sign rows with period a·b, so br | a·b keeps sign blocks exact.
+    br1 = min(cap, ab)
+    z = _factor_pass(x.reshape(n * ab, c), hadamard_matrix(c, dt), br1,
+                     interpret, signs2d=signs.astype(dt).reshape(ab, c))
+
+    # pass 2 — contract b (bring it to the lane axis, contract, restore).
+    if b > 1:
+        z = z.reshape(n, a, b, c).transpose(0, 1, 3, 2).reshape(n * a * c, b)
+        z = _factor_pass(z, hadamard_matrix(b, dt), min(cap, a * c), interpret)
+        z = z.reshape(n, a, c, b).transpose(0, 1, 3, 2)
+
+    # pass 3 — contract the outer factor a (identity when a == 1).
+    if a > 1:
+        z = z.reshape(n, a, b * c).transpose(0, 2, 1).reshape(n * b * c, a)
+        z = _factor_pass(z, hadamard_matrix(a, dt), min(cap, b * c), interpret)
+        z = z.reshape(n, b * c, a).transpose(0, 2, 1)
+
+    return z.reshape(n, p)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def hd_precondition(x: jax.Array, signs: jax.Array, block_rows: int | None = None,
                     interpret: bool = False) -> jax.Array:
-    """y = H·(signs ⊙ x) along the last axis. x: (n, p), p a power of two ≤ 2^15."""
+    """y = H·(signs ⊙ x) along the last axis. x: (n, p), p a power of two ≤ 2^27.
+
+    Dispatches to the single-tile two-factor kernel for p ≤ 2^15 and to the
+    chunked three-pass schedule above it.
+    """
     n, p = x.shape
     if p > MAX_P:
-        raise ValueError(f"p={p} exceeds single-tile kernel limit {MAX_P}; chunk first")
+        raise ValueError(f"p={p} exceeds chunked kernel limit {MAX_P}")
+    if p > MAX_P_SINGLE:
+        return hd_precondition_chunked(x, signs, block_rows=block_rows, interpret=interpret)
     a, b = factor_p(p)
     br = block_rows or default_block_rows(p, x.dtype)
     n_pad = -n % br

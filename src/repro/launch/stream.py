@@ -1,0 +1,86 @@
+"""Streaming-estimation launcher: ``python -m repro.launch.stream [flags]``.
+
+End-to-end driver for the streaming sketch engine (repro.stream): synthetic
+(seed, step, shard) vector source → per-batch-mask sketch → donated
+constant-memory accumulators → finalized mean / covariance / streaming
+K-means, optionally shard_map-distributed over forced host devices.
+
+    # single device, mean+cov at p=4096, 5% sketch
+    PYTHONPATH=src python -m repro.launch.stream --p 4096 --gamma 0.05 --steps 20
+
+    # 8-way sharded with streaming K-means
+    PYTHONPATH=src python -m repro.launch.stream --devices 8 --shards 8 \
+        --kmeans-k 8 --steps 20
+
+On a TPU slice drop ``--devices`` and the sketch runs the Pallas Kronecker
+kernels (chunked three-pass above p = 2^15) automatically (impl="auto").
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--p", type=int, default=4096)
+    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--batch", type=int, default=512, help="rows per shard per step")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0, help="force N host devices (CPU)")
+    ap.add_argument("--no-cov", action="store_true", help="mean-only accumulator")
+    ap.add_argument("--kmeans-k", type=int, default=0, help="0 disables streaming K-means")
+    ap.add_argument("--kmeans-ninit", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+
+    from repro.core import sketch
+    from repro.data.pipeline import VectorStreamSource
+    from repro.stream import StreamEngine, StreamKMeansConfig
+
+    mesh = None
+    if args.shards > 1:
+        n = len(jax.devices())
+        if n >= args.shards:
+            mesh = jax.make_mesh((args.shards,), ("data",))
+        else:
+            print(f"only {n} device(s); folding {args.shards} shards sequentially")
+
+    spec = sketch.make_spec(args.p, jax.random.PRNGKey(args.seed + 1), gamma=args.gamma)
+    source = VectorStreamSource(p=args.p, batch=args.batch, seed=args.seed)
+    km = (StreamKMeansConfig(k=args.kmeans_k, n_init=args.kmeans_ninit)
+          if args.kmeans_k else None)
+    engine = StreamEngine(spec, source, n_shards=args.shards, mesh=mesh,
+                          track_cov=not args.no_cov, kmeans=km)
+
+    t0 = time.time()
+    res = engine.run(args.steps, seed=args.seed)
+    jax.block_until_ready(res.mean)
+    dt = time.time() - t0
+    rows = int(res.count)
+    acc_floats = spec.p_pad + (0 if args.no_cov else spec.p_pad**2)
+    if km:
+        acc_floats += 2 * args.kmeans_ninit * args.kmeans_k * spec.p_pad
+    print(f"p={args.p} gamma={spec.gamma:.3f} (m={spec.m}) shards={args.shards} "
+          f"mesh={'yes' if mesh is not None else 'no'}")
+    print(f"streamed {rows:,} rows in {dt:.2f}s ({rows/dt:,.0f} rows/s incl. compile); "
+          f"accumulator state: {acc_floats:,} floats (constant in stream length)")
+    print(f"mean[:4] = {[round(float(v), 4) for v in res.mean[:4]]}")
+    if res.cov is not None:
+        print(f"cov trace = {float(res.cov.trace()):.4f}")
+    if res.centers is not None:
+        print(f"kmeans: K={args.kmeans_k}, best accumulated obj = {float(res.kmeans_obj):.2f}")
+
+
+if __name__ == "__main__":
+    main()

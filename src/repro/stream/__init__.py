@@ -1,0 +1,26 @@
+"""Streaming sketch engine: one-pass, sharded estimation at any p (paper §I, IV–VI).
+
+- engine:       StreamEngine — source → sketch → accumulate → finalize as one
+                jitted, optionally shard_map'd loop.
+- accumulators: constant-memory delta/apply algebra (Thm-4 mean, Thm-6 cov,
+                mini-batch streaming sparsified K-means).
+- sharded:      one-shot shard_map reductions used by repro.core.distributed.
+"""
+from repro.stream.accumulators import (  # noqa: F401
+    KMeansState,
+    MomentState,
+    kmeans_assign,
+    kmeans_finalize,
+    kmeans_init,
+    moment_finalize_cov,
+    moment_finalize_mean,
+    moment_init,
+)
+from repro.stream.engine import (  # noqa: F401
+    EngineState,
+    StreamEngine,
+    StreamKMeansConfig,
+    StreamResult,
+    batch_key,
+)
+from repro.stream.sharded import sharded_cov, sharded_mean, sharded_moments  # noqa: F401

@@ -1,0 +1,150 @@
+"""Constant-memory accumulators for the one-pass streaming estimators.
+
+The paper's single-pass story (§I, §IV–V) reduces every workload to the same
+shape: fold a sketched batch into a fixed-size accumulator, then finalize.
+This module holds the accumulator algebra — pure, jit/scan/shard_map friendly,
+and split into
+
+    delta(batch)  →  local, embarrassingly parallel (no collectives), then
+    apply(state, delta)  →  the only state mutation,
+
+so the distributed engine can psum the *delta* (the fixed-size cross-shard
+traffic) and apply it to replicated state, while the single-device engine
+applies the same delta directly. Streaming-equals-batch (tests/test_stream.py)
+holds because finalize uses exactly the Thm-4 / Thm-6 formulas of
+repro.core.estimators.
+
+Three accumulators:
+
+- :class:`MomentState` — Σ R_iR_iᵀx_i (p,) and Σ w_iw_iᵀ (p,p) for the Thm-4
+  mean and Thm-6 covariance estimators;
+- :class:`KMeansState` — mini-batch streaming sparsified K-means: per-cluster,
+  per-coordinate running means in the *preconditioned* domain (the online form
+  of the paper's Eq. 39 update), with ``r`` independent center hypotheses
+  folded in parallel and the best kept at finalize.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as _est
+from repro.core.kmeans import kpp_init_sparse, sparse_sq_dists
+from repro.core.sampling import SparseRows
+
+# ------------------------------------------------------------- moments ------
+# The moment accumulator IS estimators.StreamState — one source of truth for
+# the Thm-4/Thm-6 algebra; this module only re-exports it under the engine's
+# delta/apply naming and adds the K-means accumulator below.
+
+MomentState = _est.StreamState
+moment_init = _est.stream_init
+moment_delta = _est.stream_delta
+moment_apply = _est.stream_apply
+moment_finalize_mean = _est.stream_finalize_mean
+moment_finalize_cov = _est.stream_finalize_cov
+
+
+# -------------------------------------------- mini-batch streaming K-means --
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KMeansState:
+    """r parallel center hypotheses in the preconditioned domain.
+
+    centers: (r, K, p) — per-cluster, per-coordinate running means;
+    counts:  (r, K, p) — per-coordinate observation counts (Eq. 39 weights);
+                         int32: the running-mean weights must stay exact —
+                         f32 would saturate at 2^24 and silently turn the
+                         mean update into a fixed-rate EMA;
+    obj:     (r,)      — accumulated mini-batch objective (hypothesis selector);
+    count:   ()        — samples folded so far (int32, exact to 2^31 rows).
+    """
+
+    centers: jax.Array
+    counts: jax.Array
+    obj: jax.Array
+    count: jax.Array
+
+    def tree_flatten(self):
+        return (self.centers, self.counts, self.obj, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def kmeans_init(key: jax.Array, first_batch: SparseRows, k: int, n_init: int = 3) -> KMeansState:
+    """Seed r = n_init hypotheses with K-means++ on the first sketched batch.
+
+    Runs on replicated data so sharded and single-device engines start from
+    bit-identical centers.
+    """
+
+    def one(rkey):
+        return kpp_init_sparse(rkey, first_batch.values, first_batch.indices,
+                               first_batch.p, k)
+
+    centers = jax.lax.map(one, jax.random.split(key, n_init))
+    return KMeansState(
+        centers=centers.astype(jnp.float32),
+        counts=jnp.zeros(centers.shape, jnp.int32),
+        obj=jnp.zeros((n_init,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def kmeans_delta(state: KMeansState, batch: SparseRows):
+    """Assignment + scatter sums for one batch under every hypothesis.
+
+    Assignment (the hot, O(n·m·K) step) stays local to the shard; only the
+    returned (sums, cnts, obj, n) — fixed-size in the batch — ever needs a psum.
+    """
+    values, indices = batch.values, batch.indices
+    k, p = state.centers.shape[1:]
+
+    def one(centers):
+        d = sparse_sq_dists(values, indices, centers)          # (n, K)
+        a = jnp.argmin(d, axis=1)
+        rows = jnp.broadcast_to(a[:, None], indices.shape)
+        sums = jnp.zeros((k, p), jnp.float32).at[rows, indices].add(
+            values.astype(jnp.float32))
+        cnts = jnp.zeros((k, p), jnp.int32).at[rows, indices].add(1)
+        return sums, cnts, jnp.sum(jnp.min(d, axis=1)).astype(jnp.float32)
+
+    sums, cnts, obj = jax.vmap(one)(state.centers)
+    return sums, cnts, obj, jnp.int32(values.shape[0])
+
+
+def kmeans_apply(state: KMeansState, delta) -> KMeansState:
+    """Online per-coordinate mean update — the streaming form of Eq. 39.
+
+    new_center = (count·center + batch_sum) / (count + batch_count) wherever the
+    batch touched the coordinate; untouched coordinates keep their value (the
+    paper's never-sampled-coordinate convention).
+    """
+    sums, cnts, obj, n = delta
+    new_counts = state.counts + cnts
+    cnts_f = cnts.astype(jnp.float32)
+    centers = jnp.where(
+        cnts > 0,
+        state.centers + (sums - cnts_f * state.centers)
+        / jnp.maximum(new_counts, 1).astype(jnp.float32),
+        state.centers,
+    )
+    return KMeansState(centers, new_counts, state.obj + obj, state.count + n)
+
+
+def kmeans_finalize(state: KMeansState):
+    """(best centers (K, p) in the preconditioned domain, best accumulated obj)."""
+    best = jnp.argmin(state.obj)
+    return state.centers[best], state.obj[best]
+
+
+def kmeans_assign(centers_pre: jax.Array, batch: SparseRows) -> jax.Array:
+    """Nearest-center labels for sketched rows under the sparsified metric."""
+    d = sparse_sq_dists(batch.values, batch.indices, centers_pre)
+    return jnp.argmin(d, axis=1).astype(jnp.int32)

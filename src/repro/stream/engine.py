@@ -1,0 +1,298 @@
+"""StreamEngine — the paper's one-pass pipeline as a single jitted, shardable loop.
+
+Drives ``source → sketch → accumulate → finalize`` (paper §I's streaming and
+distributed settings, §IV–V estimators, §VI K-means):
+
+- **source** is any pure function ``(seed, step, shard) → (b, p) batch`` — the
+  (seed, step, shard) contract of repro.data.pipeline, so any worker can
+  regenerate any batch (straggler backup dispatch, exactly-once by construction);
+- **sketch** applies HD then R_i per sample with an *independent mask per
+  (step, shard) batch* (fold of the spec's mask key), preserving the per-sample
+  independence the estimators' guarantees hinge on;
+- **accumulate** folds each sketched batch into donated constant-memory
+  accumulators (repro.stream.accumulators) — Thm-4 mean, Thm-6 covariance, and
+  mini-batch streaming sparsified K-means;
+- **finalize** applies the closed-form debiasing once, after the last batch.
+
+Distribution: with ``mesh=``, the update runs under ``shard_map`` — every shard
+sketches and assigns locally, and the **only cross-shard traffic is the psum of
+the fixed-size accumulator deltas** ((p,) + (p,p) + (r,K,p)·2 per step,
+independent of batch size). Single-device and sharded engines fold identical
+per-(step, shard) sketches, so they agree to float-sum reordering
+(tests/test_stream.py asserts 1e-5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sketch as sketch_mod
+from repro.core.sampling import SparseRows
+from repro.stream import accumulators as acc
+from repro.utils.prng import fold_in_str
+
+Source = Callable[[int, int, int], Any]  # (seed, step, shard) -> (b, p) array
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamKMeansConfig:
+    """Mini-batch streaming sparsified K-means: K clusters, r parallel seeds."""
+
+    k: int
+    n_init: int = 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Everything the engine carries between batches — a donated pytree."""
+
+    moments: acc.MomentState
+    kmeans: acc.KMeansState | None
+
+    def tree_flatten(self):
+        return (self.moments, self.kmeans), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """Finalized one-pass estimates (mean/cov in the preconditioned domain when
+    the spec preconditions; kmeans centers returned in both domains)."""
+
+    mean: jax.Array | None
+    cov: jax.Array | None
+    count: jax.Array
+    centers: jax.Array | None = None        # original domain, (K, p)
+    centers_pre: jax.Array | None = None    # preconditioned domain, (K, p_pad)
+    kmeans_obj: jax.Array | None = None
+
+
+def batch_key(spec: sketch_mod.SketchSpec, step, shard) -> jax.Array:
+    """The per-(step, shard) mask key — every batch draws independent R_i."""
+    return jax.random.fold_in(jax.random.fold_in(spec.mask_key(), step), shard)
+
+
+def _normalize_source(source) -> Source:
+    """Adapt a source to (seed, step, shard) → batch. seed=None means "the
+    source's own default" (0 for plain callables); an explicit seed must not be
+    silently ignored, so batch_at objects that can't take one reject it."""
+    if callable(source):
+        return lambda seed, step, shard: source(0 if seed is None else seed, step, shard)
+    if hasattr(source, "batch_at"):
+        accepts_seed = "seed" in inspect.signature(source.batch_at).parameters
+
+        def from_obj(seed, step, shard):
+            if seed is None:
+                return source.batch_at(step, shard)
+            if not accepts_seed:
+                raise ValueError(
+                    "run(seed=...) given, but this source's batch_at() has no seed "
+                    "parameter — it streams its constructed seed; pass seed=None")
+            return source.batch_at(step, shard, seed=seed)
+
+        return from_obj
+    raise TypeError(f"source must be callable or expose batch_at, got {type(source)}")
+
+
+class StreamEngine:
+    """One-pass sharded estimation over a (seed, step, shard) batch stream.
+
+    Parameters
+    ----------
+    spec: the sketch (p, m, transform, key) — see repro.core.sketch.
+    source: ``(seed, step, shard) → (b, p)`` array, or an object with
+        ``batch_at(step, shard)`` (e.g. data.pipeline.VectorStreamSource).
+    n_shards: logical shards per step. Without a mesh they are folded
+        sequentially on one device; with a mesh they run data-parallel.
+    mesh / axis: optional jax Mesh and its data axis name; axis size must
+        equal ``n_shards``.
+    track_cov: accumulate the (p, p) second moment (Thm-6). Disable for
+        mean-only streams at very large p.
+    kmeans: optional :class:`StreamKMeansConfig` to run mini-batch streaming
+        sparsified K-means alongside the moment estimators.
+    impl: preconditioning backend forwarded to sketch ("auto" = Pallas kernel
+        on TPU, jnp butterfly elsewhere).
+    """
+
+    def __init__(self, spec: sketch_mod.SketchSpec, source, *, n_shards: int = 1,
+                 mesh=None, axis: str = "data", track_cov: bool = True,
+                 kmeans: StreamKMeansConfig | None = None, impl: str = "auto"):
+        self.spec = spec
+        self.source = _normalize_source(source)
+        self.n_shards = int(n_shards)
+        self.mesh = mesh
+        self.axis = axis
+        self.track_cov = track_cov
+        self.kmeans = kmeans
+        self.impl = impl
+        if mesh is not None and mesh.shape[axis] != self.n_shards:
+            raise ValueError(
+                f"mesh axis {axis!r} has size {mesh.shape[axis]}, need n_shards={n_shards}")
+        if track_cov and spec.m < 2:
+            # fail before streaming, not at finalize (Thm B4 needs m ≥ 2)
+            raise ValueError(f"track_cov needs m >= 2, got m={spec.m}; "
+                             "raise gamma/m or pass track_cov=False")
+        self._update = jax.jit(self._build_update(), donate_argnums=0)
+        self._scan = None  # compiled-once lax.scan over a whole stream
+        self.state: EngineState | None = None  # set by run()/run_scanned()
+
+    # ------------------------------------------------------------ plumbing --
+
+    def _sketch_local(self, x, step, shard) -> SparseRows:
+        return sketch_mod.sketch(jnp.asarray(x), self.spec,
+                                 batch_key=batch_key(self.spec, step, shard),
+                                 impl=self.impl)
+
+    def _deltas(self, state: EngineState, batch: SparseRows):
+        md = acc.moment_delta(batch, track_cov=self.track_cov)
+        kd = acc.kmeans_delta(state.kmeans, batch) if state.kmeans is not None else None
+        return md, kd
+
+    def _apply(self, state: EngineState, deltas) -> EngineState:
+        md, kd = deltas
+        return EngineState(
+            moments=acc.moment_apply(state.moments, md),
+            kmeans=acc.kmeans_apply(state.kmeans, kd) if kd is not None else state.kmeans,
+        )
+
+    def _build_update(self):
+        """update(state, x (n_shards, b, p), step) → state, single-device or
+        shard_map'd; both fold the same per-(step, shard) sketches."""
+
+        def local_deltas(state, x, step, shard):
+            return self._deltas(state, self._sketch_local(x, step, shard))
+
+        if self.mesh is None:
+            def update(state, x, step):
+                # same semantics as the psum path: every shard's delta is taken
+                # against the step-start state, summed, then applied once.
+                deltas = local_deltas(state, x[0], step, 0)
+                for shard in range(1, self.n_shards):
+                    d = local_deltas(state, x[shard], step, shard)
+                    deltas = jax.tree.map(jnp.add, deltas, d)
+                return self._apply(state, deltas)
+            return update
+
+        axis = self.axis
+        state_spec = P()  # replicated accumulators; deltas psum'd each step
+
+        def sharded_update(state, x, step):
+            deltas = local_deltas(state, x[0], step, jax.lax.axis_index(axis))
+            deltas = jax.lax.psum(deltas, axis)  # the only cross-shard traffic
+            return self._apply(state, deltas)
+
+        return shard_map(
+            sharded_update, mesh=self.mesh,
+            in_specs=(state_spec, P(axis), state_spec),
+            out_specs=state_spec,
+        )
+
+    # ------------------------------------------------------------- running --
+
+    def init_state(self, seed: int | None = None) -> EngineState:
+        """Fresh accumulators; K-means hypotheses seed from the step-0 global
+        batch (replicated, so sharded and single-device runs start identically)."""
+        km = None
+        if self.kmeans is not None:
+            x0 = self._host_global_batch(seed, 0, device_put=False)
+            # shard id n_shards is never used by the stream — an independent mask
+            s0 = self._sketch_local(x0.reshape(-1, x0.shape[-1]), jnp.int32(0), self.n_shards)
+            km = acc.kmeans_init(fold_in_str(self.spec.key, "stream-kmeans"), s0,
+                                 self.kmeans.k, self.kmeans.n_init)
+        return EngineState(
+            moments=acc.moment_init(self.spec.p_pad, track_cov=self.track_cov),
+            kmeans=km,
+        )
+
+    def _host_global_batch(self, seed, step, device_put: bool = True):
+        x = np.stack([np.asarray(self.source(seed, step, s)) for s in range(self.n_shards)])
+        if device_put and self.mesh is not None:
+            x = jax.device_put(x, NamedSharding(self.mesh, P(self.axis)))
+        return x
+
+    def update(self, state: EngineState, x, step) -> EngineState:
+        """Fold one global batch x (n_shards, b, p); x's leading axis is the
+        shard axis (row-sharded under a mesh)."""
+        return self._update(state, x, jnp.int32(step))
+
+    def run(self, steps: int, seed: int | None = None,
+            state: EngineState | None = None) -> StreamResult:
+        """Pull ``steps`` global batches from the source and fold them.
+
+        ``seed`` is forwarded to the source (None = the source's own default);
+        it only selects the data stream — sketch masks key off the spec."""
+        state = state if state is not None else self.init_state(seed)
+        for step in range(steps):
+            state = self.update(state, self._host_global_batch(seed, step), step)
+        self.state = state
+        return self.finalize(state)
+
+    def run_scanned(self, xs) -> StreamResult:
+        """Fold a pre-staged stream ``xs (steps, n_shards, b, p)`` as ONE jitted
+        lax.scan — the hardware-rate hot loop used by benchmarks/stream_bench.py."""
+        state = self.init_from_array(xs)
+        if self._scan is None:
+            update = self._build_update()
+
+            @jax.jit
+            def scan_all(state, xs):
+                def body(st, inp):
+                    step, x = inp
+                    return update(st, x, step), None
+                steps = xs.shape[0]
+                st, _ = jax.lax.scan(body, state, (jnp.arange(steps, dtype=jnp.int32), xs))
+                return st
+
+            self._scan = scan_all
+        self.state = self._scan(state, jnp.asarray(xs))
+        return self.finalize(self.state)
+
+    def init_from_array(self, xs) -> EngineState:
+        km = None
+        if self.kmeans is not None:
+            x0 = jnp.asarray(xs[0]).reshape(-1, xs.shape[-1])
+            s0 = self._sketch_local(x0, jnp.int32(0), self.n_shards)
+            km = acc.kmeans_init(fold_in_str(self.spec.key, "stream-kmeans"), s0,
+                                 self.kmeans.k, self.kmeans.n_init)
+        return EngineState(
+            moments=acc.moment_init(self.spec.p_pad, track_cov=self.track_cov),
+            kmeans=km,
+        )
+
+    # ---------------------------------------------------------- finalizing --
+
+    def finalize(self, state: EngineState | None = None) -> StreamResult:
+        state = state if state is not None else self.state
+        if state is None:
+            raise RuntimeError("no stream folded yet — call run()/run_scanned(), "
+                               "or pass an EngineState explicitly")
+        mean = acc.moment_finalize_mean(state.moments, self.spec.m)
+        cov = (acc.moment_finalize_cov(state.moments, self.spec.m)
+               if self.track_cov else None)
+        centers = centers_pre = obj = None
+        if state.kmeans is not None:
+            centers_pre, obj = acc.kmeans_finalize(state.kmeans)
+            centers = sketch_mod.unmix_dense(centers_pre, self.spec)
+        return StreamResult(mean=mean, cov=cov, count=state.moments.count,
+                            centers=centers, centers_pre=centers_pre, kmeans_obj=obj)
+
+    def assign(self, batch: SparseRows, state: EngineState | None = None) -> jax.Array:
+        """Labels for already-sketched rows under the best hypothesis' centers."""
+        state = state if state is not None else self.state
+        if state is None or state.kmeans is None:
+            raise RuntimeError("no K-means state — construct the engine with a "
+                               "StreamKMeansConfig and run() a stream first")
+        centers_pre, _ = acc.kmeans_finalize(state.kmeans)
+        return acc.kmeans_assign(centers_pre, batch)

@@ -1,0 +1,57 @@
+"""shard_map one-shot reductions over row-sharded sketches.
+
+These are the batch (non-streaming) entry points of the same delta/psum algebra
+the StreamEngine loops: each shard computes its local accumulator delta from its
+rows, and the only collective is one psum of the fixed-size delta — (p,) for the
+mean, (p, p) for the covariance — regardless of how many rows each shard holds.
+repro.core.distributed delegates here, replacing its earlier global-view-jit
+wrappers with explicit collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sampling import SparseRows
+from repro.stream import accumulators as acc
+
+
+def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True) -> acc.MomentState:
+    """psum-reduced MomentState for a row-sharded sketch (replicated output)."""
+    p = s.p
+    n = s.values.shape[0]
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    # shard_map needs the row axis evenly divisible; zero-value pad rows add
+    # nothing to sum_w / sum_wwt, and the true n overrides the count below.
+    pad = -n % n_shards
+    values, indices = s.values, s.indices
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+
+    def local(values, indices):
+        delta = acc.moment_delta(SparseRows(values, indices, p), track_cov=track_cov)
+        for a in axes:
+            delta = jax.lax.psum(delta, a)
+        return delta
+
+    row_spec = P(axes if len(axes) > 1 else axes[0], None)
+    fn = shard_map(local, mesh=mesh, in_specs=(row_spec, row_spec), out_specs=P())
+    st = fn(values, indices)
+    return acc.MomentState(st.sum_w, st.sum_wwt, jnp.int32(n))
+
+
+def sharded_mean(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
+    """Thm-4 estimator with explicit psum accumulation (cross-shard traffic: (p,))."""
+    st = sharded_moments(s, mesh, axes, track_cov=False)
+    return acc.moment_finalize_mean(st, s.m)
+
+
+def sharded_cov(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
+    """Thm-6 estimator with explicit psum accumulation (cross-shard traffic: (p,p))."""
+    st = sharded_moments(s, mesh, axes, track_cov=True)
+    return acc.moment_finalize_cov(st, s.m)

@@ -7,6 +7,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a fresh interpreter and re-jits on 8 host devices —
+# minutes each, so they live in the slow lane (CI runs them separately).
+pytestmark = pytest.mark.slow
+
 ENV = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
            PYTHONPATH="src", JAX_PLATFORMS="cpu")
 
@@ -45,8 +49,15 @@ def test_sharded_estimators_match_single_device():
 
 
 def test_distributed_kmeans_matches():
+    """Sharded K-means reaches the same solution as single-device — up to a
+    cluster permutation: sharding reorders the scatter-add reductions, and the
+    O(1e-7) objective perturbation can flip the argmin between *equally good*
+    n_init runs whose clusters differ only in label order. The sketch itself is
+    bit-identical; we therefore compare objective, Hungarian-aligned centers,
+    and permutation-matched assignments (the sharding-invariant quantities)."""
     run_script("""
         import jax, jax.numpy as jnp, numpy as np
+        from scipy.optimize import linear_sum_assignment
         from repro.launch.mesh import make_host_mesh
         from repro.core import kmeans as km, sketch
         from repro.core import distributed as dist
@@ -61,9 +72,18 @@ def test_distributed_kmeans_matches():
         s = sketch.sketch(x, spec)
         mu1, a1, o1, _ = km.sparse_kmeans_core(s.values, s.indices, s.p, k, jax.random.PRNGKey(4))
         s_d = dist.sketch_sharded(x, spec, mesh)
+        assert bool(jnp.all(s.values == s_d.values)) and bool(jnp.all(s.indices == s_d.indices))
         mu2, a2, o2, _ = dist.distributed_kmeans(s_d, k, jax.random.PRNGKey(4), mesh)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4)
-        np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu2), atol=1e-4)
+        a1, a2 = np.asarray(a1), np.asarray(a2)
+        conf = np.zeros((k, k))
+        for i in range(k):
+            for j in range(k):
+                conf[i, j] = np.sum((a1 == i) & (a2 == j))
+        ri, ci = linear_sum_assignment(-conf)
+        assert conf[ri, ci].sum() == n, "assignments differ beyond a relabelling"
+        mu2_aligned = np.asarray(mu2)[ci]
+        np.testing.assert_allclose(mu2_aligned, np.asarray(mu1), atol=1e-4)
         print("kmeans-match OK")
     """)
 

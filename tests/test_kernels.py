@@ -1,9 +1,12 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode.
+
+Property-style sweeps are seeded pytest.mark.parametrize grids (no hypothesis
+dependency): each case derives (shape, data) deterministically from its seed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import fwht, ops, ref, sparse_assign
 
@@ -49,15 +52,13 @@ def test_sparse_assign_kernel_shapes(shape):
     assert bool(jnp.all(a == ar))
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    logp=st.integers(min_value=6, max_value=11),
-    n=st.integers(min_value=1, max_value=24),
-    seed=st.integers(min_value=0, max_value=2**31 - 1),
-)
-def test_property_fwht_kernel_random(logp, n, seed):
-    p = 1 << logp
-    key = jax.random.PRNGKey(seed)
+@pytest.mark.parametrize("seed", range(10))
+def test_property_fwht_kernel_random(seed):
+    """Seeded sweep over random (p, n): kernel == butterfly oracle."""
+    rng = np.random.default_rng(seed)
+    p = 1 << int(rng.integers(6, 12))
+    n = int(rng.integers(1, 25))
+    key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
     x = jax.random.normal(key, (n, p), jnp.float32)
     s = jax.random.rademacher(jax.random.fold_in(key, 1), (p,), jnp.float32)
     y = fwht.hd_precondition(x, s, interpret=True)

@@ -1,0 +1,208 @@
+"""Streaming sketch engine (repro.stream): streaming==batch, chunked FWHT at
+large p, sharded==single-device, and mini-batch streaming K-means quality."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators, kmeans as km, sampling, sketch
+from repro.kernels import fwht, ref
+from repro.stream import StreamEngine, StreamKMeansConfig, batch_key
+from tests.conftest import make_clusters
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------- streaming equals batch ---
+
+def test_streaming_equals_batch_mean_cov():
+    """Engine over B=4 batches == one-shot Thm-4/Thm-6 estimators on the
+    concatenation of the SAME per-(step, shard) sketches, to 1e-5."""
+    p, m, b, steps = 64, 16, 40, 4
+    spec = sketch.make_spec(p, jax.random.PRNGKey(1), m=m)
+    x_all = jax.random.normal(KEY, (steps * b, p))
+
+    def source(seed, step, shard):
+        return np.asarray(x_all[step * b:(step + 1) * b])
+
+    res = StreamEngine(spec, source, track_cov=True).run(steps)
+
+    batches = [sketch.sketch(x_all[i * b:(i + 1) * b], spec,
+                             batch_key=batch_key(spec, i, 0)) for i in range(steps)]
+    s_all = sampling.SparseRows(jnp.concatenate([s.values for s in batches]),
+                                jnp.concatenate([s.indices for s in batches]),
+                                spec.p_pad)
+    np.testing.assert_allclose(res.mean, estimators.mean_estimator(s_all),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(res.cov, estimators.cov_estimator(s_all),
+                               rtol=1e-4, atol=1e-5)
+    assert float(res.count) == steps * b
+
+
+def test_engine_consumes_pipeline_source():
+    """VectorStreamSource's (seed, step, shard) batch_at contract plugs in."""
+    from repro.data.pipeline import VectorStreamSource
+
+    src = VectorStreamSource(p=64, batch=32, seed=3)
+    spec = sketch.make_spec(64, jax.random.PRNGKey(4), gamma=0.25)
+    res = StreamEngine(spec, src, track_cov=False).run(3)
+    assert res.mean.shape == (64,)
+    assert float(res.count) == 96
+    assert res.cov is None
+
+
+def test_scanned_run_matches_eager_loop():
+    """run_scanned (one lax.scan) is bit-identical to the step-at-a-time loop."""
+    p, b, steps = 64, 32, 5
+    spec = sketch.make_spec(p, jax.random.PRNGKey(5), gamma=0.25)
+    data = jax.random.normal(KEY, (steps, 1, b, p))
+
+    def source(seed, step, shard):
+        return np.asarray(data[step, shard])
+
+    eng = StreamEngine(spec, source, kmeans=StreamKMeansConfig(k=3, n_init=2))
+    res_loop = eng.run(steps)
+    res_scan = eng.run_scanned(np.asarray(data))
+    np.testing.assert_array_equal(np.asarray(res_loop.mean), np.asarray(res_scan.mean))
+    np.testing.assert_array_equal(np.asarray(res_loop.cov), np.asarray(res_scan.cov))
+    np.testing.assert_array_equal(np.asarray(res_loop.centers), np.asarray(res_scan.centers))
+
+
+# ------------------------------------------------------- chunked FWHT -------
+
+@pytest.mark.parametrize("p", [1 << 16, 1 << 17])
+def test_chunked_fwht_matches_reference_large_p(p):
+    """The three-pass Kronecker schedule == the butterfly oracle above the old
+    MAX_P = 2^15 single-tile ceiling (interpret mode, CPU)."""
+    n = 2
+    key = jax.random.PRNGKey(p)
+    x = jax.random.normal(key, (n, p), jnp.float32)
+    s = jax.random.rademacher(jax.random.fold_in(key, 1), (p,), jnp.float32)
+    y = fwht.hd_precondition(x, s, interpret=True)
+    np.testing.assert_allclose(y, ref.ref_hd_precondition(x, s), atol=5e-4)
+
+
+@pytest.mark.slow
+def test_chunked_fwht_three_factor_branch():
+    """p = 2^19 exercises the a > 1 outer-factor pass (a=2, b=c=512)."""
+    p = 1 << 19
+    assert fwht.factor_p3(p) == (2, 512, 512)
+    x = jax.random.normal(KEY, (1, p), jnp.float32)
+    s = jax.random.rademacher(jax.random.PRNGKey(1), (p,), jnp.float32)
+    y = fwht.hd_precondition_chunked(x, s, interpret=True)
+    np.testing.assert_allclose(y, ref.ref_hd_precondition(x, s), atol=1e-3)
+
+
+def test_factor_p3_properties():
+    for logp in range(1, 28):
+        a, b, c = fwht.factor_p3(1 << logp)
+        assert a * b * c == 1 << logp
+        assert max(a, b, c) <= 512
+    with pytest.raises(ValueError):
+        fwht.factor_p3(3 << 10)
+    with pytest.raises(ValueError):
+        fwht.factor_p3(1 << 28)
+
+
+def test_ros_kernel_impl_roundtrip_large_p():
+    """precondition(impl=interpret) routes through the chunked kernel and stays
+    an isometry (so all the paper's guarantees carry over at p = 2^16)."""
+    from repro.core import ros
+
+    p = 1 << 16
+    x = jax.random.normal(KEY, (2, p))
+    y = ros.precondition(x, KEY, "hadamard", impl="interpret")
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=1),
+                               jnp.linalg.norm(x, axis=1), rtol=1e-4)
+    np.testing.assert_allclose(ros.unmix(y, KEY, "hadamard"), x, atol=1e-3)
+
+
+# ------------------------------------------ mini-batch streaming K-means ----
+
+def test_streaming_kmeans_matches_batch_accuracy():
+    """One-pass mini-batch streaming K-means reaches >= the clustering accuracy
+    of the full-Lloyd sparse_kmeans_core on the blobs fixture."""
+    x, labels, true_centers = make_clusters(KEY, n=1500, p=128, k=5)
+    b = 150
+    spec = sketch.make_spec(128, jax.random.PRNGKey(2), gamma=0.25)
+
+    def source(seed, step, shard):
+        return np.asarray(x[step * b:(step + 1) * b])
+
+    eng = StreamEngine(spec, source, kmeans=StreamKMeansConfig(k=5, n_init=3))
+    res = eng.run(10)
+    s_all = sketch.sketch(x, spec)
+    acc_stream = km.clustering_accuracy(eng.assign(s_all), labels, 5)
+    mu, a_b, _, _ = km.sparse_kmeans_core(s_all.values, s_all.indices, s_all.p, 5,
+                                          spec.signs_key(), n_init=3, max_iter=50)
+    acc_batch = km.clustering_accuracy(a_b, labels, 5)
+    assert acc_stream >= acc_batch, (acc_stream, acc_batch)
+    # unmixed centers land near the true generating centers
+    from scipy.optimize import linear_sum_assignment
+
+    d = np.linalg.norm(np.asarray(res.centers)[:, None, :]
+                       - np.asarray(true_centers)[None], axis=-1)
+    ri, ci = linear_sum_assignment(d)
+    assert float(d[ri, ci].mean()) < 2.0
+
+
+def test_stream_launcher_smoke(capsys):
+    """The CLI driver wires source→engine→finalize end-to-end."""
+    from repro.launch import stream as launch_stream
+
+    launch_stream.main(["--p", "256", "--gamma", "0.1", "--steps", "2",
+                        "--batch", "32", "--no-cov"])
+    out = capsys.readouterr().out
+    assert "streamed 64 rows" in out
+
+
+# ------------------------------------------------------ sharded streaming ---
+
+@pytest.mark.slow
+def test_sharded_streaming_matches_single_device():
+    """8-way shard_map streaming == single-device streaming, bit-for-bit here
+    (identical per-(step, shard) sketches; one psum of the deltas per step).
+    Subprocess so the test session keeps the real single device."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import sketch
+        from repro.stream import StreamEngine, StreamKMeansConfig
+
+        mesh = jax.make_mesh((8,), ("data",))
+        p, b, steps = 256, 16, 5
+        spec = sketch.make_spec(p, jax.random.PRNGKey(1), gamma=0.25)
+        data = jax.random.normal(jax.random.PRNGKey(0), (steps, 8, b, p))
+
+        def source(seed, step, shard):
+            return np.asarray(data[step, shard])
+
+        cfg = dict(n_shards=8, kmeans=StreamKMeansConfig(k=4, n_init=2))
+        res1 = StreamEngine(spec, source, **cfg).run(steps)
+        res8 = StreamEngine(spec, source, mesh=mesh, **cfg).run(steps)
+        np.testing.assert_allclose(np.asarray(res8.mean), np.asarray(res1.mean), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res8.cov), np.asarray(res1.cov), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res8.centers), np.asarray(res1.centers), atol=1e-5)
+        assert float(res8.count) == steps * 8 * b
+
+        # one-shot shard_map reductions handle row counts that don't divide the
+        # mesh (zero-pad rows contribute nothing; count stays the true n)
+        from repro.core import distributed as dist, estimators
+        x = jax.random.normal(jax.random.PRNGKey(2), (100, p))
+        s = sketch.sketch(x, spec)
+        np.testing.assert_allclose(np.asarray(dist.distributed_mean(s, mesh)),
+                                   np.asarray(estimators.mean_estimator(s)), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dist.distributed_cov(s, mesh)),
+                                   np.asarray(estimators.cov_estimator(s)), atol=1e-4)
+        print("sharded-streaming OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
