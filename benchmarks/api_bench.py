@@ -1,0 +1,45 @@
+"""Front-door overhead: the same PCA/mean job through every Plan backend.
+
+Times ``repro.api`` estimators fitting identical data on backend = batch /
+stream / sharded (1-device mesh on this container — the collectives still run,
+over an axis of size one), plus the compact vs dense covariance delta path.
+The point of the measurement: the unified layer's dispatch + chunked key
+discipline must cost ~nothing over calling the core functions directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.api import Plan, SparsifiedCov, SparsifiedPCA
+
+
+def run():
+    n, p = 8192, 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, p), jnp.float32)
+    plan = Plan(backend="batch", gamma=0.05, batch_size=2048)
+
+    for backend in ("batch", "stream", "sharded"):
+        pl = plan.replace(backend=backend)
+
+        def fit():
+            est = SparsifiedPCA(8, pl, key=1).fit(x)
+            return est.components_
+
+        us = timeit(fit, warmup=1, iters=3)
+        emit(f"api/pca/{backend}", us, f"rows_per_sec={n / (us / 1e6):,.0f}")
+
+    for path in ("dense", "compact"):
+        pl = plan.replace(backend="stream", cov_path=path, gamma=0.02)
+
+        def fit_cov():
+            return SparsifiedCov(pl, key=1).fit(x).cov_
+
+        us = timeit(fit_cov, warmup=1, iters=3)
+        emit(f"api/cov/{path}", us, f"rows_per_sec={n / (us / 1e6):,.0f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

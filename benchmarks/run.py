@@ -12,6 +12,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        api_bench,
         bigdata_kmeans,
         fig1_explained_variance,
         fig2_mean_bound,
@@ -37,6 +38,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench.run),
         ("grad_compress_bench", grad_compress_bench.run),
         ("stream_bench", stream_bench.run),
+        ("api_bench", api_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

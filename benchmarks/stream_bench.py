@@ -15,15 +15,16 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.core import sketch
-from repro.stream import StreamEngine
+from repro.api import Plan, make_engine
 
 
 def _bench_one(p: int, gamma: float, batch: int, steps: int, track_cov: bool):
     key = jax.random.PRNGKey(p + batch)
-    spec = sketch.make_spec(p, jax.random.fold_in(key, 1), gamma=gamma)
+    plan = Plan(backend="stream", gamma=gamma, batch_size=batch)
     xs = jax.random.normal(key, (steps, 1, batch, p), jnp.float32)
-    eng = StreamEngine(spec, lambda seed, step, shard: None, track_cov=track_cov)
+    eng = make_engine(plan, p, jax.random.fold_in(key, 1),
+                      lambda seed, step, shard: None, track_cov=track_cov)
+    spec = eng.spec
 
     def fold(xs):
         res = eng.run_scanned(xs)

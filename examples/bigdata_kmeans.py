@@ -2,50 +2,51 @@
 
     PYTHONPATH=src python examples/bigdata_kmeans.py
 
-Streams 500k samples in chunks, keeps only the 5% sketch, clusters it, and
-optionally takes the second pass for exact centers. Peak memory is the sketch
-(γ·dense) + one chunk.
+Streams 500k samples in chunks through ``SparsifiedKMeans.partial_fit``
+(backend "stream"), keeps only the 5% sketch, and clusters it at finalize.
+Peak memory is the sketch (γ·dense) + one chunk. The mini-batch variant
+(``algorithm="minibatch"``) drops even the sketch — constant memory.
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import Plan, SparsifiedKMeans
 from repro.core import kmeans as km
-from repro.core import sketch
 
 
 def main():
     n, p, k, chunk, gamma = 500_000, 128, 3, 25_000, 0.05
     key = jax.random.PRNGKey(0)
     centers = 2.0 * jax.random.normal(key, (k, p))
-    spec = sketch.make_spec(p, jax.random.PRNGKey(1), gamma=gamma)
 
     def make_chunk(i):
         kk = jax.random.fold_in(jax.random.PRNGKey(7), i)
         lab = jax.random.randint(kk, (chunk,), 0, k)
         return centers[lab] + 1.5 * jax.random.normal(jax.random.fold_in(kk, 1), (chunk, p)), lab
 
+    plan = Plan(backend="stream", gamma=gamma, batch_size=chunk)
+    est = SparsifiedKMeans(k, plan, key=jax.random.PRNGKey(1), n_init=2, max_iter=40)
+
     t0 = time.time()
-    vals, idxs, labels = [], [], []
+    labels = []
     for i in range(n // chunk):
         x, lab = make_chunk(i)                         # "loaded from disk"
-        s = sketch.sketch(x, spec, batch_key=jax.random.fold_in(spec.mask_key(), i))
-        vals.append(s.values); idxs.append(s.indices); labels.append(lab)
-    vals, idxs = jnp.concatenate(vals), jnp.concatenate(idxs)
+        est.partial_fit(x)
+        labels.append(lab)
     labels = jnp.concatenate(labels)
+    sketch_mb = est.spec_.m * chunk * (n // chunk) * 8 / 2**20
     print(f"pass 1 (sketch): {time.time()-t0:.1f}s — stored "
-          f"{(vals.size*4 + idxs.size*4)/2**20:.0f} MB vs {n*p*4/2**20:.0f} MB dense")
+          f"{sketch_mb:.0f} MB vs {n*p*4/2**20:.0f} MB dense")
 
     t0 = time.time()
-    mu_pre, assign, obj, iters = km.sparse_kmeans_core(
-        vals, idxs, spec.p_pad, k, spec.signs_key(), n_init=2, max_iter=40)
-    acc = km.clustering_accuracy(assign, labels, k)
-    print(f"cluster ({int(iters)} iters): {time.time()-t0:.1f}s — accuracy {acc:.3f}")
+    est.finalize()
+    acc = km.clustering_accuracy(est.labels_, labels, k)
+    print(f"cluster ({est.n_iter_} iters): {time.time()-t0:.1f}s — accuracy {acc:.3f}")
 
     # centers come back to the original domain WITHOUT another pass (paper §VII-B)
-    centers_hat = sketch.unmix_dense(mu_pre, spec)
-    d = jnp.linalg.norm(centers_hat[:, None] - centers[None], axis=-1)
+    d = jnp.linalg.norm(est.centers_[:, None] - centers[None], axis=-1)
     print("center error (min-matched):", float(jnp.min(d, axis=1).mean()))
 
 

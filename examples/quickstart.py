@@ -1,14 +1,17 @@
-"""Quickstart: the paper's pipeline end-to-end in ~40 lines.
+"""Quickstart: the paper's pipeline end-to-end through the unified API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. generate data  2. one-pass sketch (precondition + sample)  3. recover the
-mean, covariance, PCs and K-means clusters from 10% of the entries.
+1. generate data  2. pick a Plan (one-pass sketch config + execution backend)
+3. recover the mean, covariance spectrum, PCs and K-means clusters from 10% of
+the entries — the same estimators re-run on the "stream" backend by flipping
+one field.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimators, kmeans, pca, sketch
+from repro.api import Plan, SparsifiedKMeans, SparsifiedMean, SparsifiedPCA
+from repro.core import kmeans, pca
 
 
 def main():
@@ -20,26 +23,31 @@ def main():
     labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, k)
     x = centers[labels] + jax.random.normal(jax.random.fold_in(key, 2), (n, p))
 
-    # --- one-pass compression: keep 10% of entries ---------------------------
-    spec = sketch.make_spec(p, jax.random.fold_in(key, 3), gamma=0.10)
-    s = sketch.sketch(x, spec)          # SparseRows: values (n, m) + indices
-    print(f"kept {s.m}/{spec.p_pad} entries per sample "
-          f"({s.nbytes() / (n * p * 4):.2%} of dense storage)")
+    # --- one Plan: keep 10% of entries, batch backend ------------------------
+    plan = Plan(backend="batch", gamma=0.10, batch_size=4096)
 
-    # --- estimators straight from the sketch ---------------------------------
-    mean_hat = sketch.unmix_dense(estimators.mean_estimator(s)[None], spec)[0]
-    mean_err = float(jnp.linalg.norm(mean_hat - x.mean(0)) / jnp.linalg.norm(x.mean(0)))
+    est = SparsifiedMean(plan, key=3).fit(x)
+    s = est.sketch(x[:1])
+    print(f"kept {s.m}/{est.spec_.p_pad} entries per sample "
+          f"({s.nbytes() / (p * 4):.2%} of dense storage)")
+    mean_err = float(jnp.linalg.norm(est.mean_ - x.mean(0)) / jnp.linalg.norm(x.mean(0)))
     print(f"mean estimate relative error: {mean_err:.3f}")
 
-    res = pca.sparsified_pca(s, spec, k)
-    ev = float(pca.explained_variance(res.components, x))
+    # --- PCA straight from the sketch ----------------------------------------
+    res = SparsifiedPCA(k, plan, key=3).fit(x)
+    ev = float(pca.explained_variance(res.components_, x))
     ev_ideal = float(pca.explained_variance(pca.pca(x, k).components, x))
     print(f"explained variance from sketch: {ev:.3f} (dense PCA: {ev_ideal:.3f})")
 
+    # --- same job, streaming backend: flip one field -------------------------
+    res_s = SparsifiedPCA(k, plan.replace(backend="stream"), key=3).fit(x)
+    drift = float(jnp.max(jnp.abs(jnp.abs(res_s.components_ @ res.components_.T)
+                                  .diagonal() - 1.0)))
+    print(f"stream backend reproduces batch PCs to {drift:.1e}")
+
     # --- sparsified K-means (Alg. 1): one pass, centers + assignments --------
-    km = kmeans.sparsified_kmeans(x, k, jax.random.fold_in(key, 4), gamma=0.10,
-                                  n_init=3, max_iter=50)
-    acc = kmeans.clustering_accuracy(km.assignments, labels, k)
+    km = SparsifiedKMeans(k, plan, key=4, n_init=3, max_iter=50).fit(x)
+    acc = kmeans.clustering_accuracy(km.labels_, labels, k)
     print(f"sparsified K-means accuracy vs ground truth: {acc:.3f}")
 
 

@@ -4,36 +4,37 @@
 
 The stream never exists densely in memory — each batch is sketched on arrival
 (the paper's out-of-core setting, Tables III/IV) and folded into fixed-size
-accumulators; PCs are recovered at the end from the accumulators alone.
+accumulators via ``SparsifiedPCA`` on the "stream" backend; PCs are recovered
+at the end from the accumulators alone. ``fit_stream`` consumes any
+``(seed, step, shard) → (b, p)`` source under the repo-wide batch-key
+discipline, so the identical job runs sharded by flipping ``Plan.backend``.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimators, pca, sketch
-from repro.data.pipeline import SketchingPipeline, VectorStreamSource
+from repro.api import Plan, SparsifiedPCA
+from repro.data.pipeline import VectorStreamSource
 
 
 def main():
     p, batch, n_batches = 512, 2048, 40
     source = VectorStreamSource(p=p, batch=batch, seed=0, mode="lowrank", k=8)
-    spec = sketch.make_spec(p, jax.random.PRNGKey(1), gamma=0.08)
-    pipe = SketchingPipeline(source, spec)
+    plan = Plan(backend="stream", gamma=0.08, batch_size=batch)
 
-    state = estimators.stream_init(spec.p_pad)
-    for i in range(n_batches):
-        s = pipe.next_batch()                  # SparseRows — 8% of the stream
-        state = estimators.stream_update(state, s)
-    print(f"processed {int(state.count):,} samples; "
-          f"accumulators: {spec.p_pad}+{spec.p_pad}² floats (constant)")
+    est = SparsifiedPCA(8, plan, key=jax.random.PRNGKey(1))
+    est.fit_stream(source, steps=n_batches)
+    print(f"processed {est.count_:,} samples; "
+          f"accumulators: {est.spec_.p_pad}+{est.spec_.p_pad}² floats (constant)")
 
-    res = pca.pca_from_stream(state, spec, k=8)
     # compare against the stream's true planted basis
+    from repro.core import pca
+
     u_true = jnp.asarray(source._u.T)
-    overlap = jnp.abs(res.components @ u_true.T).max(axis=1)
+    overlap = jnp.abs(est.components_ @ u_true.T).max(axis=1)
     print("per-component |cos| overlap with planted basis:",
           [f"{float(o):.3f}" for o in overlap])
-    rec = int(pca.recovered_components(res.components, u_true, thresh=0.9))
-    print(f"recovered {rec}/8 planted components from a {spec.gamma:.0%} sketch")
+    rec = int(pca.recovered_components(est.components_, u_true, thresh=0.9))
+    print(f"recovered {rec}/8 planted components from a {est.spec_.gamma:.0%} sketch")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""repro.api — one front door over the paper's compression pipeline.
+
+A :class:`Plan` picks the execution engine (``backend="batch" | "stream" |
+"sharded"``, kernel ``impl``, batch geometry, mesh); the estimator classes —
+:class:`SparsifiedMean`, :class:`SparsifiedCov`, :class:`SparsifiedPCA`,
+:class:`SparsifiedKMeans`, :class:`GradCompressor` — share one
+``SketchSpec``-derived key discipline (``sketch.batch_key(spec, step, shard)``)
+and a ``fit / partial_fit / finalize / transform`` contract. Backends fold the
+same per-(step, shard) sketches, so flipping ``Plan.backend`` re-runs the same
+job tolerance-identically on a different engine::
+
+    from repro.api import Plan, SparsifiedPCA
+
+    plan = Plan(backend="batch", gamma=0.05, batch_size=2048)
+    p1 = SparsifiedPCA(8, plan, key=0).fit(x)
+    p2 = SparsifiedPCA(8, plan.replace(backend="stream"), key=0).fit(x)
+    # p1.components_ == p2.components_ to float-sum reordering (1e-5)
+
+For unbounded sources (and the K-means/moments fused single pass), the same
+Plan also constructs a :class:`repro.stream.StreamEngine` via
+:func:`make_engine` — the launcher ``repro.launch.stream`` is a thin shim over
+this.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.api.estimators import (  # noqa: F401
+    GradCompressor,
+    SketchedEstimator,
+    SparsifiedCov,
+    SparsifiedKMeans,
+    SparsifiedMean,
+    SparsifiedPCA,
+    as_key,
+)
+from repro.api.plan import BACKENDS, Plan  # noqa: F401
+
+
+def make_engine(plan: Plan, p: int, key, source, *, track_cov: bool = True,
+                kmeans=None):
+    """Construct a :class:`repro.stream.StreamEngine` from a Plan.
+
+    The engine is the fused one-pass runner (moments + streaming K-means over
+    one sketch of each batch); backends "stream" (no mesh, shards folded
+    sequentially) and "sharded" (shard_map over ``plan.resolve_mesh()``) apply.
+    """
+    from repro.stream import StreamEngine
+
+    if plan.backend not in ("stream", "sharded"):
+        raise ValueError(
+            f'make_engine needs backend "stream" or "sharded", got {plan.backend!r}; '
+            "for in-memory data use the estimator classes directly")
+    spec = plan.spec(p, as_key(key))
+    mesh = plan.resolve_mesh() if plan.backend == "sharded" else None
+    return StreamEngine(spec, source, n_shards=plan.n_shards, mesh=mesh,
+                        axis=plan.axis, track_cov=track_cov, kmeans=kmeans,
+                        impl=plan.impl, cov_path=plan.cov_path)

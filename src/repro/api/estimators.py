@@ -1,0 +1,466 @@
+"""Estimator classes: fit / partial_fit / finalize over any :class:`Plan` backend.
+
+One compression operator feeding many consumers (the paper's pitch) as one
+class family: every estimator sketches its input in consecutive
+``plan.batch_size`` chunks, keys chunk j's mask with
+``sketch.batch_key(spec, step=j // n_shards, shard=j % n_shards)``, and hands
+the sketches to the plan's backend —
+
+- ``batch``:   keep the (γ·dense) sketch, one-shot ``repro.core`` estimators;
+- ``stream``:  fold constant-memory accumulator deltas
+               (``repro.stream.accumulators``) batch by batch;
+- ``sharded``: reduce with the ``repro.stream.sharded`` shard_map collectives
+               (one psum of the fixed-size accumulator over the mesh).
+
+Because all three fold the *same* per-(step, shard) sketches, results agree to
+float-summation reordering (tests/test_api.py asserts 1e-5) — the backend is a
+pure execution choice.
+
+Fitted attributes follow the sklearn trailing-underscore convention; estimates
+come back in the ORIGINAL domain (eigenvectors / means / centers unmixed by
+(HD)ᵀ) unless noted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.plan import BACKENDS, Plan
+from repro.core import estimators as est
+from repro.core import kmeans as km
+from repro.core import pca as pca_mod
+from repro.core import sketch as sketch_mod
+from repro.core.grad_compress import CompressConfig, compress_grads, mask_spec
+from repro.core.sampling import SparseRows
+from repro.core.sketch import batch_key
+from repro.stream import accumulators as acc
+from repro.stream import sharded as sharded_mod
+from repro.utils.prng import fold_in_str
+
+
+def as_key(key: jax.Array | int) -> jax.Array:
+    """Accept an int seed or a PRNGKey — the one key-normalization point."""
+    if isinstance(key, (int,)):
+        return jax.random.PRNGKey(key)
+    return key
+
+
+# ------------------------------------------------------------ moment core ---
+# The backend registry: one reduce function per Plan.backend, each mapping a
+# reducer's folded state to (mean_pre, cov_pre | None, count) through the
+# pre-existing implementation it wraps — core one-shot estimators,
+# stream accumulators, or the stream.sharded shard_map collectives.
+
+MOMENT_BACKENDS: dict[str, "callable"] = {}
+
+
+def _moment_backend(name: str):
+    def register(fn):
+        MOMENT_BACKENDS[name] = fn
+        return fn
+    return register
+
+
+@_moment_backend("batch")
+def _reduce_batch(r: "_MomentReducer"):
+    s_all = r.concat()
+    mean = est.mean_estimator(s_all)
+    cov = (est.cov_estimator(s_all, path=r.plan.cov_path) if r.track_cov else None)
+    return mean, cov, jnp.int32(s_all.n)
+
+
+@_moment_backend("stream")
+def _reduce_stream(r: "_MomentReducer"):
+    st = r.state
+    if int(st.count) == 0:
+        raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
+    cov = acc.moment_finalize_cov(st, r.spec.m) if r.track_cov else None
+    return acc.moment_finalize_mean(st, r.spec.m), cov, st.count
+
+
+@_moment_backend("sharded")
+def _reduce_sharded(r: "_MomentReducer"):
+    st = sharded_mod.sharded_moments(r.concat(), r.plan.resolve_mesh(),
+                                     (r.plan.axis,), track_cov=r.track_cov,
+                                     cov_path=r.plan.cov_path)
+    cov = acc.moment_finalize_cov(st, r.spec.m) if r.track_cov else None
+    return acc.moment_finalize_mean(st, r.spec.m), cov, st.count
+
+
+assert set(MOMENT_BACKENDS) == set(BACKENDS), "registry out of sync with Plan.BACKENDS"
+
+
+class _MomentReducer:
+    """Backend-dispatched reduction of sketched batches to (mean, cov, count).
+
+    ``fold`` ingests one per-(step, shard) sketch; ``reduce`` dispatches
+    through :data:`MOMENT_BACKENDS` for the Thm-4 / Thm-6 estimates.
+    """
+
+    def __init__(self, plan: Plan, spec: sketch_mod.SketchSpec, track_cov: bool,
+                 keep_sketch: bool = False, needs_moments: bool = True):
+        self.plan, self.spec, self.track_cov = plan, spec, track_cov
+        self.keep_sketch = keep_sketch or plan.backend in ("batch", "sharded")
+        self.parts: list[SparseRows] = []
+        # moment state only where reduce() will read it (K-means never does)
+        self.state = (acc.moment_init(spec.p_pad, track_cov=track_cov)
+                      if plan.backend == "stream" and needs_moments else None)
+
+    def fold(self, s: SparseRows) -> None:
+        if self.state is not None:
+            self.state = est.stream_update(self.state, s, cov_path=self.plan.cov_path)
+        if self.keep_sketch:
+            self.parts.append(s)
+
+    def concat(self) -> SparseRows:
+        if not self.parts:
+            raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
+        return SparseRows(jnp.concatenate([s.values for s in self.parts]),
+                          jnp.concatenate([s.indices for s in self.parts]),
+                          self.spec.p_pad)
+
+    def reduce(self):
+        """(mean_pre, cov_pre | None, count) via the plan's backend."""
+        return MOMENT_BACKENDS[self.plan.backend](self)
+
+
+# -------------------------------------------------------------- base class --
+
+
+class SketchedEstimator:
+    """Shared fit / partial_fit / finalize plumbing.
+
+    Subclasses set ``_track_cov`` / ``_keep_sketch`` and implement
+    ``_finalize()`` from the reducer. ``fit(X)`` = reset → partial_fit(X) →
+    finalize; ``partial_fit`` may be called any number of times with (rows, p)
+    arrays (each call consumes its input in ``plan.batch_size`` chunks, so a
+    stream fed in batch_size pieces reproduces ``fit`` of the concatenation
+    exactly); ``finalize()`` computes the fitted attributes and returns self.
+    """
+
+    _track_cov = False
+    _keep_sketch = False
+    _needs_moments = True  # False when _finalize never calls reducer.reduce()
+
+    def __init__(self, plan: Plan, key: jax.Array | int = 0):
+        self.plan = plan
+        self.key = as_key(key)
+        self.reset()
+
+    # ------------------------------------------------------------ lifecycle --
+
+    def reset(self) -> "SketchedEstimator":
+        """Drop all folded state (spec is re-derived at the next first batch)."""
+        self.spec_: sketch_mod.SketchSpec | None = None
+        self._reducer: _MomentReducer | None = None
+        self._chunk = 0
+        self.count_ = 0
+        self._fitted = False
+        return self
+
+    def _ensure_spec(self, p: int) -> None:
+        if self.spec_ is None:
+            self.spec_ = self.plan.spec(p, self.key)
+            self._reducer = _MomentReducer(self.plan, self.spec_, self._track_cov,
+                                           keep_sketch=self._keep_sketch,
+                                           needs_moments=self._needs_moments)
+            self._on_spec(self.spec_)
+        elif self.spec_.p != p:
+            raise ValueError(f"batch has p={p}, but this estimator was started "
+                             f"with p={self.spec_.p}; call reset() to refit")
+
+    def _on_spec(self, spec: sketch_mod.SketchSpec) -> None:
+        """Subclass hook: validate the spec once it exists (e.g. m >= 2)."""
+
+    def partial_fit(self, x) -> "SketchedEstimator":
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"expected (rows, p) data, got shape {x.shape}")
+        x = x.astype(self.plan.dtype)
+        self._ensure_spec(x.shape[1])
+        bs = self.plan.batch_size
+        for i in range(0, x.shape[0], bs):
+            self._fold_rows(x[i:i + bs])
+        return self
+
+    def _fold_rows(self, rows: jax.Array) -> None:
+        step, shard = self.plan.step_shard(self._chunk)
+        s = sketch_mod.sketch(rows, self.spec_,
+                              batch_key=batch_key(self.spec_, step, shard),
+                              impl=self.plan.impl)
+        self._fold_sketch(s, step, shard)
+        self._chunk += 1
+        self.count_ += int(rows.shape[0])
+
+    def _fold_sketch(self, s: SparseRows, step: int, shard: int) -> None:
+        self._reducer.fold(s)
+
+    def fit(self, x) -> "SketchedEstimator":
+        self.reset()
+        self.partial_fit(x)
+        return self.finalize()
+
+    def fit_stream(self, source, steps: int, seed: int | None = None) -> "SketchedEstimator":
+        """One pass over a ``(seed, step, shard) → (b, p)`` source (the
+        repro.data.pipeline / StreamEngine contract): each (step, shard) batch
+        is folded under exactly that (step, shard) mask key."""
+        from repro.stream.engine import _normalize_source
+
+        src = _normalize_source(source)
+        self.reset()
+        for step in range(steps):
+            for shard in range(self.plan.n_shards):
+                rows = jnp.asarray(src(seed, step, shard)).astype(self.plan.dtype)
+                self._ensure_spec(rows.shape[1])
+                self._fold_rows(rows)
+        return self.finalize()
+
+    def finalize(self) -> "SketchedEstimator":
+        if self.spec_ is None:
+            raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
+        self._finalize()
+        self._fitted = True
+        return self
+
+    def _finalize(self) -> None:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- utility --
+
+    def sketch(self, x) -> SparseRows:
+        """The fitted compression operator applied to new rows (one-shot mask)."""
+        if self.spec_ is None:
+            self._ensure_spec(jnp.asarray(x).shape[-1])
+        return sketch_mod.sketch(jnp.asarray(x).astype(self.plan.dtype), self.spec_,
+                                 impl=self.plan.impl)
+
+    def _unmix_vec(self, v_pre: jax.Array) -> jax.Array:
+        return sketch_mod.unmix_dense(v_pre[None, :], self.spec_)[0]
+
+
+# ----------------------------------------------------------- the estimators --
+
+
+class SparsifiedMean(SketchedEstimator):
+    """Thm-4 unbiased mean from the sketch alone.
+
+    Fitted: ``mean_`` (p, original domain), ``mean_pre_`` (p_pad,
+    preconditioned domain), ``count_``.
+    """
+
+    _track_cov = False
+
+    def _finalize(self) -> None:
+        mean_pre, _, n = self._reducer.reduce()
+        self.mean_pre_ = mean_pre
+        self.mean_ = self._unmix_vec(mean_pre)
+        self.count_ = int(n)
+
+
+class SparsifiedCov(SketchedEstimator):
+    """Thm-6 unbiased covariance (uncentered second moment) from the sketch.
+
+    Fitted: ``cov_`` ((p_pad, p_pad), PRECONDITIONED domain — the spectrum
+    equals the original's since HD is orthonormal), ``mean_pre_``, ``mean_``,
+    ``count_``. Use :meth:`cov_original` for the (p, p) original-domain matrix.
+    """
+
+    _track_cov = True
+
+    def _on_spec(self, spec: sketch_mod.SketchSpec) -> None:
+        if spec.m < 2:
+            raise ValueError(f"covariance needs m >= 2 (Thm B4), got m={spec.m}; "
+                             "raise gamma/m")
+
+    def _finalize(self) -> None:
+        mean_pre, cov_pre, n = self._reducer.reduce()
+        self.mean_pre_ = mean_pre
+        self.mean_ = self._unmix_vec(mean_pre)
+        self.cov_ = cov_pre
+        self.count_ = int(n)
+
+    def cov_original(self) -> jax.Array:
+        """(p, p) covariance in the original domain: (HD)ᵀ Ĉ_pre (HD)."""
+        c1 = sketch_mod.unmix_dense(self.cov_, self.spec_)        # rows still pre-domain
+        return sketch_mod.unmix_dense(c1.T, self.spec_)
+
+
+class SparsifiedPCA(SketchedEstimator):
+    """Principal components from the sketched covariance (paper §V).
+
+    Fitted: ``components_`` ((n_components, p), original domain, rows are PCs),
+    ``explained_variance_`` (eigenvalues, descending), ``mean_``, ``count_``.
+    """
+
+    _track_cov = True
+
+    def __init__(self, n_components: int, plan: Plan, key: jax.Array | int = 0):
+        self.n_components = int(n_components)
+        super().__init__(plan, key)
+
+    def _on_spec(self, spec: sketch_mod.SketchSpec) -> None:
+        if spec.m < 2:
+            raise ValueError(f"PCA needs m >= 2 (Thm B4 covariance), got m={spec.m}")
+
+    def _finalize(self) -> None:
+        mean_pre, cov_pre, n = self._reducer.reduce()
+        comps_pre, evals = pca_mod._top_eig(cov_pre, self.n_components)
+        self.components_ = sketch_mod.unmix_dense(comps_pre, self.spec_)
+        self.explained_variance_ = evals
+        self.mean_ = self._unmix_vec(mean_pre)
+        self.count_ = int(n)
+
+    def transform(self, x) -> jax.Array:
+        """Project rows onto the fitted components (original domain, uncentered
+        — the paper's convention)."""
+        return jnp.asarray(x).astype(self.plan.dtype) @ self.components_.T
+
+    def result(self) -> pca_mod.PCAResult:
+        return pca_mod.PCAResult(self.components_, self.explained_variance_, self.mean_)
+
+
+class SparsifiedKMeans(SketchedEstimator):
+    """Sparsified K-means over any backend.
+
+    algorithm="lloyd" (default, paper Alg. 1): the sketch — the γ-compressed
+    dataset, which is the point of the method — is retained, and full Lloyd
+    (``sparse_kmeans_core``; under the sharded backend, the same solver inside
+    the mesh context à la ``core.distributed.distributed_kmeans``) runs at
+    finalize. Fitted ``labels_`` covers every row folded.
+
+    algorithm="minibatch": the constant-memory streaming accumulators of
+    ``repro.stream.accumulators`` (online Eq. 39 update, r = n_init parallel
+    hypotheses) — nothing is retained but the (r, K, p_pad) centers/counts.
+    The fold is identical on every backend (per-step deltas against the
+    step-start state, as the StreamEngine computes them), so backends stay
+    tolerance-identical; ``labels_`` is None (use :meth:`predict`).
+
+    Fitted: ``centers_`` ((k, p), original domain), ``centers_pre_``,
+    ``objective_``, ``labels_``, ``n_iter_`` (lloyd), ``count_``.
+    """
+
+    _track_cov = False
+    _keep_sketch = True  # lloyd needs the sketch on every backend
+    _needs_moments = False  # centers come from the solver, not Thm-4/6
+
+    def __init__(self, k: int, plan: Plan, key: jax.Array | int = 0, *,
+                 n_init: int = 3, max_iter: int = 100, tol: float = 1e-6,
+                 algorithm: str = "lloyd"):
+        if algorithm not in ("lloyd", "minibatch"):
+            raise ValueError(f"algorithm must be 'lloyd' or 'minibatch', got {algorithm!r}")
+        self.k = int(k)
+        self.n_init = int(n_init)
+        self.max_iter = int(max_iter)
+        self.tol = float(tol)
+        self.algorithm = algorithm
+        self._keep_sketch = algorithm == "lloyd"
+        super().__init__(plan, key)
+
+    def reset(self) -> "SparsifiedKMeans":
+        super().reset()
+        self._km_state: acc.KMeansState | None = None
+        self._km_pending = None  # buffered deltas of the in-flight step
+        return self
+
+    # --------------------------------------------------------- minibatch ----
+
+    def _fold_sketch(self, s: SparseRows, step: int, shard: int) -> None:
+        if self.algorithm == "lloyd":
+            self._reducer.fold(s)
+            return
+        if self._km_state is None:
+            self._km_state = acc.kmeans_init(
+                fold_in_str(self.spec_.key, "api-kmeans"), s, self.k, self.n_init)
+        # engine semantics: every shard's delta is taken against the step-start
+        # state, summed, and applied once per step — backend-independent.
+        d = acc.kmeans_delta(self._km_state, s)
+        self._km_pending = (d if self._km_pending is None
+                            else jax.tree.map(jnp.add, self._km_pending, d))
+        if shard == self.plan.n_shards - 1:
+            self._flush_step()
+
+    def _flush_step(self) -> None:
+        if self._km_pending is not None:
+            self._km_state = acc.kmeans_apply(self._km_state, self._km_pending)
+            self._km_pending = None
+
+    # ----------------------------------------------------------- finalize ---
+
+    def _finalize(self) -> None:
+        if self.algorithm == "minibatch":
+            self._flush_step()
+            if self._km_state is None:
+                raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
+            centers_pre, obj = acc.kmeans_finalize(self._km_state)
+            self.labels_ = None
+            self.n_iter_ = None
+            self.count_ = int(self._km_state.count)
+        else:
+            s_all = self._reducer.concat()
+            init_key = fold_in_str(self.spec_.key, "api-kmeans")
+            if self.plan.backend == "sharded":
+                from repro.core import distributed as dist
+
+                centers_pre, a, obj, it = dist.distributed_kmeans(
+                    s_all, self.k, init_key, self.plan.resolve_mesh(),
+                    n_init=self.n_init, max_iter=self.max_iter, tol=self.tol)
+            else:
+                centers_pre, a, obj, it = km.sparse_kmeans_core(
+                    s_all.values, s_all.indices, s_all.p, self.k, init_key,
+                    n_init=self.n_init, max_iter=self.max_iter, tol=self.tol)
+            self.labels_ = a
+            self.n_iter_ = int(it)
+        self.centers_pre_ = centers_pre
+        self.centers_ = sketch_mod.unmix_dense(centers_pre, self.spec_)
+        self.objective_ = obj
+
+    def predict(self, x) -> jax.Array:
+        """Nearest-center labels for new rows (sketched with a one-shot mask)."""
+        s = self.sketch(x)
+        return acc.kmeans_assign(self.centers_pre_, s)
+
+
+# --------------------------------------------------------- grad compressor --
+
+
+class GradCompressor:
+    """The paper's estimator as a stateful gradient compressor — one front door
+    over ``core.grad_compress`` sharing the repo's (seed, step, shard) key
+    discipline: masks are ``sketch.batch_key(mask_spec(cfg, key), step, shard)``,
+    exactly as a stream shard's data masks are.
+
+    Holds the error-feedback residual and a step cursor; ``transform`` (alias
+    ``compress``) is the per-step round trip. For jitted training loops keep
+    using the pure ``core.grad_compress.compress_grads`` with the same cfg/key
+    — the masks are identical by construction.
+    """
+
+    def __init__(self, cfg: CompressConfig = CompressConfig(),
+                 key: jax.Array | int = 0, shard: int = 0):
+        self.cfg = cfg
+        self.key = as_key(key)
+        self.shard = int(shard)
+        self.spec_ = mask_spec(cfg, self.key)
+        self.reset()
+
+    def reset(self) -> "GradCompressor":
+        self.residual_ = None
+        self.step_ = 0
+        self.wire_floats_ = 0
+        return self
+
+    def transform(self, grads, step: int | None = None):
+        """Compress-decompress one gradient pytree; returns ĝ (same structure).
+
+        ``step`` defaults to the internal cursor (auto-incremented); pass the
+        trainer's step to stay aligned with a resumed run.
+        """
+        s = self.step_ if step is None else int(step)
+        g_hat, self.residual_, wire = compress_grads(
+            grads, self.key, jnp.int32(s), self.cfg,
+            residual=self.residual_, shard=self.shard)
+        self.wire_floats_ = wire
+        self.step_ = s + 1
+        return g_hat
+
+    compress = transform

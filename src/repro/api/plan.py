@@ -1,0 +1,106 @@
+"""The execution :class:`Plan` — one config object selecting how a sketch job runs.
+
+A Plan captures everything about *how* an estimator executes — backend
+(in-memory batch, constant-memory streaming accumulators, or shard_map
+collectives), kernel choice, batch geometry, mesh — and nothing about *what*
+is estimated (that's the estimator class) or the randomness (that's the key
+handed to ``fit``). Flipping ``backend`` re-runs the same job on a different
+execution engine with tolerance-identical results, because every backend folds
+the same per-(step, shard) sketches under the shared
+:func:`repro.core.sketch.batch_key` discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+
+from repro.core import ros, sketch
+
+Backend = Literal["batch", "stream", "sharded"]
+
+BACKENDS: tuple[str, ...] = ("batch", "stream", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """How a sketched-estimation job executes.
+
+    backend:    "batch"   — sketch everything, then one-shot ``repro.core``
+                            estimators on the concatenated sketch;
+                "stream"  — fold per-batch accumulator deltas
+                            (``repro.stream.accumulators``), constant memory
+                            for the moment estimators;
+                "sharded" — reduce via the ``repro.stream.sharded`` shard_map
+                            collectives over ``mesh`` (one psum of the
+                            fixed-size accumulator per reduction).
+    gamma / m:  sketch size — fraction kept (validated to (0, 1]) or absolute
+                coordinate count; exactly one is required.
+    transform:  ROS preconditioner ("hadamard" or "dct").
+    impl:       Hadamard kernel choice forwarded to ``ros.precondition``
+                ("auto" = Pallas kernel on TPU, jnp butterfly elsewhere).
+    batch_size: rows per (step, shard) batch. fit/partial_fit consume their
+                input in consecutive chunks of this size; chunk j is keyed
+                (step = j // n_shards, shard = j % n_shards), so every backend
+                sees identical per-batch masks.
+    n_shards:   logical shards per step (the shard axis of the key discipline).
+    axis:       mesh axis name for the sharded backend.
+    mesh:       jax Mesh for the sharded backend; None auto-builds a
+                (n_shards,)-device mesh at first use.
+    cov_path:   covariance delta path — "dense" (scatter to (b, p), one MXU
+                matmul) or "compact" (scatter b·m² outer products; the γ ≪ 1
+                memory fix — no dense (b, p) intermediate).
+    dtype:      input rows are cast to this before sketching.
+    """
+
+    backend: Backend = "batch"
+    gamma: float | None = None
+    m: int | None = None
+    transform: ros.Transform = "hadamard"
+    impl: str = "auto"
+    batch_size: int = 4096
+    n_shards: int = 1
+    axis: str = "data"
+    mesh: Any | None = None
+    cov_path: Literal["dense", "compact"] = "dense"
+    dtype: Any = "float32"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.cov_path not in ("dense", "compact"):
+            raise ValueError(f"cov_path must be 'dense' or 'compact', got {self.cov_path!r}")
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.mesh is not None and self.mesh.shape[self.axis] != self.n_shards:
+            raise ValueError(
+                f"mesh axis {self.axis!r} has size {self.mesh.shape[self.axis]}, "
+                f"need n_shards={self.n_shards}")
+
+    # ------------------------------------------------------------- helpers --
+
+    def replace(self, **kw) -> "Plan":
+        """A copy with fields overridden — e.g. ``plan.replace(backend="sharded")``."""
+        return dataclasses.replace(self, **kw)
+
+    def spec(self, p: int, key: jax.Array) -> sketch.SketchSpec:
+        """The SketchSpec this plan induces at dimensionality ``p``."""
+        return sketch.make_spec(p, key, gamma=self.gamma, m=self.m,
+                                transform=self.transform)
+
+    def resolve_mesh(self):
+        """The mesh for the sharded backend (auto-built over n_shards devices)."""
+        if self.mesh is not None:
+            return self.mesh
+        if len(jax.devices()) < self.n_shards:
+            raise ValueError(
+                f"sharded backend needs {self.n_shards} devices for axis "
+                f"{self.axis!r}, have {len(jax.devices())}; pass mesh= or lower n_shards")
+        return jax.make_mesh((self.n_shards,), (self.axis,))
+
+    def step_shard(self, chunk: int) -> tuple[int, int]:
+        """Map a linear chunk index to its (step, shard) key coordinates."""
+        return divmod(chunk, self.n_shards)

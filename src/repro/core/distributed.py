@@ -1,5 +1,12 @@
 """Distributed one-pass sketching & estimation (paper §I: distributed-data setting).
 
+.. deprecated::
+    These free functions are kept as thin shims for existing callers. The
+    front door for new code is ``repro.api`` — the same reductions run via
+    ``Plan(backend="sharded")`` on :class:`repro.api.SparsifiedMean` /
+    ``SparsifiedCov`` / ``SparsifiedPCA`` / ``SparsifiedKMeans``, sharing one
+    key discipline with the batch and streaming backends.
+
 Each data shard sketches its own samples locally (independent R_i per sample),
 and the only cross-shard traffic is the psum of the fixed-size accumulators —
 (p,) for the mean, (p,p) for the covariance, (K,p)+(K,p) for K-means updates.
@@ -54,10 +61,10 @@ def distributed_cov(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
 
 
 def distributed_kmeans(s: SparseRows, k: int, key, mesh, n_init: int = 3,
-                       max_iter: int = 50):
+                       max_iter: int = 50, tol: float = 1e-6):
     """Sparsified K-means on sharded sketches (assignment stays local; the
     center/count scatter-adds psum over the data axes)."""
     with mesh:
         return kmeans.sparse_kmeans_core(
-            s.values, s.indices, s.p, k, key, n_init=n_init, max_iter=max_iter
+            s.values, s.indices, s.p, k, key, n_init=n_init, max_iter=max_iter, tol=tol
         )

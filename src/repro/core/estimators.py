@@ -52,6 +52,17 @@ def _debias(c_emp_hat: jax.Array, p: int, m: int) -> jax.Array:
     return c_emp_hat - corr * jnp.diag(d)
 
 
+def _scatter_outer(values: jax.Array, indices: jax.Array, p: int) -> jax.Array:
+    """Σ_i w_i w_iᵀ via n·m² outer-product scatter-adds — the compact path's
+    (p, p) accumulation with no dense (n, p) intermediate."""
+    v = values.astype(jnp.float32)
+    outer = v[:, :, None] * v[:, None, :]                     # (n, m, m)
+    rows = jnp.broadcast_to(indices[:, :, None], outer.shape)
+    cols = jnp.broadcast_to(indices[:, None, :], outer.shape)
+    return jnp.zeros((p, p), jnp.float32).at[
+        rows.reshape(-1), cols.reshape(-1)].add(outer.reshape(-1))
+
+
 @functools.partial(jax.jit, static_argnames=("path",))
 def cov_estimator(s: SparseRows, path: Literal["dense", "compact"] = "dense") -> jax.Array:
     """Unbiased estimate Ĉ_n (p×p) of the empirical covariance (1/n)·XᵀX, Thm 6."""
@@ -61,15 +72,7 @@ def cov_estimator(s: SparseRows, path: Literal["dense", "compact"] = "dense") ->
         w = s.to_dense().astype(jnp.float32)
         c_emp_hat = scale / n * (w.T @ w)
     else:
-        v = s.values.astype(jnp.float32)
-        outer = v[:, :, None] * v[:, None, :]                     # (n, m, m)
-        rows = s.indices[:, :, None]                              # (n, m, 1)
-        cols = s.indices[:, None, :]                              # (n, 1, m)
-        acc = jnp.zeros((s.p, s.p), jnp.float32)
-        c_emp_hat = scale / n * acc.at[
-            jnp.broadcast_to(rows, outer.shape).reshape(-1),
-            jnp.broadcast_to(cols, outer.shape).reshape(-1),
-        ].add(outer.reshape(-1))
+        c_emp_hat = scale / n * _scatter_outer(s.values, s.indices, s.p)
     return _debias(c_emp_hat, s.p, m)
 
 
@@ -109,17 +112,27 @@ def stream_init(p: int, track_cov: bool = True) -> StreamState:
     )
 
 
-def stream_delta(batch: SparseRows, track_cov: bool = True) -> StreamState:
+def stream_delta(batch: SparseRows, track_cov: bool = True,
+                 cov_path: Literal["dense", "compact"] = "dense") -> StreamState:
     """One batch's contribution as a StreamState — local, no collectives, so a
-    distributed caller can psum it before :func:`stream_apply`."""
+    distributed caller can psum it before :func:`stream_apply`.
+
+    ``cov_path="compact"`` scatters the n·m² outer products straight into the
+    (p, p) accumulator instead of materializing the dense (n, p) scatter of the
+    batch first — the right choice when γ ≪ 1 and p is large, where the n·p
+    intermediate (not the accumulator) dominates the step's memory.
+    """
     n = batch.values.shape[0]
     sum_w = jnp.zeros((batch.p,), jnp.float32).at[batch.indices.reshape(-1)].add(
         batch.values.reshape(-1).astype(jnp.float32)
     )
     sum_wwt = None
     if track_cov:
-        w = batch.to_dense().astype(jnp.float32)
-        sum_wwt = w.T @ w
+        if cov_path == "compact":
+            sum_wwt = _scatter_outer(batch.values, batch.indices, batch.p)
+        else:
+            w = batch.to_dense().astype(jnp.float32)
+            sum_wwt = w.T @ w
     return StreamState(sum_w, sum_wwt, jnp.int32(n))
 
 
@@ -131,10 +144,12 @@ def stream_apply(state: StreamState, delta: StreamState) -> StreamState:
     return StreamState(state.sum_w + delta.sum_w, sum_wwt, state.count + delta.count)
 
 
-@jax.jit
-def stream_update(state: StreamState, batch: SparseRows) -> StreamState:
+@functools.partial(jax.jit, static_argnames=("cov_path",))
+def stream_update(state: StreamState, batch: SparseRows,
+                  cov_path: Literal["dense", "compact"] = "dense") -> StreamState:
     """Fold one sketched batch into the accumulators (pure; jit/scan friendly)."""
-    return stream_apply(state, stream_delta(batch, track_cov=state.sum_wwt is not None))
+    return stream_apply(state, stream_delta(batch, track_cov=state.sum_wwt is not None,
+                                            cov_path=cov_path))
 
 
 def stream_finalize_mean(state: StreamState, m: int) -> jax.Array:

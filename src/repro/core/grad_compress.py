@@ -18,6 +18,13 @@ mean — unbiased with the ℓ∞ bound (16). Realized as an all_gather of (valu
 Gradients are flattened to one vector and chunked to ``chunk_p`` (power of two);
 each chunk gets the block-diagonal ROS — an orthonormal map, so all guarantees
 hold per chunk with p → chunk_p.
+
+PRNG discipline: the compressor's keys are the SAME (seed, step, shard) story as
+data sketching — a :class:`~repro.core.sketch.SketchSpec` over the chunk length
+supplies the signs key, and every per-step (and, in per-worker mode, per-shard)
+mask is ``sketch.batch_key(spec, step, shard)``, so DP training and streaming
+estimation share one bookkeeping scheme (any worker can regenerate any step's
+mask from the root key alone).
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ros
-from repro.utils.prng import fold_in_str
+from repro.core import sketch as sketch_mod
+from repro.core.sampling import sample_indices
 from repro.utils.tree import tree_flatten_to_vector
 
 
@@ -46,6 +54,14 @@ class CompressConfig:
         return max(1, int(round(self.gamma * self.chunk_p)))
 
 
+def mask_spec(cfg: CompressConfig, key: jax.Array) -> sketch_mod.SketchSpec:
+    """The compressor's sketch over one gradient chunk — the single source of
+    its signs key and per-(step, shard) mask keys (``sketch.batch_key``).
+    Routed through make_spec so an out-of-range gamma/chunk_p combination
+    fails here, not deep inside the sampler."""
+    return sketch_mod.make_spec(cfg.chunk_p, key, m=cfg.m, transform="hadamard")
+
+
 def _to_chunks(vec: jax.Array, chunk_p: int):
     n = vec.shape[0]
     pad = -n % chunk_p
@@ -53,20 +69,17 @@ def _to_chunks(vec: jax.Array, chunk_p: int):
     return v.reshape(-1, chunk_p), n
 
 
-def _mask_for_step(key: jax.Array, step: jax.Array, n_chunks: int, chunk_p: int, m: int):
-    """Per-step, per-chunk m-subset (shared across workers — seed only)."""
-    k = jax.random.fold_in(fold_in_str(key, "gc-mask"), step)
-    u = jax.random.uniform(k, (n_chunks, chunk_p))
-    _, idx = jax.lax.top_k(u, m)
-    return jnp.sort(idx.astype(jnp.int32), axis=-1)
-
-
 def compress_decompress(vec: jax.Array, key: jax.Array, step: jax.Array,
-                        cfg: CompressConfig, unbiased: bool | None = None):
+                        cfg: CompressConfig, unbiased: bool | None = None,
+                        shard: int | jax.Array = 0):
     """Shared-mask round trip g → ĝ on one worker's (or the averaged) gradient.
 
     Returns (g_hat, kept_values) — in a real collective only ``kept_values``
     (m per chunk) crosses the network; the reconstruction is local.
+
+    ``shard`` folds into the mask key exactly as the stream engine's shard id
+    does; shared-mask mode keeps the default 0 on every worker (same mask ⇒
+    the all-reduce only touches the kept coordinates).
 
     ``unbiased=True`` applies the paper's (p/m) rescale (Thm 4 estimator).
     With error feedback the compressor must be CONTRACTIVE, so the rescale is
@@ -75,11 +88,12 @@ def compress_decompress(vec: jax.Array, key: jax.Array, step: jax.Array,
     """
     if unbiased is None:
         unbiased = not cfg.error_feedback
+    spec = mask_spec(cfg, key)
     chunks, n = _to_chunks(vec, cfg.chunk_p)
     nc, cp = chunks.shape
-    signs_key = fold_in_str(key, "gc-signs")
+    signs_key = spec.signs_key()
     y = ros.precondition(chunks, signs_key, "hadamard")
-    idx = _mask_for_step(key, step, nc, cp, cfg.m)
+    idx = sample_indices(sketch_mod.batch_key(spec, step, shard), nc, cp, cfg.m)
     vals = jnp.take_along_axis(y, idx, axis=-1)               # ← the wire payload
     scale = (cp / cfg.m) if unbiased else 1.0
     y_hat = jnp.zeros_like(y).at[jnp.arange(nc)[:, None], idx].set(vals) * scale
@@ -88,7 +102,7 @@ def compress_decompress(vec: jax.Array, key: jax.Array, step: jax.Array,
 
 
 def compress_grads(grads: Any, key: jax.Array, step: jax.Array, cfg: CompressConfig,
-                   residual: Any | None = None):
+                   residual: Any | None = None, shard: int | jax.Array = 0):
     """Apply sketch compression to a gradient pytree (+ error feedback).
 
     Returns (g_hat pytree, new_residual pytree or None, wire_floats int).
@@ -97,7 +111,7 @@ def compress_grads(grads: Any, key: jax.Array, step: jax.Array, cfg: CompressCon
     if residual is not None:
         rvec, _ = tree_flatten_to_vector(residual)
         vec = vec + rvec
-    g_hat_vec, vals = compress_decompress(vec, key, step, cfg)
+    g_hat_vec, vals = compress_decompress(vec, key, step, cfg, shard=shard)
     new_residual = None
     if cfg.error_feedback:
         new_residual = unflatten(vec - g_hat_vec)
@@ -108,23 +122,25 @@ def perworker_mean_estimate(local_vec: jax.Array, key: jax.Array, step: jax.Arra
                             cfg: CompressConfig, axis_names) -> jax.Array:
     """Paper-faithful Thm-4 estimator across DP workers (call inside shard_map).
 
-    Each worker samples its own mask (folded by axis index); the mean of the
+    Each worker samples its own mask — its shard id (flattened axis index) folds
+    into ``sketch.batch_key`` exactly as a stream shard's does; the mean of the
     scattered, rescaled samples is psum'd — unbiased for the mean gradient.
     """
+    spec = mask_spec(cfg, key)
     chunks, n = _to_chunks(local_vec, cfg.chunk_p)
     nc, cp = chunks.shape
-    signs_key = fold_in_str(key, "gc-signs")                  # shared unitary
+    signs_key = spec.signs_key()                              # shared unitary
     y = ros.precondition(chunks, signs_key, "hadamard")
-    widx = sum(jax.lax.axis_index(a) * 131 for a in axis_names)
-    wkey = jax.random.fold_in(jax.random.fold_in(fold_in_str(key, "gc-mask"), step), widx)
-    u = jax.random.uniform(wkey, (nc, cp))
-    _, idx = jax.lax.top_k(u, cfg.m)
+    widx = 0
+    for a in axis_names:
+        # jax.lax.axis_size is absent in jax 0.4.x; psum of 1 is the portable form.
+        widx = widx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    idx = sample_indices(sketch_mod.batch_key(spec, step, widx), nc, cp, cfg.m)
     vals = jnp.take_along_axis(y, idx, axis=-1)
     scat = jnp.zeros_like(y).at[jnp.arange(nc)[:, None], idx].set(vals) * (cp / cfg.m)
     n_w = 1
     for a in axis_names:
         scat = jax.lax.psum(scat, a)
-        # jax.lax.axis_size is absent in jax 0.4.x; psum of 1 is the portable form.
         n_w *= jax.lax.psum(1, a)
     y_mean = scat / n_w
     return ros.unmix(y_mean, signs_key, "hadamard").reshape(-1)[:n]

@@ -48,8 +48,27 @@ def make_spec(p: int, key: jax.Array, gamma: float | None = None, m: int | None 
     if m is None:
         if gamma is None:
             raise ValueError("provide gamma or m")
-        m = max(1, int(round(gamma * pp)))
-    return SketchSpec(p=p, m=int(m), transform=transform, key=key)
+        if not 0.0 < gamma <= 1.0:
+            raise ValueError(f"gamma must be in (0, 1], got {gamma}")
+        # clamp: rounding can only reach p_pad at gamma=1, but keep the sampler
+        # in range no matter what float lands here
+        m = min(pp, max(1, int(round(gamma * pp))))
+    m = int(m)
+    if not 0 < m <= pp:
+        raise ValueError(
+            f"m must be in [1, p_pad={pp}] (transform={transform!r}, p={p}), got {m}")
+    return SketchSpec(p=p, m=m, transform=transform, key=key)
+
+
+def batch_key(spec: SketchSpec, step, shard) -> jax.Array:
+    """The per-(step, shard) mask key — every batch draws independent R_i.
+
+    This is the repo-wide PRNG discipline: the stream engine, the ``repro.api``
+    estimators, and the gradient compressor all derive their per-batch masks by
+    folding (step, shard) into the spec's mask key, so any worker can regenerate
+    any batch's mask from (root key, step, shard) alone.
+    """
+    return jax.random.fold_in(jax.random.fold_in(spec.mask_key(), step), shard)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "m", "transform", "impl"))

@@ -1,6 +1,8 @@
 """Streaming-estimation launcher: ``python -m repro.launch.stream [flags]``.
 
-End-to-end driver for the streaming sketch engine (repro.stream): synthetic
+Thin shim over the unified ``repro.api`` layer: flags build a
+:class:`repro.api.Plan` (backend "stream", or "sharded" when a mesh fits) and
+``api.make_engine`` constructs the streaming engine — synthetic
 (seed, step, shard) vector source → per-batch-mask sketch → donated
 constant-memory accumulators → finalized mean / covariance / streaming
 K-means, optionally shard_map-distributed over forced host devices.
@@ -31,6 +33,8 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--devices", type=int, default=0, help="force N host devices (CPU)")
     ap.add_argument("--no-cov", action="store_true", help="mean-only accumulator")
+    ap.add_argument("--cov-path", choices=("dense", "compact"), default="dense",
+                    help="covariance delta path (compact = the γ ≪ 1 memory fix)")
     ap.add_argument("--kmeans-k", type=int, default=0, help="0 disables streaming K-means")
     ap.add_argument("--kmeans-ninit", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
@@ -44,24 +48,26 @@ def main(argv=None):
 
     import jax
 
-    from repro.core import sketch
+    from repro import api
     from repro.data.pipeline import VectorStreamSource
-    from repro.stream import StreamEngine, StreamKMeansConfig
+    from repro.stream import StreamKMeansConfig
 
-    mesh = None
+    backend = "stream"
     if args.shards > 1:
-        n = len(jax.devices())
-        if n >= args.shards:
-            mesh = jax.make_mesh((args.shards,), ("data",))
+        if len(jax.devices()) >= args.shards:
+            backend = "sharded"
         else:
-            print(f"only {n} device(s); folding {args.shards} shards sequentially")
+            print(f"only {len(jax.devices())} device(s); "
+                  f"folding {args.shards} shards sequentially")
 
-    spec = sketch.make_spec(args.p, jax.random.PRNGKey(args.seed + 1), gamma=args.gamma)
+    plan = api.Plan(backend=backend, gamma=args.gamma, batch_size=args.batch,
+                    n_shards=args.shards, cov_path=args.cov_path)
     source = VectorStreamSource(p=args.p, batch=args.batch, seed=args.seed)
     km = (StreamKMeansConfig(k=args.kmeans_k, n_init=args.kmeans_ninit)
           if args.kmeans_k else None)
-    engine = StreamEngine(spec, source, n_shards=args.shards, mesh=mesh,
-                          track_cov=not args.no_cov, kmeans=km)
+    engine = api.make_engine(plan, args.p, jax.random.PRNGKey(args.seed + 1), source,
+                             track_cov=not args.no_cov, kmeans=km)
+    spec = engine.spec
 
     t0 = time.time()
     res = engine.run(args.steps, seed=args.seed)
@@ -72,7 +78,7 @@ def main(argv=None):
     if km:
         acc_floats += 2 * args.kmeans_ninit * args.kmeans_k * spec.p_pad
     print(f"p={args.p} gamma={spec.gamma:.3f} (m={spec.m}) shards={args.shards} "
-          f"mesh={'yes' if mesh is not None else 'no'}")
+          f"backend={plan.backend}")
     print(f"streamed {rows:,} rows in {dt:.2f}s ({rows/dt:,.0f} rows/s incl. compile); "
           f"accumulator state: {acc_floats:,} floats (constant in stream length)")
     print(f"mean[:4] = {[round(float(v), 4) for v in res.mean[:4]]}")

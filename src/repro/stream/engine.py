@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import sketch as sketch_mod
 from repro.core.sampling import SparseRows
+from repro.core.sketch import batch_key  # noqa: F401  (re-exported; the repo-wide discipline)
 from repro.stream import accumulators as acc
 from repro.utils.prng import fold_in_str
 
@@ -79,11 +80,6 @@ class StreamResult:
     kmeans_obj: jax.Array | None = None
 
 
-def batch_key(spec: sketch_mod.SketchSpec, step, shard) -> jax.Array:
-    """The per-(step, shard) mask key — every batch draws independent R_i."""
-    return jax.random.fold_in(jax.random.fold_in(spec.mask_key(), step), shard)
-
-
 def _normalize_source(source) -> Source:
     """Adapt a source to (seed, step, shard) → batch. seed=None means "the
     source's own default" (0 for plain callables); an explicit seed must not be
@@ -124,11 +120,15 @@ class StreamEngine:
         sparsified K-means alongside the moment estimators.
     impl: preconditioning backend forwarded to sketch ("auto" = Pallas kernel
         on TPU, jnp butterfly elsewhere).
+    cov_path: "dense" (scatter batch to (b, p), one matmul) or "compact"
+        (scatter b·m² outer products directly) — pick "compact" when γ ≪ 1 and
+        the dense (b, p) intermediate would dominate the step's memory.
     """
 
     def __init__(self, spec: sketch_mod.SketchSpec, source, *, n_shards: int = 1,
                  mesh=None, axis: str = "data", track_cov: bool = True,
-                 kmeans: StreamKMeansConfig | None = None, impl: str = "auto"):
+                 kmeans: StreamKMeansConfig | None = None, impl: str = "auto",
+                 cov_path: str = "dense"):
         self.spec = spec
         self.source = _normalize_source(source)
         self.n_shards = int(n_shards)
@@ -137,6 +137,7 @@ class StreamEngine:
         self.track_cov = track_cov
         self.kmeans = kmeans
         self.impl = impl
+        self.cov_path = cov_path
         if mesh is not None and mesh.shape[axis] != self.n_shards:
             raise ValueError(
                 f"mesh axis {axis!r} has size {mesh.shape[axis]}, need n_shards={n_shards}")
@@ -156,7 +157,7 @@ class StreamEngine:
                                  impl=self.impl)
 
     def _deltas(self, state: EngineState, batch: SparseRows):
-        md = acc.moment_delta(batch, track_cov=self.track_cov)
+        md = acc.moment_delta(batch, track_cov=self.track_cov, cov_path=self.cov_path)
         kd = acc.kmeans_delta(state.kmeans, batch) if state.kmeans is not None else None
         return md, kd
 

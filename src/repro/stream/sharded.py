@@ -18,8 +18,13 @@ from repro.core.sampling import SparseRows
 from repro.stream import accumulators as acc
 
 
-def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True) -> acc.MomentState:
-    """psum-reduced MomentState for a row-sharded sketch (replicated output)."""
+def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True,
+                    cov_path: str = "dense") -> acc.MomentState:
+    """psum-reduced MomentState for a row-sharded sketch (replicated output).
+
+    ``cov_path="compact"`` uses the n·m² outer-product delta (no dense (n, p)
+    intermediate per shard) — the γ ≪ 1 choice.
+    """
     p = s.p
     n = s.values.shape[0]
     n_shards = 1
@@ -34,7 +39,8 @@ def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True)
         indices = jnp.pad(indices, ((0, pad), (0, 0)))
 
     def local(values, indices):
-        delta = acc.moment_delta(SparseRows(values, indices, p), track_cov=track_cov)
+        delta = acc.moment_delta(SparseRows(values, indices, p), track_cov=track_cov,
+                                 cov_path=cov_path)
         for a in axes:
             delta = jax.lax.psum(delta, a)
         return delta

@@ -123,8 +123,9 @@ def test_perworker_grad_estimator_matches_reference():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_host_mesh
         from repro.core import ros
-        from repro.core.grad_compress import CompressConfig, perworker_mean_estimate
-        from repro.utils.prng import fold_in_str
+        from repro.core.grad_compress import CompressConfig, mask_spec, perworker_mean_estimate
+        from repro.core.sampling import sample_indices
+        from repro.core.sketch import batch_key
 
         mesh = make_host_mesh(8, 1)
         key = jax.random.PRNGKey(0)
@@ -139,22 +140,20 @@ def test_perworker_grad_estimator_matches_reference():
         fn = shard_map(local, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None))
         est = fn(grads)[0]
 
-        # reference: replicate the per-worker math explicitly
-        signs_key = fold_in_str(key, "gc-signs")
+        # reference: replicate the per-worker math explicitly — masks derive
+        # from the SAME (seed, step, shard) batch_key discipline as the stream
+        spec = mask_spec(cfg, key)
+        signs_key = spec.signs_key()
         acc = 0.0
         for w in range(8):
             chunks = grads[w].reshape(-1, cfg.chunk_p)
             y = ros.precondition(chunks, signs_key, "hadamard")
-            wkey = jax.random.fold_in(jax.random.fold_in(fold_in_str(key, "gc-mask"), step), w * 131)
-            u = jax.random.uniform(wkey, chunks.shape)
-            idx = jax.lax.top_k(u, cfg.m)[1]
+            idx = sample_indices(batch_key(spec, step, w), y.shape[0], cfg.chunk_p, cfg.m)
             vals = jnp.take_along_axis(y, idx, -1)
             scat = jnp.zeros_like(y).at[jnp.arange(y.shape[0])[:, None], idx].set(vals)
             acc = acc + scat * (cfg.chunk_p / cfg.m)
         ref = ros.unmix(acc / 8, signs_key, "hadamard").reshape(-1)
         np.testing.assert_allclose(np.asarray(est), np.asarray(ref), atol=1e-4)
-        # unbiasedness sanity: averaging estimates over independent steps
-        ests = [fn(grads)[0] for _ in range(1)]
         print("per-worker estimator OK")
     """)
 
