@@ -2,6 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV. See DESIGN.md §6 for the experiment
 index; EXPERIMENTS.md records the reference outputs and their interpretation.
+
+The api_bench suite additionally writes ``BENCH_api.json`` (rows/sec, backend,
+γ per measurement, including the fused fit_many ingest speedup) — CI uploads
+it as an artifact so the perf trajectory accumulates across commits.
 """
 from __future__ import annotations
 

@@ -16,10 +16,20 @@ job tolerance-identically on a different engine::
     p2 = SparsifiedPCA(8, plan.replace(backend="stream"), key=0).fit(x)
     # p1.components_ == p2.components_ to float-sum reordering (1e-5)
 
+One compression pass can feed EVERY consumer at once —
+:func:`fit_many` registers any number of estimators on one shared
+:class:`SketchCursor`, sketches each (step, shard) chunk exactly once, and
+fans it out, reproducing the separate fits to 1e-5 on every backend::
+
+    pca = SparsifiedPCA(8, plan, key=0)
+    km = SparsifiedKMeans(10, plan, key=0)
+    fit_many(plan, [pca, km], x)     # one sketch pass, both fitted
+
 For unbounded sources (and the K-means/moments fused single pass), the same
 Plan also constructs a :class:`repro.stream.StreamEngine` via
 :func:`make_engine` — the launcher ``repro.launch.stream`` is a thin shim over
-this.
+this; ``fit_many(plan, consumers, source=src, steps=n)`` is the estimator-API
+front door to the same fused pass.
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ import jax
 
 from repro.api.estimators import (  # noqa: F401
     GradCompressor,
+    SketchCursor,
     SketchedEstimator,
     SparsifiedCov,
     SparsifiedKMeans,
@@ -34,6 +45,7 @@ from repro.api.estimators import (  # noqa: F401
     SparsifiedPCA,
     as_key,
 )
+from repro.api.fused import SharedSketchRun, fit_many  # noqa: F401
 from repro.api.plan import BACKENDS, Plan  # noqa: F401
 
 

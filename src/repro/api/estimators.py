@@ -1,10 +1,14 @@
 """Estimator classes: fit / partial_fit / finalize over any :class:`Plan` backend.
 
 One compression operator feeding many consumers (the paper's pitch) as one
-class family: every estimator sketches its input in consecutive
-``plan.batch_size`` chunks, keys chunk j's mask with
-``sketch.batch_key(spec, step=j // n_shards, shard=j % n_shards)``, and hands
-the sketches to the plan's backend —
+class family: a :class:`SketchCursor` owns the ``source → sketch`` pass —
+it consumes input in consecutive ``plan.batch_size`` chunks, keys chunk j's
+mask with ``sketch.batch_key(spec, step=j // n_shards, shard=j % n_shards)``,
+sketches each chunk EXACTLY ONCE, and fans the sketch out to every registered
+consumer. Estimators are pure folders: ``_fold_sketch(s, step, shard)`` is
+their only ingest point, so a lone ``fit()`` is just the one-consumer special
+case of :func:`repro.api.fit_many`'s shared pass. Each consumer's reducer then
+hands the folds to its plan's backend —
 
 - ``batch``:   keep the (γ·dense) sketch, one-shot ``repro.core`` estimators;
 - ``stream``:  fold constant-memory accumulator deltas
@@ -80,9 +84,10 @@ def _reduce_stream(r: "_MomentReducer"):
 
 @_moment_backend("sharded")
 def _reduce_sharded(r: "_MomentReducer"):
-    st = sharded_mod.sharded_moments(r.concat(), r.plan.resolve_mesh(),
-                                     (r.plan.axis,), track_cov=r.track_cov,
-                                     cov_path=r.plan.cov_path)
+    r.flush_step()  # a trailing partial step still needs its psum
+    st = r.state
+    if int(st.count) == 0:
+        raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
     cov = acc.moment_finalize_cov(st, r.spec.m) if r.track_cov else None
     return acc.moment_finalize_mean(st, r.spec.m), cov, st.count
 
@@ -95,47 +100,168 @@ class _MomentReducer:
 
     ``fold`` ingests one per-(step, shard) sketch; ``reduce`` dispatches
     through :data:`MOMENT_BACKENDS` for the Thm-4 / Thm-6 estimates.
+
+    Only the "batch" backend (and Lloyd K-means, which passes
+    ``keep_sketch=True`` on every backend because Alg. 1 clusters the retained
+    sketch) holds sketches past their step. "stream" folds each sketch into
+    the constant-memory accumulator immediately; "sharded" buffers ONE step's
+    shard sketches, reduces them with a single psum of the fixed-size delta
+    (the StreamEngine's per-step discipline), and drops them — streaming
+    per-step reduction, not concat()-then-reduce, so host memory stays
+    constant in the stream length.
     """
 
     def __init__(self, plan: Plan, spec: sketch_mod.SketchSpec, track_cov: bool,
                  keep_sketch: bool = False, needs_moments: bool = True):
         self.plan, self.spec, self.track_cov = plan, spec, track_cov
-        self.keep_sketch = keep_sketch or plan.backend in ("batch", "sharded")
+        self.keep_sketch = keep_sketch or (plan.backend == "batch" and needs_moments)
         self.parts: list[SparseRows] = []
+        self._step_parts: list[SparseRows] = []  # sharded: the in-flight step
+        self._mesh = None
         # moment state only where reduce() will read it (K-means never does)
         self.state = (acc.moment_init(spec.p_pad, track_cov=track_cov)
-                      if plan.backend == "stream" and needs_moments else None)
+                      if plan.backend in ("stream", "sharded") and needs_moments
+                      else None)
 
-    def fold(self, s: SparseRows) -> None:
+    def fold(self, s: SparseRows, step: int, shard: int) -> None:
         if self.state is not None:
-            self.state = est.stream_update(self.state, s, cov_path=self.plan.cov_path)
+            if self.plan.backend == "sharded":
+                self._step_parts.append(s)
+                if shard == self.plan.n_shards - 1:
+                    self.flush_step()
+            else:
+                self.state = est.stream_update(self.state, s, cov_path=self.plan.cov_path)
         if self.keep_sketch:
             self.parts.append(s)
+
+    def flush_step(self) -> None:
+        """Sharded: reduce the buffered step with one psum'd delta, then drop it."""
+        if not self._step_parts:
+            return
+        if self._mesh is None:
+            self._mesh = self.plan.resolve_mesh()
+        delta = sharded_mod.sharded_moments(
+            _concat_sparse(self._step_parts, self.spec.p_pad), self._mesh,
+            (self.plan.axis,), track_cov=self.track_cov, cov_path=self.plan.cov_path)
+        self.state = acc.moment_apply(self.state, delta)
+        self._step_parts = []
 
     def concat(self) -> SparseRows:
         if not self.parts:
             raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
-        return SparseRows(jnp.concatenate([s.values for s in self.parts]),
-                          jnp.concatenate([s.indices for s in self.parts]),
-                          self.spec.p_pad)
+        return _concat_sparse(self.parts, self.spec.p_pad)
 
     def reduce(self):
         """(mean_pre, cov_pre | None, count) via the plan's backend."""
         return MOMENT_BACKENDS[self.plan.backend](self)
 
 
+def _concat_sparse(parts: list[SparseRows], p: int) -> SparseRows:
+    return SparseRows(jnp.concatenate([s.values for s in parts]),
+                      jnp.concatenate([s.indices for s in parts]), p)
+
+
+# ------------------------------------------------------------ the cursor ----
+
+
+class SketchCursor:
+    """The shared ``source → sketch`` pass: ONE sketch per (step, shard) chunk.
+
+    The cursor owns everything sketching needs — spec derivation from
+    (plan, key), the chunk counter mapping consecutive ``plan.batch_size``
+    chunks to (step, shard) mask keys, and the ``sketch_mod.sketch`` call —
+    and fans each sketch out to every registered consumer's ``_fold_sketch``.
+    A lone estimator owns a one-consumer cursor; :func:`repro.api.fit_many`
+    registers many consumers on one cursor, so a single compression pass feeds
+    them all (the paper's pitch: compress once, answer every question).
+    """
+
+    def __init__(self, plan: Plan, key: jax.Array | int):
+        self.plan = plan
+        self.key = as_key(key)
+        self.spec: sketch_mod.SketchSpec | None = None
+        self.chunk = 0           # linear chunk index → plan.step_shard(chunk)
+        self.count = 0           # rows folded through this cursor
+        self.n_sketches = 0      # sketch_mod.sketch invocations (one per chunk)
+        self.last_sketch: SparseRows | None = None
+        self.consumers: list["SketchedEstimator"] = []
+
+    def register(self, consumer: "SketchedEstimator") -> None:
+        self.consumers.append(consumer)
+        if self.spec is not None:
+            consumer._bind_spec(self.spec)
+
+    def ensure_spec(self, p: int) -> sketch_mod.SketchSpec:
+        if self.spec is None:
+            self.spec = self.plan.spec(p, self.key)
+            for c in self.consumers:
+                c._bind_spec(self.spec)
+        elif self.spec.p != p:
+            raise ValueError(
+                f"batch has p={p}, but this pass was started with "
+                f"p={self.spec.p}; start a new fit (estimator.fit/reset, or a "
+                "fresh fit_many) to change dimensionality")
+        return self.spec
+
+    def fold_rows(self, rows: jax.Array) -> None:
+        """Sketch one ≤batch_size chunk under its (step, shard) mask key and
+        hand the SAME SparseRows to every consumer."""
+        step, shard = self.plan.step_shard(self.chunk)
+        s = sketch_mod.sketch(rows, self.spec,
+                              batch_key=batch_key(self.spec, step, shard),
+                              impl=self.plan.impl)
+        self.n_sketches += 1
+        self.last_sketch = s
+        n = int(rows.shape[0])
+        for c in self.consumers:
+            c._consume(s, step, shard, n)
+        self.chunk += 1
+        self.count += n
+
+    def partial_fit(self, x) -> None:
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"expected (rows, p) data, got shape {x.shape}")
+        x = x.astype(self.plan.dtype)
+        self.ensure_spec(x.shape[1])
+        bs = self.plan.batch_size
+        for i in range(0, x.shape[0], bs):
+            self.fold_rows(x[i:i + bs])
+
+    def sync(self) -> None:
+        """Block until the last folded chunk's sketch is materialized — the
+        public ingest barrier (benchmarks time ingest against this, not
+        against private reducer state)."""
+        if self.last_sketch is not None:
+            jax.block_until_ready((self.last_sketch.values, self.last_sketch.indices))
+
+    def fold_source(self, source, steps: int, seed: int | None = None) -> None:
+        """One pass over a normalized ``(seed, step, shard) → (b, p)`` source
+        (the StreamEngine contract): each (step, shard) batch is folded under
+        exactly that (step, shard) mask key."""
+        for step in range(steps):
+            for shard in range(self.plan.n_shards):
+                rows = jnp.asarray(source(seed, step, shard)).astype(self.plan.dtype)
+                self.ensure_spec(rows.shape[1])
+                self.fold_rows(rows)
+
+
 # -------------------------------------------------------------- base class --
 
 
 class SketchedEstimator:
-    """Shared fit / partial_fit / finalize plumbing.
+    """Shared fit / partial_fit / finalize plumbing — a pure sketch FOLDER.
 
-    Subclasses set ``_track_cov`` / ``_keep_sketch`` and implement
-    ``_finalize()`` from the reducer. ``fit(X)`` = reset → partial_fit(X) →
-    finalize; ``partial_fit`` may be called any number of times with (rows, p)
-    arrays (each call consumes its input in ``plan.batch_size`` chunks, so a
-    stream fed in batch_size pieces reproduces ``fit`` of the concatenation
-    exactly); ``finalize()`` computes the fitted attributes and returns self.
+    Sketching itself lives in :class:`SketchCursor`; the estimator's only
+    ingest point is ``_fold_sketch(s, step, shard)``, called by whichever
+    cursor it is registered on (its own by default, a shared one under
+    :func:`repro.api.fit_many`). Subclasses set ``_track_cov`` /
+    ``_keep_sketch`` and implement ``_finalize()`` from the reducer.
+    ``fit(X)`` = reset → partial_fit(X) → finalize; ``partial_fit`` may be
+    called any number of times with (rows, p) arrays (each call consumes its
+    input in ``plan.batch_size`` chunks, so a stream fed in batch_size pieces
+    reproduces ``fit`` of the concatenation exactly); ``finalize()`` computes
+    the fitted attributes and returns self.
     """
 
     _track_cov = False
@@ -150,50 +276,52 @@ class SketchedEstimator:
     # ------------------------------------------------------------ lifecycle --
 
     def reset(self) -> "SketchedEstimator":
-        """Drop all folded state (spec is re-derived at the next first batch)."""
+        """Drop all folded state (spec is re-derived at the next first batch).
+
+        Also detaches from any shared cursor — the old cursor stops fanning
+        sketches into this estimator and a fresh one-consumer cursor takes
+        over, so a still-live SharedSketchRun can't fold into reset state.
+        """
+        old = getattr(self, "_cursor", None)
+        if old is not None and self in old.consumers:
+            old.consumers.remove(self)
         self.spec_: sketch_mod.SketchSpec | None = None
         self._reducer: _MomentReducer | None = None
-        self._chunk = 0
         self.count_ = 0
         self._fitted = False
+        self._cursor = SketchCursor(self.plan, self.key)
+        self._cursor.register(self)
         return self
 
-    def _ensure_spec(self, p: int) -> None:
-        if self.spec_ is None:
-            self.spec_ = self.plan.spec(p, self.key)
-            self._reducer = _MomentReducer(self.plan, self.spec_, self._track_cov,
-                                           keep_sketch=self._keep_sketch,
-                                           needs_moments=self._needs_moments)
-            self._on_spec(self.spec_)
-        elif self.spec_.p != p:
-            raise ValueError(f"batch has p={p}, but this estimator was started "
-                             f"with p={self.spec_.p}; call reset() to refit")
+    def _bind_spec(self, spec: sketch_mod.SketchSpec) -> None:
+        """Cursor callback: the spec exists — allocate the reducer."""
+        self.spec_ = spec
+        self._reducer = _MomentReducer(self.plan, spec, self._track_cov,
+                                       keep_sketch=self._keep_sketch,
+                                       needs_moments=self._needs_moments)
+        self._on_spec(spec)
 
     def _on_spec(self, spec: sketch_mod.SketchSpec) -> None:
         """Subclass hook: validate the spec once it exists (e.g. m >= 2)."""
 
     def partial_fit(self, x) -> "SketchedEstimator":
-        x = jnp.asarray(x)
-        if x.ndim != 2:
-            raise ValueError(f"expected (rows, p) data, got shape {x.shape}")
-        x = x.astype(self.plan.dtype)
-        self._ensure_spec(x.shape[1])
-        bs = self.plan.batch_size
-        for i in range(0, x.shape[0], bs):
-            self._fold_rows(x[i:i + bs])
+        """Fold more rows. Under a shared cursor (fit_many) this extends the
+        shared pass — every co-registered consumer folds the same sketches."""
+        self._cursor.partial_fit(x)
         return self
 
-    def _fold_rows(self, rows: jax.Array) -> None:
-        step, shard = self.plan.step_shard(self._chunk)
-        s = sketch_mod.sketch(rows, self.spec_,
-                              batch_key=batch_key(self.spec_, step, shard),
-                              impl=self.plan.impl)
+    def sync(self) -> "SketchedEstimator":
+        """Block until this estimator's ingest (its cursor's last sketch) is
+        materialized — for wall-clock measurements of the fold pass."""
+        self._cursor.sync()
+        return self
+
+    def _consume(self, s: SparseRows, step: int, shard: int, n_rows: int) -> None:
         self._fold_sketch(s, step, shard)
-        self._chunk += 1
-        self.count_ += int(rows.shape[0])
+        self.count_ += n_rows
 
     def _fold_sketch(self, s: SparseRows, step: int, shard: int) -> None:
-        self._reducer.fold(s)
+        self._reducer.fold(s, step, shard)
 
     def fit(self, x) -> "SketchedEstimator":
         self.reset()
@@ -202,17 +330,11 @@ class SketchedEstimator:
 
     def fit_stream(self, source, steps: int, seed: int | None = None) -> "SketchedEstimator":
         """One pass over a ``(seed, step, shard) → (b, p)`` source (the
-        repro.data.pipeline / StreamEngine contract): each (step, shard) batch
-        is folded under exactly that (step, shard) mask key."""
-        from repro.stream.engine import _normalize_source
+        repro.data.pipeline / StreamEngine contract)."""
+        from repro.stream.engine import normalize_source
 
-        src = _normalize_source(source)
         self.reset()
-        for step in range(steps):
-            for shard in range(self.plan.n_shards):
-                rows = jnp.asarray(src(seed, step, shard)).astype(self.plan.dtype)
-                self._ensure_spec(rows.shape[1])
-                self._fold_rows(rows)
+        self._cursor.fold_source(normalize_source(source), steps, seed)
         return self.finalize()
 
     def finalize(self) -> "SketchedEstimator":
@@ -227,12 +349,28 @@ class SketchedEstimator:
 
     # ------------------------------------------------------------- utility --
 
-    def sketch(self, x) -> SparseRows:
-        """The fitted compression operator applied to new rows (one-shot mask)."""
-        if self.spec_ is None:
-            self._ensure_spec(jnp.asarray(x).shape[-1])
-        return sketch_mod.sketch(jnp.asarray(x).astype(self.plan.dtype), self.spec_,
-                                 impl=self.plan.impl)
+    def sketch(self, x, mask_key: jax.Array | int | None = None) -> SparseRows:
+        """The compression operator applied to new rows.
+
+        On a fitted (or fitting) estimator this uses the fitted spec; on a
+        fresh one, a THROWAWAY spec is derived from (plan, key) for this call
+        only — reading a sketch never pins ``p`` or allocates fold state.
+
+        ``mask_key=None`` reuses the spec's one-shot mask key, so repeated
+        ``sketch()`` / ``predict()`` calls sample the SAME coordinates of
+        equal inputs (deterministic, but not independent across calls). Pass
+        an int (folded into the spec's mask key) or a PRNGKey for an
+        independent mask per call.
+        """
+        x = jnp.asarray(x).astype(self.plan.dtype)
+        spec = self.spec_ if self.spec_ is not None else self.plan.spec(x.shape[-1], self.key)
+        if mask_key is None:
+            bk = None
+        elif isinstance(mask_key, int):
+            bk = jax.random.fold_in(spec.mask_key(), mask_key)
+        else:
+            bk = mask_key
+        return sketch_mod.sketch(x, spec, batch_key=bk, impl=self.plan.impl)
 
     def _unmix_vec(self, v_pre: jax.Array) -> jax.Array:
         return sketch_mod.unmix_dense(v_pre[None, :], self.spec_)[0]
@@ -340,7 +478,6 @@ class SparsifiedKMeans(SketchedEstimator):
     """
 
     _track_cov = False
-    _keep_sketch = True  # lloyd needs the sketch on every backend
     _needs_moments = False  # centers come from the solver, not Thm-4/6
 
     def __init__(self, k: int, plan: Plan, key: jax.Array | int = 0, *,
@@ -353,7 +490,7 @@ class SparsifiedKMeans(SketchedEstimator):
         self.max_iter = int(max_iter)
         self.tol = float(tol)
         self.algorithm = algorithm
-        self._keep_sketch = algorithm == "lloyd"
+        self._keep_sketch = algorithm == "lloyd"  # Alg. 1 clusters the retained sketch
         super().__init__(plan, key)
 
     def reset(self) -> "SparsifiedKMeans":
@@ -366,7 +503,7 @@ class SparsifiedKMeans(SketchedEstimator):
 
     def _fold_sketch(self, s: SparseRows, step: int, shard: int) -> None:
         if self.algorithm == "lloyd":
-            self._reducer.fold(s)
+            self._reducer.fold(s, step, shard)
             return
         if self._km_state is None:
             self._km_state = acc.kmeans_init(

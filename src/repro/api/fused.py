@@ -1,0 +1,173 @@
+"""fit_many — ONE compression pass feeds every consumer (the paper's pitch, §I).
+
+Fitting ``SparsifiedPCA`` and ``SparsifiedKMeans`` separately on the same
+:class:`Plan` sketches the data twice; :func:`fit_many` registers every
+consumer on one shared :class:`~repro.api.estimators.SketchCursor`, so each
+per-(step, shard) sketch is computed exactly once and folded into every
+consumer's accumulator. Because the consumers are pure folders and the shared
+cursor derives the SAME spec (same key) and the SAME per-chunk mask keys that
+each consumer's lone ``fit`` would, ``fit_many`` reproduces the separate fits
+exactly — on every backend (tests/test_api.py asserts ≤1e-5) — while doing a
+single pass of ``sketch_mod.sketch`` per chunk.
+
+Under ``backend="stream" | "sharded"`` this is the StreamEngine's fused
+moment+K-means pass surfaced through the estimator API: moments fold into
+constant-memory accumulators (sharded: one psum of the fixed-size per-step
+delta — nothing is retained past its step), minibatch K-means folds the
+engine's per-step summed deltas, and only Lloyd K-means retains the
+γ-compressed sketch it clusters at finalize (Alg. 1's defining feature).
+
+    from repro.api import Plan, SparsifiedKMeans, SparsifiedPCA, fit_many
+
+    plan = Plan(backend="stream", gamma=0.05, batch_size=4096)
+    pca = SparsifiedPCA(8, plan, key=0)
+    km = SparsifiedKMeans(10, plan, key=0)
+    run = fit_many(plan, [pca, km], x)      # one sketch pass, both fitted
+    pca.components_; km.centers_            # identical to separate fits
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.api.estimators import SketchCursor, SketchedEstimator, as_key
+from repro.api.plan import Plan
+from repro.core import sketch as sketch_mod
+
+# Plan fields that determine WHAT the shared sketch is (spec + chunk→key
+# mapping). Consumers must agree with the driving plan on these; the backend
+# itself may differ per consumer — it is a pure fold/execution choice.
+SKETCH_FIELDS = ("gamma", "m", "transform", "impl", "batch_size", "n_shards",
+                 "dtype")
+
+
+@dataclasses.dataclass
+class SharedSketchRun:
+    """Handle over one shared compression pass and its fitted consumers.
+
+    Iterable/indexable like the consumer sequence passed to :func:`fit_many`.
+    ``partial_fit`` + ``finalize`` extend the SAME pass (every consumer folds
+    the new chunks' sketches once more), mirroring the estimator contract.
+    """
+
+    consumers: tuple[SketchedEstimator, ...]
+    cursor: SketchCursor
+
+    @property
+    def spec(self) -> sketch_mod.SketchSpec:
+        return self.cursor.spec
+
+    @property
+    def count(self) -> int:
+        """Rows folded through the shared pass."""
+        return self.cursor.count
+
+    @property
+    def n_sketches(self) -> int:
+        """sketch() invocations — one per (step, shard) chunk, NOT per consumer."""
+        return self.cursor.n_sketches
+
+    def __iter__(self) -> Iterator[SketchedEstimator]:
+        return iter(self.consumers)
+
+    def __getitem__(self, i: int) -> SketchedEstimator:
+        return self.consumers[i]
+
+    def __len__(self) -> int:
+        return len(self.consumers)
+
+    def partial_fit(self, x) -> "SharedSketchRun":
+        self.cursor.partial_fit(x)
+        return self
+
+    def sync(self) -> "SharedSketchRun":
+        """Block until the shared pass's last sketch is materialized (the
+        public ingest barrier — what api_bench times)."""
+        self.cursor.sync()
+        return self
+
+    def finalize(self) -> "SharedSketchRun":
+        for c in self.consumers:
+            if c in self.cursor.consumers:  # skip consumers detached by reset()
+                c.finalize()
+        return self
+
+
+def _check_consumer(plan: Plan, c: SketchedEstimator, i: int, key0) -> None:
+    for f in SKETCH_FIELDS:
+        mine, theirs = getattr(plan, f), getattr(c.plan, f)
+        if f == "dtype":
+            mine, theirs = np.dtype(mine), np.dtype(theirs)  # "float32" == jnp.float32
+        if mine != theirs:
+            raise ValueError(
+                f"consumers[{i}] ({type(c).__name__}) was built with "
+                f"plan.{f}={theirs!r}, but the shared pass uses {f}={mine!r}; "
+                "a shared sketch requires every consumer to agree on the "
+                f"sketch geometry fields {SKETCH_FIELDS}")
+    if not np.array_equal(np.asarray(key0), np.asarray(c.key)):
+        raise ValueError(
+            f"consumers[{i}] ({type(c).__name__}) holds a different key than "
+            "consumers[0] — a shared sketch means shared randomness; construct "
+            "every consumer with the same key")
+
+
+def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
+             source=None, steps: int | None = None, seed: int | None = None,
+             finalize: bool = True) -> SharedSketchRun:
+    """Fit every consumer from ONE ``source → sketch → fan-out`` pass.
+
+    Parameters
+    ----------
+    plan: the shared execution plan. Every consumer's plan must agree with it
+        on the sketch geometry fields (:data:`SKETCH_FIELDS`); backends may
+        differ per consumer (each reducer folds its own way — the sketches are
+        backend-independent).
+    consumers: estimator instances, all constructed with the SAME key (shared
+        sketch ⇒ shared randomness). They are reset, registered on one shared
+        :class:`SketchCursor`, fed, and finalized in place.
+    data: in-memory ``(rows, p)`` array, consumed in ``plan.batch_size``
+        chunks — exactly like ``estimator.fit``. Mutually exclusive with
+        ``source``.
+    source / steps / seed: a ``(seed, step, shard) → (b, p)`` stream source
+        (the StreamEngine contract) pulled for ``steps`` steps ×
+        ``plan.n_shards`` shards — exactly like ``estimator.fit_stream``.
+    finalize: pass False to stop after ingest (e.g. to keep feeding via
+        ``run.partial_fit``); call ``run.finalize()`` when done.
+
+    Returns the :class:`SharedSketchRun`; the fitted attributes live on the
+    consumer objects themselves, identical (≤1e-5) to what separate ``fit``
+    calls would produce — but the data was compressed once, not once per
+    consumer.
+    """
+    consumers = tuple(consumers)
+    if not consumers:
+        raise ValueError("fit_many needs at least one consumer")
+    if (data is None) == (source is None):
+        raise ValueError("provide exactly one of data or source=")
+    if source is not None and steps is None:
+        raise ValueError("source= needs steps=")
+    for i, c in enumerate(consumers):
+        if not isinstance(c, SketchedEstimator):
+            raise TypeError(f"consumers[{i}] is {type(c).__name__}, expected a "
+                            "SketchedEstimator (SparsifiedMean/Cov/PCA/KMeans)")
+    key0 = as_key(consumers[0].key)
+    for i, c in enumerate(consumers):
+        _check_consumer(plan, c, i, key0)
+
+    cursor = SketchCursor(plan, key0)
+    for c in consumers:
+        c.reset()
+        c._cursor = cursor      # adopt the shared pass (reset() detaches again)
+        cursor.register(c)
+
+    if data is not None:
+        cursor.partial_fit(data)
+    else:
+        from repro.stream.engine import normalize_source
+
+        cursor.fold_source(normalize_source(source), steps, seed)
+
+    run = SharedSketchRun(consumers, cursor)
+    return run.finalize() if finalize else run

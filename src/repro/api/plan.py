@@ -12,6 +12,7 @@ the same per-(step, shard) sketches under the shared
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Literal
 
 import jax
@@ -92,15 +93,25 @@ class Plan:
                                 transform=self.transform)
 
     def resolve_mesh(self):
-        """The mesh for the sharded backend (auto-built over n_shards devices)."""
+        """The mesh for the sharded backend (auto-built over n_shards devices).
+
+        Auto-built meshes are cached per (n_shards, axis): repeated fits (and
+        the per-step streaming reducer) then reuse one mesh object, so the
+        compiled shard_map reductions keyed on it stay cached too.
+        """
         if self.mesh is not None:
             return self.mesh
         if len(jax.devices()) < self.n_shards:
             raise ValueError(
                 f"sharded backend needs {self.n_shards} devices for axis "
                 f"{self.axis!r}, have {len(jax.devices())}; pass mesh= or lower n_shards")
-        return jax.make_mesh((self.n_shards,), (self.axis,))
+        return _auto_mesh(self.n_shards, self.axis)
 
     def step_shard(self, chunk: int) -> tuple[int, int]:
         """Map a linear chunk index to its (step, shard) key coordinates."""
         return divmod(chunk, self.n_shards)
+
+
+@functools.lru_cache(maxsize=None)
+def _auto_mesh(n_shards: int, axis: str):
+    return jax.make_mesh((n_shards,), (axis,))

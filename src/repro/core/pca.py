@@ -10,6 +10,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import estimators, sketch
 from repro.core.sampling import SparseRows
@@ -66,7 +67,21 @@ def explained_variance(components: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.sum(proj**2) / jnp.sum(x**2)
 
 
-def recovered_components(est: jax.Array, true: jax.Array, thresh: float = 0.95) -> jax.Array:
-    """Table-I metric: #components with |⟨û_k, u_k⟩| > thresh (greedy row match)."""
-    g = jnp.abs(est.astype(jnp.float32) @ true.astype(jnp.float32).T)  # (k, k)
-    return jnp.sum(jnp.max(g, axis=0) > thresh)
+def recovered_components(est: jax.Array, true: jax.Array, thresh: float = 0.95) -> int:
+    """Table-I metric: #true components recovered under a greedy ONE-TO-ONE match.
+
+    Pairs the globally largest |⟨û_i, u_j⟩| first, then removes both û_i and
+    u_j from contention and repeats — so one estimated component can never be
+    credited for several true ones (a per-true-component ``max`` over the Gram
+    matrix would double-count exactly that way and inflate the metric).
+    """
+    g = np.abs(np.asarray(est, np.float32) @ np.asarray(true, np.float32).T)  # (ke, kt)
+    recovered = 0
+    for _ in range(min(g.shape)):
+        i, j = np.unravel_index(np.argmax(g), g.shape)
+        if g[i, j] <= thresh:
+            break
+        recovered += 1
+        g[i, :] = -1.0  # û_i is spent …
+        g[:, j] = -1.0  # … and u_j is matched
+    return recovered

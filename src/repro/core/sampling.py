@@ -51,6 +51,20 @@ class SparseRows:
 
     @property
     def gamma(self) -> float:
+        """Deprecated: use ``SketchSpec.gamma`` (canonically ``m / p_pad``).
+
+        For rows produced by ``sketch.sketch`` the two coincide (``self.p`` IS
+        the padded dimensionality), but for raw unpadded subsamples at a
+        non-power-of-two p this ``m / self.p`` disagrees with the spec the
+        sketch was configured from (e.g. p=1000 → p_pad=1024) — so the spec's
+        definition is the one the repo standardizes on.
+        """
+        import warnings
+
+        warnings.warn(
+            "SparseRows.gamma is deprecated: γ is canonically m / p_pad — read "
+            "it from the SketchSpec (spec.gamma) that produced this sketch",
+            DeprecationWarning, stacklevel=2)
         return self.m / self.p
 
     def to_dense(self) -> jax.Array:
@@ -90,9 +104,17 @@ def scatter_to_dense(values: jax.Array, indices: jax.Array, p: int) -> jax.Array
     return SparseRows(values, indices, p).to_dense()
 
 
-def counts_per_coordinate(indices: jax.Array, p: int, dtype=jnp.float32) -> jax.Array:
-    """(p,) — how many rows sampled each coordinate (the n_k^{(j)} of Eq. 39)."""
-    return jnp.zeros((p,), dtype).at[indices.reshape(-1)].add(1.0)
+def counts_per_coordinate(indices: jax.Array, p: int, dtype=jnp.int32) -> jax.Array:
+    """(p,) — how many rows sampled each coordinate (the n_k^{(j)} of Eq. 39).
+
+    Accumulates in int32 (exact to 2^31): a float32 scatter-add silently stops
+    counting once a coordinate passes 2^24, which turns any downstream running
+    mean into a fixed-rate EMA on long streams (the same fix as
+    ``KMeansState.counts``). Callers that need float weights cast the returned
+    exact counts at the call site — that is what the ``dtype`` parameter does.
+    """
+    counts = jnp.zeros((p,), jnp.int32).at[indices.reshape(-1)].add(1)
+    return counts if dtype == jnp.int32 else counts.astype(dtype)
 
 
 def row_sampled_gather(dense_vecs: jax.Array, indices: jax.Array) -> jax.Array:

@@ -33,6 +33,13 @@ class SketchSpec:
 
     @property
     def gamma(self) -> float:
+        """THE repo-wide definition of the keep fraction: γ = m / p_pad.
+
+        Sampling happens in the padded (preconditioned) domain, so p_pad — not
+        the original p — is the denominator ``make_spec`` rounds γ against.
+        (``SparseRows.gamma``, the m / p of a row's own domain, is deprecated:
+        at a non-power-of-two p the two disagree, e.g. p=1000 → p_pad=1024.)
+        """
         return self.m / self.p_pad
 
     def signs_key(self) -> jax.Array:
@@ -97,7 +104,13 @@ def unmix_dense(w_dense: jax.Array, spec: SketchSpec) -> jax.Array:
 
 
 def compression_ratio(spec: SketchSpec, value_bytes: int = 4, index_bytes: int = 4) -> float:
-    """Stored bytes per sample vs. dense fp32 — the paper's storage story."""
+    """Stored bytes per sample vs. dense fp32 — the paper's storage story.
+
+    The dense baseline is the ORIGINAL p (what the user actually stores), while
+    m was rounded from γ·p_pad — so at a padded p the ratio is slightly larger
+    than γ·(value_bytes+index_bytes)/4 (e.g. p=1000, γ=0.25 → m=256 →
+    ratio 0.512, not 0.5).
+    """
     dense = spec.p * 4
     sketched = spec.m * (value_bytes + index_bytes)
     return sketched / dense

@@ -22,5 +22,6 @@ from repro.stream.engine import (  # noqa: F401
     StreamKMeansConfig,
     StreamResult,
     batch_key,
+    normalize_source,
 )
 from repro.stream.sharded import sharded_cov, sharded_mean, sharded_moments  # noqa: F401

@@ -20,6 +20,13 @@ the fixed-size accumulator deltas** ((p,) + (p,p) + (r,K,p)·2 per step,
 independent of batch size). Single-device and sharded engines fold identical
 per-(step, shard) sketches, so they agree to float-sum reordering
 (tests/test_stream.py asserts 1e-5).
+
+The estimator API surfaces this fused pass: ``repro.api.fit_many`` drives any
+set of consumers from one shared ``source → sketch`` cursor under the same
+(seed, step, shard) contract (:func:`normalize_source` is the shared adapter),
+with the engine's per-step discipline — summed shard deltas applied once per
+step, sharded moments reduced by one psum of the fixed-size delta and nothing
+retained past its step.
 """
 from __future__ import annotations
 
@@ -100,6 +107,11 @@ def _normalize_source(source) -> Source:
 
         return from_obj
     raise TypeError(f"source must be callable or expose batch_at, got {type(source)}")
+
+
+# the (seed, step, shard) source contract is repo-wide — the estimator layer's
+# fit_stream / fit_many consume it through the same adapter
+normalize_source = _normalize_source
 
 
 class StreamEngine:

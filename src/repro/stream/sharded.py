@@ -6,8 +6,16 @@ rows, and the only collective is one psum of the fixed-size delta — (p,) for t
 mean, (p, p) for the covariance — regardless of how many rows each shard holds.
 repro.core.distributed delegates here, replacing its earlier global-view-jit
 wrappers with explicit collectives.
+
+The ``repro.api`` sharded backend also streams THROUGH :func:`sharded_moments`:
+its moment reducer buffers one step's shard sketches, reduces them with a
+single call (one psum of the fixed-size delta), folds the result via
+``moment_apply``, and drops the sketches — per-step streaming reduction, so
+host memory stays constant in the stream length.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +24,24 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.sampling import SparseRows
 from repro.stream import accumulators as acc
+
+
+@functools.lru_cache(maxsize=None)
+def _moments_fn(mesh, axes, track_cov, cov_path, p):
+    """The compiled psum reduction, cached per (mesh, axes, flags, p) so the
+    per-step streaming callers (repro.api sharded backend) pay tracing and
+    compilation once per stream, not once per step."""
+
+    def local(values, indices):
+        delta = acc.moment_delta(SparseRows(values, indices, p), track_cov=track_cov,
+                                 cov_path=cov_path)
+        for a in axes:
+            delta = jax.lax.psum(delta, a)
+        return delta
+
+    row_spec = P(axes if len(axes) > 1 else axes[0], None)
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=(row_spec, row_spec),
+                             out_specs=P()))
 
 
 def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True,
@@ -38,15 +64,7 @@ def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True,
         values = jnp.pad(values, ((0, pad), (0, 0)))
         indices = jnp.pad(indices, ((0, pad), (0, 0)))
 
-    def local(values, indices):
-        delta = acc.moment_delta(SparseRows(values, indices, p), track_cov=track_cov,
-                                 cov_path=cov_path)
-        for a in axes:
-            delta = jax.lax.psum(delta, a)
-        return delta
-
-    row_spec = P(axes if len(axes) > 1 else axes[0], None)
-    fn = shard_map(local, mesh=mesh, in_specs=(row_spec, row_spec), out_specs=P())
+    fn = _moments_fn(mesh, tuple(axes), bool(track_cov), cov_path, p)
     st = fn(values, indices)
     return acc.MomentState(st.sum_w, st.sum_wwt, jnp.int32(n))
 

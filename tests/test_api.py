@@ -20,6 +20,7 @@ from repro.api import (
     SparsifiedKMeans,
     SparsifiedMean,
     SparsifiedPCA,
+    fit_many,
     make_engine,
 )
 from repro.core import sketch
@@ -124,6 +125,216 @@ def test_fit_stream_consumes_pipeline_source():
     assert est.count_ == 384 and est.mean_.shape == (64,)
 
 
+# --------------------------------------------- fit_many: one shared sketch --
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fit_many_equals_separate_fits(backend):
+    """The tentpole acceptance bar: ONE compression pass feeding every consumer
+    reproduces the separate fits on every backend."""
+    x, labels, _ = make_clusters(KEY, n=1000, p=64, k=4)
+    plan = _plan(backend=backend)
+    mean_c = SparsifiedMean(plan, key=7)
+    cov_c = SparsifiedCov(plan, key=7)
+    pca_c = SparsifiedPCA(4, plan, key=7)
+    km_l = SparsifiedKMeans(4, plan, key=7)
+    km_m = SparsifiedKMeans(4, plan, key=7, algorithm="minibatch")
+    run = fit_many(plan, [mean_c, cov_c, pca_c, km_l, km_m], x)
+    assert run.count == 1000 and run.n_sketches == 5 and len(run) == 5
+
+    mean_s = SparsifiedMean(plan, key=7).fit(x)
+    cov_s = SparsifiedCov(plan, key=7).fit(x)
+    pca_s = SparsifiedPCA(4, plan, key=7).fit(x)
+    km_ls = SparsifiedKMeans(4, plan, key=7).fit(x)
+    km_ms = SparsifiedKMeans(4, plan, key=7, algorithm="minibatch").fit(x)
+
+    np.testing.assert_allclose(np.asarray(mean_c.mean_), np.asarray(mean_s.mean_),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cov_c.cov_), np.asarray(cov_s.cov_),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pca_c.components_),
+                               np.asarray(pca_s.components_), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pca_c.explained_variance_),
+                               np.asarray(pca_s.explained_variance_), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(km_l.centers_), np.asarray(km_ls.centers_),
+                               atol=1e-5)
+    assert np.array_equal(np.asarray(km_l.labels_), np.asarray(km_ls.labels_))
+    np.testing.assert_allclose(np.asarray(km_m.centers_), np.asarray(km_ms.centers_),
+                               atol=1e-5)
+    assert mean_c.count_ == cov_c.count_ == km_l.count_ == 1000
+
+
+def test_fit_many_sketches_once_per_chunk(monkeypatch):
+    """The whole point: sketch() runs once per (step, shard) chunk, NOT once
+    per consumer per chunk."""
+    calls = {"n": 0}
+    real = sketch.sketch
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(sketch, "sketch", counting)
+    x = jax.random.normal(KEY, (600, 64))
+    plan = _plan()  # batch_size=200 → 3 chunks
+    consumers = [SparsifiedPCA(4, plan, key=7), SparsifiedCov(plan, key=7),
+                 SparsifiedKMeans(4, plan, key=7)]
+    run = fit_many(plan, consumers, x)
+    assert calls["n"] == 3 == run.n_sketches
+    calls["n"] = 0
+    SparsifiedPCA(4, plan, key=7).fit(x)
+    SparsifiedCov(plan, key=7).fit(x)
+    SparsifiedKMeans(4, plan, key=7).fit(x)
+    assert calls["n"] == 9  # separate fits: one pass per consumer
+
+
+def test_fit_many_from_source():
+    """The (seed, step, shard) source contract through the shared pass."""
+    from repro.data.pipeline import VectorStreamSource
+
+    plan = _plan(backend="stream", batch_size=128)
+    mean_c, cov_c = SparsifiedMean(plan, key=2), SparsifiedCov(plan, key=2)
+    run = fit_many(plan, [mean_c, cov_c],
+                   source=VectorStreamSource(p=64, batch=128, seed=3), steps=3)
+    assert run.count == 384
+    ref = SparsifiedMean(plan, key=2).fit_stream(
+        VectorStreamSource(p=64, batch=128, seed=3), steps=3)
+    np.testing.assert_array_equal(np.asarray(mean_c.mean_), np.asarray(ref.mean_))
+    assert cov_c.cov_.shape == (64, 64)
+
+
+def test_fit_many_continued_ingest():
+    """finalize=False + run.partial_fit extends the SHARED pass for everyone."""
+    x = jax.random.normal(KEY, (400, 32))
+    plan = _plan(backend="stream", batch_size=100)
+    mean_c, cov_c = SparsifiedMean(plan, key=3), SparsifiedCov(plan, key=3)
+    run = fit_many(plan, [mean_c, cov_c], x[:200], finalize=False)
+    run.partial_fit(x[200:]).finalize()
+    whole = SparsifiedCov(plan, key=3).fit(x)
+    np.testing.assert_array_equal(np.asarray(cov_c.cov_), np.asarray(whole.cov_))
+    np.testing.assert_array_equal(np.asarray(mean_c.mean_), np.asarray(whole.mean_))
+    assert mean_c.count_ == 400
+
+
+def test_reset_detaches_from_shared_cursor():
+    """reset() must unregister from a live shared pass — the old run keeps
+    feeding the OTHER consumers only, never the reset estimator."""
+    x = jax.random.normal(KEY, (400, 32))
+    plan = _plan(backend="stream", batch_size=100)
+    mean_c, cov_c = SparsifiedMean(plan, key=3), SparsifiedCov(plan, key=3)
+    run = fit_many(plan, [mean_c, cov_c], x[:200], finalize=False)
+    mean_c.reset()
+    run.partial_fit(x[200:])            # only cov_c still rides the shared pass
+    assert mean_c.count_ == 0 and cov_c.count_ == 400
+    run.finalize()                      # skips the detached mean_c, fits cov_c
+    assert not mean_c._fitted and cov_c._fitted
+    whole = SparsifiedCov(plan, key=3).fit(x)
+    np.testing.assert_array_equal(np.asarray(cov_c.cov_), np.asarray(whole.cov_))
+    # the reset estimator refits independently, untouched by the old run
+    mean_c.fit(x[:100])
+    assert mean_c.count_ == 100
+
+
+def test_fit_many_validation():
+    x = jnp.ones((8, 16))
+    plan = _plan()
+    with pytest.raises(ValueError, match="at least one"):
+        fit_many(plan, [], x)
+    with pytest.raises(ValueError, match="exactly one"):
+        fit_many(plan, [SparsifiedMean(plan, key=0)])
+    with pytest.raises(ValueError, match="exactly one"):
+        fit_many(plan, [SparsifiedMean(plan, key=0)], x, source=lambda s, t, sh: x)
+    with pytest.raises(ValueError, match="steps"):
+        fit_many(plan, [SparsifiedMean(plan, key=0)], source=lambda s, t, sh: x)
+    with pytest.raises(ValueError, match="same key"):
+        fit_many(plan, [SparsifiedMean(plan, key=0), SparsifiedCov(plan, key=1)], x)
+    with pytest.raises(ValueError, match="gamma"):
+        fit_many(plan, [SparsifiedMean(_plan(gamma=0.5), key=0)], x)
+    with pytest.raises(TypeError, match="SketchedEstimator"):
+        fit_many(plan, [GradCompressor()], x)
+    with pytest.raises(TypeError, match="SketchedEstimator"):
+        fit_many(plan, [np.ones((4, 4))], x)  # key-less object in position 0
+
+
+def test_sharded_moments_stream_constant_memory():
+    """The sharded moment path is per-step psum streaming now — nothing is
+    retained past its step (the old concat()-then-reduce kept everything)."""
+    x = jax.random.normal(KEY, (1000, 64))
+    est = SparsifiedCov(_plan(backend="sharded"), key=7).fit(x)
+    assert est._reducer.parts == [] and est._reducer._step_parts == []
+    assert int(est._reducer.state.count) == 1000
+    # … while Lloyd K-means still retains the sketch it clusters (Alg. 1)
+    km = SparsifiedKMeans(3, _plan(backend="sharded"), key=7).fit(x)
+    assert len(km._reducer.parts) == 5
+
+
+# -------------------------------------- satellite: minibatch tail flush -----
+
+
+def test_minibatch_tail_flush_and_interleaved_finalize():
+    """Row counts that are no multiple of batch_size·n_shards leave a pending
+    half step; finalize() flushes it and acts as a checkpoint that
+    partial_fit can continue from."""
+    x, _, _ = make_clusters(KEY, n=1100, p=32, k=3)
+    plan = _plan(backend="stream", batch_size=100, n_shards=2)
+    est = SparsifiedKMeans(3, plan, key=5, algorithm="minibatch")
+    est.partial_fit(x[:500])            # 5 chunks = 2 full steps + 1 pending shard
+    assert est._km_pending is not None
+    est.finalize()
+    assert est._km_pending is None and est.count_ == 500
+    c1 = np.asarray(est.centers_)
+    assert np.isfinite(c1).all()
+    est.partial_fit(x[500:])            # 6 more chunks, ends on a half step again
+    est.finalize()
+    assert est.count_ == 1100 and est.centers_.shape == (3, 32)
+    assert np.isfinite(np.asarray(est.centers_)).all()
+    assert not np.allclose(np.asarray(est.centers_), c1)  # the tail data counted
+
+
+def test_minibatch_zero_row_batch_is_noop():
+    x, _, _ = make_clusters(KEY, n=300, p=32, k=3)
+    plan = _plan(backend="stream", batch_size=100)
+    est = SparsifiedKMeans(3, plan, key=5, algorithm="minibatch")
+    est.partial_fit(x)
+    st = est._km_state
+    est.partial_fit(jnp.zeros((0, 32)))  # zero-row batch: nothing folds
+    assert est._km_state is st and est.count_ == 300
+    est.finalize()
+    assert est.count_ == 300
+    # zero rows as the ONLY input: spec exists but there is nothing to finalize
+    est2 = SparsifiedKMeans(3, plan, key=5, algorithm="minibatch")
+    est2.partial_fit(jnp.zeros((0, 32)))
+    with pytest.raises(RuntimeError, match="no batches"):
+        est2.finalize()
+
+
+# ------------------------------------------ satellite: sketch() utility -----
+
+
+def test_sketch_on_unfitted_does_not_pin():
+    """sketch() is a read-only utility: on a fresh estimator it derives a
+    throwaway spec — no p pinning, no reducer allocation."""
+    est = SparsifiedMean(_plan(), key=0)
+    s = est.sketch(jnp.ones((4, 64)))
+    assert s.n == 4
+    assert est.spec_ is None and est._reducer is None
+    est.partial_fit(jnp.ones((8, 32)))  # a different p still fits fine
+    assert est.spec_.p == 32
+
+
+def test_sketch_mask_key_per_call():
+    """Repeated sketch() calls reuse the spec's one-shot mask (documented);
+    mask_key= draws an independent mask per call."""
+    est = SparsifiedMean(_plan(), key=0).fit(jax.random.normal(KEY, (64, 64)))
+    x = jnp.ones((16, 64))
+    s1, s2 = est.sketch(x), est.sketch(x)
+    np.testing.assert_array_equal(np.asarray(s1.indices), np.asarray(s2.indices))
+    s3 = est.sketch(x, mask_key=1)
+    assert not np.array_equal(np.asarray(s3.indices), np.asarray(s1.indices))
+    np.testing.assert_array_equal(
+        np.asarray(est.sketch(x, mask_key=1).indices), np.asarray(s3.indices))
+
+
 # ------------------------------------------------------ satellite: DCT ------
 
 
@@ -174,6 +385,19 @@ def test_make_spec_validates_gamma_and_clamps_m():
     spec = sketch.make_spec(60, KEY, gamma=1.0)
     assert spec.m == spec.p_pad == 64
     assert sketch.make_spec(64, KEY, gamma=1e-9).m == 1
+
+
+def test_gamma_unified_and_compression_ratio_at_padded_p():
+    """γ is canonically m / p_pad; storage ratio is against the ORIGINAL p."""
+    spec = sketch.make_spec(1000, KEY, gamma=0.25)       # p_pad = 1024
+    assert spec.p_pad == 1024 and spec.m == 256
+    assert spec.gamma == 256 / 1024
+    assert sketch.compression_ratio(spec) == pytest.approx(256 * 8 / 4000)
+    # sketched rows live in the padded domain, where both definitions agree
+    s = sketch.sketch(jnp.ones((4, 1000)), spec)
+    assert s.p == spec.p_pad
+    with pytest.warns(DeprecationWarning, match="p_pad"):
+        assert s.gamma == spec.gamma
 
 
 # -------------------------------------- satellite: compact-path cov ---------
@@ -315,7 +539,10 @@ def test_plan_validation():
 def test_sharded_backend_matches_batch_on_8_devices():
     """The acceptance test at real multi-device scale: Plan(backend="sharded",
     n_shards=8) over 8 forced host devices == batch, to 1e-5 (subprocess so
-    the session keeps the single real device)."""
+    the session keeps the single real device). 1160 rows / batch 80 = 15 chunks
+    — NOT a multiple of n_shards, so the sharded moment path's trailing
+    partial step must be psum-flushed at reduce time (dropping it would shift
+    the mean/cov visibly)."""
     env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH="src", JAX_PLATFORMS="cpu")
     code = textwrap.dedent("""
@@ -323,8 +550,9 @@ def test_sharded_backend_matches_batch_on_8_devices():
         from scipy.optimize import linear_sum_assignment
         from repro.api import Plan, SparsifiedCov, SparsifiedKMeans
 
-        x = jax.random.normal(jax.random.PRNGKey(0), (1280, 64))
+        x = jax.random.normal(jax.random.PRNGKey(0), (1160, 64))
         plan = Plan(backend="batch", gamma=0.25, batch_size=80, n_shards=8)
+        assert SparsifiedCov(plan.replace(backend="sharded"), key=7).fit(x).count_ == 1160
         ref = SparsifiedCov(plan, key=7).fit(x)
         alt = SparsifiedCov(plan.replace(backend="sharded"), key=7).fit(x)
         np.testing.assert_allclose(np.asarray(alt.mean_), np.asarray(ref.mean_), atol=1e-5)

@@ -58,6 +58,23 @@ def test_streaming_pca_equals_batch():
                                jnp.eye(k), atol=1e-3)
 
 
+def test_recovered_components_one_to_one():
+    """Table-I metric: one estimate aligned with TWO true PCs is credited once.
+
+    The old per-true-component max over the Gram matrix counted est[0] for both
+    e0 and e1 here (inflating Table I); greedy one-to-one matching does not.
+    """
+    u = jnp.eye(4)[:2]                                    # true PCs: e0, e1
+    est = jnp.stack([(u[0] + u[1]) / jnp.sqrt(2.0),       # overlaps both at 0.707
+                     jnp.eye(4)[2]])                      # orthogonal to both
+    assert int(pca.recovered_components(est, u, thresh=0.6)) == 1
+    # a clean one-to-one alignment still counts fully (order/sign agnostic)
+    est2 = jnp.stack([-u[1], u[0]])
+    assert int(pca.recovered_components(est2, u, thresh=0.95)) == 2
+    # nothing above threshold → zero
+    assert int(pca.recovered_components(jnp.eye(4)[2:4], u, thresh=0.9)) == 0
+
+
 def test_preconditioning_improves_pc_recovery():
     """Table I: spiky PCs (canonical basis vectors) need the ROS to be found."""
     p, n, k = 128, 1024, 5

@@ -71,6 +71,35 @@ def test_norm_reduction_cor3():
     assert set(np.unique(np.asarray(r0))) <= {0.0, 1.0}
 
 
+def test_counts_per_coordinate_exact_past_2p24():
+    """Regression: the Eq.-39 weights must stay exact past 2^24 rows per
+    coordinate. A float32 scatter-add saturates there (16777216 + 1 == 16777216
+    in f32), silently turning long-stream running means into a fixed-rate EMA;
+    int32 accumulation folded in chunks stays exact."""
+    p = 8
+    chunk = jnp.zeros((1 << 16, 64), jnp.int32)          # 2^22 hits on coord 0
+    total = jnp.zeros((p,), jnp.int32)
+    for _ in range(4):                                   # … ×4 → exactly 2^24
+        total = total + sampling.counts_per_coordinate(chunk, p)
+    total = total + sampling.counts_per_coordinate(jnp.zeros((1, 3), jnp.int32), p)
+    assert total.dtype == jnp.int32
+    assert int(total[0]) == (1 << 24) + 3
+    # the old failure mode, demonstrated: f32 cannot even represent the answer
+    assert float(jnp.float32(1 << 24) + jnp.float32(3)) != float((1 << 24) + 3)
+    # call sites that need float weights cast the exact counts (the dtype kwarg)
+    as_f32 = sampling.counts_per_coordinate(chunk, p, dtype=jnp.float32)
+    assert as_f32.dtype == jnp.float32 and float(as_f32[0]) == float(1 << 22)
+
+
+def test_sparserows_gamma_deprecated():
+    """γ is canonically m / p_pad (SketchSpec.gamma); the row-domain m / p is
+    deprecated because the two disagree at padded (non-power-of-two) p."""
+    s = sampling.subsample(jax.random.normal(KEY, (4, 32)), KEY, 8)
+    with pytest.warns(DeprecationWarning, match="p_pad"):
+        g = s.gamma
+    assert g == 0.25
+
+
 @pytest.mark.parametrize("seed", range(25))
 def test_property_exact_sparsity(seed):
     rng = np.random.default_rng(seed)
