@@ -27,6 +27,7 @@ def main() -> None:
         fig8_kmeans_timing,
         grad_compress_bench,
         kernel_bench,
+        lowrank_bench,
         stream_bench,
     )
 
@@ -43,6 +44,7 @@ def main() -> None:
         ("grad_compress_bench", grad_compress_bench.run),
         ("stream_bench", stream_bench.run),
         ("api_bench", api_bench.run),
+        ("lowrank_bench", lowrank_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -36,6 +36,18 @@ def main():
     rec = int(pca.recovered_components(est.components_, u_true, thresh=0.9))
     print(f"recovered {rec}/8 planted components from a {est.spec_.gamma:.0%} sketch")
 
+    # the low-rank spectral path: same job, the (p, p) accumulator replaced by
+    # the O(rank·p) repro.lowrank state — one Plan field flips the memory class
+    rank = 64
+    est_lr = SparsifiedPCA(8, plan.replace(cov_path="lowrank", rank=rank),
+                           key=jax.random.PRNGKey(1))
+    est_lr.fit_stream(source, steps=n_batches)
+    pp = est_lr.spec_.p_pad
+    print(f"lowrank path: accumulator {(rank + 3) * pp * 4 / 1024:.0f} KiB vs "
+          f"{pp * pp * 4 / 1024:.0f} KiB for the (p, p) accumulator")
+    rec_lr = int(pca.recovered_components(est_lr.components_, u_true, thresh=0.9))
+    print(f"recovered {rec_lr}/8 planted components from the rank-{rank} state")
+
 
 if __name__ == "__main__":
     main()

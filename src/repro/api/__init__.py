@@ -63,8 +63,13 @@ def make_engine(plan: Plan, p: int, key, source, *, track_cov: bool = True,
         raise ValueError(
             f'make_engine needs backend "stream" or "sharded", got {plan.backend!r}; '
             "for in-memory data use the estimator classes directly")
+    if plan.cov_path == "lowrank" and plan.lowrank_method == "fd":
+        raise ValueError(
+            "the engine's low-rank path psums the linear range-finder delta; "
+            "lowrank_method='fd' (order-dependent shrink) is estimator-layer "
+            "only — use the SparsifiedPCA classes, or lowrank_method='range'")
     spec = plan.spec(p, as_key(key))
     mesh = plan.resolve_mesh() if plan.backend == "sharded" else None
     return StreamEngine(spec, source, n_shards=plan.n_shards, mesh=mesh,
                         axis=plan.axis, track_cov=track_cov, kmeans=kmeans,
-                        impl=plan.impl, cov_path=plan.cov_path)
+                        impl=plan.impl, cov_path=plan.cov_path, rank=plan.rank)

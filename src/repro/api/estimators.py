@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.plan import BACKENDS, Plan
 from repro.core import estimators as est
@@ -37,6 +38,7 @@ from repro.core import sketch as sketch_mod
 from repro.core.grad_compress import CompressConfig, compress_grads, mask_spec
 from repro.core.sampling import SparseRows
 from repro.core.sketch import batch_key
+from repro import lowrank as lowrank_mod
 from repro.stream import accumulators as acc
 from repro.stream import sharded as sharded_mod
 from repro.utils.prng import fold_in_str
@@ -114,23 +116,59 @@ class _MomentReducer:
     def __init__(self, plan: Plan, spec: sketch_mod.SketchSpec, track_cov: bool,
                  keep_sketch: bool = False, needs_moments: bool = True):
         self.plan, self.spec, self.track_cov = plan, spec, track_cov
-        self.keep_sketch = keep_sketch or (plan.backend == "batch" and needs_moments)
+        # the low-rank spectral path replaces the (p, p) accumulator with the
+        # O(rank·p) repro.lowrank states — on EVERY backend (batch included:
+        # sketches fold through the same per-chunk deltas instead of being
+        # retained, which is the whole point of the path)
+        self.lowrank = (plan.cov_path == "lowrank" and track_cov and needs_moments)
+        self.keep_sketch = keep_sketch or (plan.backend == "batch" and needs_moments
+                                           and not self.lowrank)
         self.parts: list[SparseRows] = []
         self._step_parts: list[SparseRows] = []  # sharded: the in-flight step
         self._mesh = None
-        # moment state only where reduce() will read it (K-means never does)
-        self.state = (acc.moment_init(spec.p_pad, track_cov=track_cov)
-                      if plan.backend in ("stream", "sharded") and needs_moments
-                      else None)
+        self._omega = None
+        if self.lowrank:
+            if plan.rank > spec.p_pad:
+                raise ValueError(f"rank={plan.rank} exceeds p_pad={spec.p_pad}; "
+                                 "a low-rank sketch must be narrower than p")
+            if plan.lowrank_method == "range":
+                self._omega = lowrank_mod.omega(spec.key, spec.p_pad, plan.rank)
+                self.state = lowrank_mod.range_init(spec.p_pad, plan.rank)
+            else:
+                self.state = lowrank_mod.fd_init(spec.p_pad, plan.rank)
+        else:
+            # moment state only where reduce() will read it (K-means never does)
+            self.state = (acc.moment_init(spec.p_pad, track_cov=track_cov)
+                          if plan.backend in ("stream", "sharded") and needs_moments
+                          else None)
+
+    @property
+    def _moment_cov_path(self) -> str:
+        # stream_delta/sharded_moments only understand dense|compact; with the
+        # lowrank path they are only ever called track_cov=False (mean-only)
+        return "dense" if self.plan.cov_path == "lowrank" else self.plan.cov_path
 
     def fold(self, s: SparseRows, step: int, shard: int) -> None:
-        if self.state is not None:
+        if self.lowrank:
+            if self.plan.lowrank_method == "fd":
+                # FD shrink is order-dependent: fold in (step, shard) linear
+                # order on every backend — backends agree bit-for-bit
+                self.state = lowrank_mod.fd_update(self.state, s)
+            elif self.plan.backend == "sharded":
+                self._step_parts.append(s)
+                if shard == self.plan.n_shards - 1:
+                    self.flush_step()
+            else:
+                self.state = lowrank_mod.range_update(self.state, s, self._omega,
+                                                      impl=self.plan.impl)
+        elif self.state is not None:
             if self.plan.backend == "sharded":
                 self._step_parts.append(s)
                 if shard == self.plan.n_shards - 1:
                     self.flush_step()
             else:
-                self.state = est.stream_update(self.state, s, cov_path=self.plan.cov_path)
+                self.state = est.stream_update(self.state, s,
+                                               cov_path=self._moment_cov_path)
         if self.keep_sketch:
             self.parts.append(s)
 
@@ -140,10 +178,17 @@ class _MomentReducer:
             return
         if self._mesh is None:
             self._mesh = self.plan.resolve_mesh()
-        delta = sharded_mod.sharded_moments(
-            _concat_sparse(self._step_parts, self.spec.p_pad), self._mesh,
-            (self.plan.axis,), track_cov=self.track_cov, cov_path=self.plan.cov_path)
-        self.state = acc.moment_apply(self.state, delta)
+        step_sketch = _concat_sparse(self._step_parts, self.spec.p_pad)
+        if self.lowrank:
+            delta = sharded_mod.sharded_lowrank(step_sketch, self._omega,
+                                                self._mesh, (self.plan.axis,),
+                                                impl=self.plan.impl)
+            self.state = lowrank_mod.range_apply(self.state, delta)
+        else:
+            delta = sharded_mod.sharded_moments(
+                step_sketch, self._mesh, (self.plan.axis,),
+                track_cov=self.track_cov, cov_path=self._moment_cov_path)
+            self.state = acc.moment_apply(self.state, delta)
         self._step_parts = []
 
     def concat(self) -> SparseRows:
@@ -152,8 +197,24 @@ class _MomentReducer:
         return _concat_sparse(self.parts, self.spec.p_pad)
 
     def reduce(self):
-        """(mean_pre, cov_pre | None, count) via the plan's backend."""
+        """(mean_pre, cov_pre | LowRankCov | None, count) via the plan's backend."""
+        if self.lowrank:
+            return self._reduce_lowrank()
         return MOMENT_BACKENDS[self.plan.backend](self)
+
+    def _reduce_lowrank(self):
+        """Finalize the O(rank·p) spectral state — shared by all backends (they
+        differ only in HOW the same linear deltas were reduced)."""
+        self.flush_step()  # a trailing partial step still needs its psum
+        st = self.state
+        if int(st.count) == 0:
+            raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
+        if self.plan.lowrank_method == "range":
+            return (lowrank_mod.range_finalize_mean(st, self.spec.m),
+                    lowrank_mod.range_finalize(st, self.spec.m, self._omega),
+                    st.count)
+        return (lowrank_mod.fd_finalize_mean(st, self.spec.m),
+                lowrank_mod.fd_finalize(st, self.spec.m), st.count)
 
 
 def _concat_sparse(parts: list[SparseRows], p: int) -> SparseRows:
@@ -409,6 +470,11 @@ class SparsifiedCov(SketchedEstimator):
         if spec.m < 2:
             raise ValueError(f"covariance needs m >= 2 (Thm B4), got m={spec.m}; "
                              "raise gamma/m")
+        if self.plan.cov_path == "lowrank":
+            raise ValueError(
+                "cov_path='lowrank' is a PCA-only factored path (it never forms "
+                "the (p, p) matrix this estimator returns); use SparsifiedPCA, "
+                "or cov_path='dense'/'compact' for the full covariance")
 
     def _finalize(self) -> None:
         mean_pre, cov_pre, n = self._reducer.reduce()
@@ -426,8 +492,15 @@ class SparsifiedCov(SketchedEstimator):
 class SparsifiedPCA(SketchedEstimator):
     """Principal components from the sketched covariance (paper §V).
 
+    With ``Plan(cov_path="lowrank", rank=l)`` the (p, p) covariance accumulator
+    is replaced by the O(l·p) ``repro.lowrank`` spectral states on every
+    backend — same fit/finalize contract, and the factored eigenmodel is kept
+    on ``cov_lowrank_``. Pick l ≥ 4·n_components (the "range" method finalizes
+    l/2 eigenpairs from the 2×-oversampled sketch; "fd" finalizes all l).
+
     Fitted: ``components_`` ((n_components, p), original domain, rows are PCs),
-    ``explained_variance_`` (eigenvalues, descending), ``mean_``, ``count_``.
+    ``explained_variance_`` (eigenvalues, descending), ``mean_``, ``count_``,
+    ``cov_lowrank_`` (:class:`repro.lowrank.LowRankCov` | None).
     """
 
     _track_cov = True
@@ -439,10 +512,24 @@ class SparsifiedPCA(SketchedEstimator):
     def _on_spec(self, spec: sketch_mod.SketchSpec) -> None:
         if spec.m < 2:
             raise ValueError(f"PCA needs m >= 2 (Thm B4 covariance), got m={spec.m}")
+        if self.plan.cov_path == "lowrank":
+            model_rank = (self.plan.rank // 2 if self.plan.lowrank_method == "range"
+                          else self.plan.rank)
+            if self.n_components > model_rank:
+                raise ValueError(
+                    f"n_components={self.n_components} exceeds the rank-{model_rank} "
+                    f"eigenmodel of a rank={self.plan.rank} "
+                    f"{self.plan.lowrank_method!r} sketch; raise Plan.rank "
+                    f"(l ≥ 4·n_components recommended)")
 
     def _finalize(self) -> None:
         mean_pre, cov_pre, n = self._reducer.reduce()
-        comps_pre, evals = pca_mod._top_eig(cov_pre, self.n_components)
+        if isinstance(cov_pre, lowrank_mod.LowRankCov):
+            self.cov_lowrank_ = cov_pre
+            comps_pre, evals = cov_pre.top(self.n_components)
+        else:
+            self.cov_lowrank_ = None
+            comps_pre, evals = pca_mod._top_eig(cov_pre, self.n_components)
         self.components_ = sketch_mod.unmix_dense(comps_pre, self.spec_)
         self.explained_variance_ = evals
         self.mean_ = self._unmix_vec(mean_pre)
@@ -473,8 +560,19 @@ class SparsifiedKMeans(SketchedEstimator):
     step-start state, as the StreamEngine computes them), so backends stay
     tolerance-identical; ``labels_`` is None (use :meth:`predict`).
 
+    Mini-batch extras (ROADMAP streaming-K-means items): ``decay`` < 1 is a
+    forgetting factor for non-stationary streams — accumulated per-coordinate
+    counts shrink by ``decay`` each step before the new deltas fold in, so the
+    centers track drifting clusters with effective memory ≈ 1/(1−decay) steps.
+    Unless ``track_reassignments=False``, each step's rows are re-assigned
+    under the post-update centers and compared to their pre-update assignment;
+    the per-step counts (best hypothesis) land on ``reassign_counts_`` /
+    ``reassign_fraction_`` — a convergence signal that decays toward zero as
+    the solution settles (costs one extra assignment pass per batch).
+
     Fitted: ``centers_`` ((k, p), original domain), ``centers_pre_``,
-    ``objective_``, ``labels_``, ``n_iter_`` (lloyd), ``count_``.
+    ``objective_``, ``labels_``, ``n_iter_`` (lloyd), ``count_``,
+    ``reassign_counts_`` / ``reassign_fraction_`` ((steps,) arrays; minibatch).
     """
 
     _track_cov = False
@@ -482,14 +580,22 @@ class SparsifiedKMeans(SketchedEstimator):
 
     def __init__(self, k: int, plan: Plan, key: jax.Array | int = 0, *,
                  n_init: int = 3, max_iter: int = 100, tol: float = 1e-6,
-                 algorithm: str = "lloyd"):
+                 algorithm: str = "lloyd", decay: float = 1.0,
+                 track_reassignments: bool = True):
         if algorithm not in ("lloyd", "minibatch"):
             raise ValueError(f"algorithm must be 'lloyd' or 'minibatch', got {algorithm!r}")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        if decay < 1.0 and algorithm != "minibatch":
+            raise ValueError("decay (forgetting) only applies to the streaming "
+                             "algorithm='minibatch' accumulators")
         self.k = int(k)
         self.n_init = int(n_init)
         self.max_iter = int(max_iter)
         self.tol = float(tol)
         self.algorithm = algorithm
+        self.decay = float(decay)
+        self.track_reassignments = bool(track_reassignments) and algorithm == "minibatch"
         self._keep_sketch = algorithm == "lloyd"  # Alg. 1 clusters the retained sketch
         super().__init__(plan, key)
 
@@ -497,6 +603,10 @@ class SparsifiedKMeans(SketchedEstimator):
         super().reset()
         self._km_state: acc.KMeansState | None = None
         self._km_pending = None  # buffered deltas of the in-flight step
+        # (sketch, pre-update labels) pairs of the in-flight step, for the
+        # reassignment counts — dropped at every flush
+        self._km_step_sketches: list[tuple[SparseRows, jax.Array]] = []
+        self._reassign_history: list[tuple[np.ndarray, int]] = []
         return self
 
     # --------------------------------------------------------- minibatch ----
@@ -507,28 +617,52 @@ class SparsifiedKMeans(SketchedEstimator):
             return
         if self._km_state is None:
             self._km_state = acc.kmeans_init(
-                fold_in_str(self.spec_.key, "api-kmeans"), s, self.k, self.n_init)
+                fold_in_str(self.spec_.key, "api-kmeans"), s, self.k, self.n_init,
+                decay=self.decay)
         # engine semantics: every shard's delta is taken against the step-start
         # state, summed, and applied once per step — backend-independent.
-        d = acc.kmeans_delta(self._km_state, s)
+        if self.track_reassignments:
+            # the pre-update labels ride along with the delta (computed once)
+            d, a0 = acc.kmeans_delta_with_assign(self._km_state, s)
+            self._km_step_sketches.append((s, a0))
+        else:
+            d = acc.kmeans_delta(self._km_state, s)
         self._km_pending = (d if self._km_pending is None
                             else jax.tree.map(jnp.add, self._km_pending, d))
         if shard == self.plan.n_shards - 1:
             self._flush_step()
 
     def _flush_step(self) -> None:
-        if self._km_pending is not None:
-            self._km_state = acc.kmeans_apply(self._km_state, self._km_pending)
-            self._km_pending = None
+        if self._km_pending is None:
+            return
+        self._km_state = acc.kmeans_apply(self._km_state, self._km_pending,
+                                          decay=self.decay)
+        self._km_pending = None
+        if self.track_reassignments:
+            counts = jnp.zeros((self.n_init,), jnp.int32)
+            rows = 0
+            for s, a0 in self._km_step_sketches:
+                counts = counts + acc.kmeans_reassigned(self._km_state, s, a0)
+                rows += s.n
+            self._reassign_history.append((np.asarray(counts), rows))
+        self._km_step_sketches = []
 
     # ----------------------------------------------------------- finalize ---
 
     def _finalize(self) -> None:
+        self.reassign_counts_ = None
+        self.reassign_fraction_ = None
         if self.algorithm == "minibatch":
             self._flush_step()
             if self._km_state is None:
                 raise RuntimeError("no batches folded yet — call fit()/partial_fit() first")
             centers_pre, obj = acc.kmeans_finalize(self._km_state)
+            if self.track_reassignments and self._reassign_history:
+                best = int(np.argmin(np.asarray(self._km_state.obj)))
+                cnt = np.array([c[best] for c, _ in self._reassign_history])
+                rows = np.array([max(r, 1) for _, r in self._reassign_history])
+                self.reassign_counts_ = cnt
+                self.reassign_fraction_ = cnt / rows
             self.labels_ = None
             self.n_iter_ = None
             self.count_ = int(self._km_state.count)

@@ -37,8 +37,10 @@ from repro.api.plan import Plan
 from repro.core import sketch as sketch_mod
 
 # Plan fields that determine WHAT the shared sketch is (spec + chunk→key
-# mapping). Consumers must agree with the driving plan on these; the backend
-# itself may differ per consumer — it is a pure fold/execution choice.
+# mapping). Consumers must agree with the driving plan on these; the backend —
+# and the fold choices cov_path / rank / lowrank_method, so an O(rank·p)
+# lowrank PCA and a full dense covariance can ride ONE pass — may differ per
+# consumer: they are pure fold/execution choices (tests/test_lowrank.py).
 SKETCH_FIELDS = ("gamma", "m", "transform", "impl", "batch_size", "n_shards",
                  "dtype")
 

@@ -50,8 +50,17 @@ class Plan:
     mesh:       jax Mesh for the sharded backend; None auto-builds a
                 (n_shards,)-device mesh at first use.
     cov_path:   covariance delta path — "dense" (scatter to (b, p), one MXU
-                matmul) or "compact" (scatter b·m² outer products; the γ ≪ 1
-                memory fix — no dense (b, p) intermediate).
+                matmul), "compact" (scatter b·m² outer products; the γ ≪ 1
+                memory fix — no dense (b, p) intermediate), or "lowrank"
+                (repro.lowrank: O(rank·p) spectral accumulators for PCA-only
+                consumers — the (p, p) accumulator itself disappears).
+    rank:       sketch width l of the low-rank path (required when
+                cov_path="lowrank"; the finalized eigenmodel holds l/2
+                eigenpairs under the default "range" method, all l under "fd").
+    lowrank_method: "range" — randomized range-finder / co-occurrence state,
+                linear so its (p, l) delta psums across shards (the default);
+                "fd" — Frequent Directions, deterministic guarantee but a
+                sequential (order-dependent) fold.
     dtype:      input rows are cast to this before sketching.
     """
 
@@ -64,14 +73,27 @@ class Plan:
     n_shards: int = 1
     axis: str = "data"
     mesh: Any | None = None
-    cov_path: Literal["dense", "compact"] = "dense"
+    cov_path: Literal["dense", "compact", "lowrank"] = "dense"
+    rank: int | None = None
+    lowrank_method: Literal["range", "fd"] = "range"
     dtype: Any = "float32"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {self.backend!r}")
-        if self.cov_path not in ("dense", "compact"):
-            raise ValueError(f"cov_path must be 'dense' or 'compact', got {self.cov_path!r}")
+        if self.cov_path not in ("dense", "compact", "lowrank"):
+            raise ValueError(
+                f"cov_path must be 'dense', 'compact' or 'lowrank', got {self.cov_path!r}")
+        if self.lowrank_method not in ("range", "fd"):
+            raise ValueError(
+                f"lowrank_method must be 'range' or 'fd', got {self.lowrank_method!r}")
+        if self.cov_path == "lowrank":
+            if self.rank is None or self.rank < 2:
+                raise ValueError(
+                    f"cov_path='lowrank' needs rank >= 2 (the l of the (l, p) "
+                    f"sketch), got rank={self.rank}")
+        elif self.rank is not None:
+            raise ValueError("rank= only applies to cov_path='lowrank'")
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
         if self.n_shards < 1:

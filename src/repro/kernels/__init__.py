@@ -1,8 +1,10 @@
-"""Pallas TPU kernels for the paper's two compute hot-spots.
+"""Pallas TPU kernels for the paper's compute hot-spots.
 
 - fwht:          fused ROS preconditioning y = H(d⊙x) — Kronecker MXU form
 - sparse_assign: sparsified K-means assignment on compact sparse rows
+- spmm:          sparse-times-dense pair (W·Omega and Wᵀ·T) feeding the
+                 low-rank spectral accumulators without densifying the batch
 - ops:           public wrappers (backend auto-selection)
 - ref:           pure-jnp oracles used for validation
 """
-from repro.kernels import fwht, ops, ref, sparse_assign  # noqa: F401
+from repro.kernels import fwht, ops, ref, sparse_assign, spmm  # noqa: F401

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import fwht as _fwht
 from repro.kernels import ref as _ref
 from repro.kernels import sparse_assign as _sa
+from repro.kernels import spmm as _spmm
 
 
 @functools.cache
@@ -38,6 +39,49 @@ def sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array, mod
     if mode == "ref":
         return _ref.ref_sparse_assign(values, indices, centers)
     return _sa.sparse_assign(values, indices, centers, interpret=(mode == "interpret"))
+
+
+# the spmm kernels hold the full (p, l) operand/output block + a (block_rows, p)
+# densify scratch in VMEM with no p-tiling yet (ROADMAP); past this budget the
+# compiled kernel cannot fit, so "auto"/"kernel" fall back to the jnp path
+# (which XLA still runs on-device) instead of failing to compile.
+_SPMM_VMEM_BUDGET = 12 << 20
+
+
+def _sparse_mode(mode: str, p: int, ell: int) -> str:
+    """Normalize a backend name to this module's vocabulary.
+
+    Call sites forward ``Plan.impl`` / ``StreamEngine.impl`` here verbatim, and
+    that knob speaks the Hadamard vocabulary where the jnp reference is spelled
+    "jnp" — map it (and any other non-kernel spelling) to "ref" rather than
+    falling through to a Pallas compile that CPU hosts reject.
+    """
+    if mode == "auto":
+        mode = "kernel" if _on_tpu() else "ref"
+    if mode not in ("kernel", "interpret"):
+        return "ref"
+    if mode == "interpret":  # host interpreter: no VMEM constraint to respect
+        return mode
+    vmem = (p * ell + _spmm.default_block_rows(p) * p) * 4
+    return "kernel" if vmem <= _SPMM_VMEM_BUDGET else "ref"
+
+
+def spmm(values: jax.Array, indices: jax.Array, dense: jax.Array,
+         mode: str = "auto") -> jax.Array:
+    """T (n, l) = W @ dense for compact sparse rows (the low-rank projection)."""
+    mode = _sparse_mode(mode, *dense.shape)
+    if mode == "ref":
+        return _ref.ref_spmm(values, indices, dense)
+    return _spmm.spmm(values, indices, dense, interpret=(mode == "interpret"))
+
+
+def spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int,
+           mode: str = "auto") -> jax.Array:
+    """Y (p, l) = Wᵀ @ t — scatter sparse rows into the l-dim sketch."""
+    mode = _sparse_mode(mode, p, t.shape[1])
+    if mode == "ref":
+        return _ref.ref_spmm_t(values, indices, t, p)
+    return _spmm.spmm_t(values, indices, t, p, interpret=(mode == "interpret"))
 
 
 def kernel_assign_fn(mode: str = "auto"):

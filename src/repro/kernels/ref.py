@@ -28,3 +28,19 @@ def ref_sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array)
     g = centers.T[indices]                                   # (n, m, K)
     d = jnp.sum((values[..., None] - g) ** 2, axis=1)
     return d, jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def ref_spmm(values: jax.Array, indices: jax.Array, dense: jax.Array) -> jax.Array:
+    """T (n, l) = W @ dense — oracle for kernels.spmm.spmm.
+
+    values/indices (n, m) compact sparse rows over p columns; dense (p, l).
+    """
+    v = values.astype(jnp.float32)
+    return jnp.einsum("nm,nml->nl", v, dense.astype(jnp.float32)[indices])
+
+
+def ref_spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int) -> jax.Array:
+    """Y (p, l) = Wᵀ @ t — oracle for kernels.spmm.spmm_t (scatter-add rows)."""
+    contrib = values.astype(jnp.float32)[..., None] * t.astype(jnp.float32)[:, None, :]
+    return jnp.zeros((p, t.shape[1]), jnp.float32).at[
+        indices.reshape(-1)].add(contrib.reshape(-1, t.shape[1]))

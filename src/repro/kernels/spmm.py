@@ -1,0 +1,134 @@
+"""Sparse-times-dense kernels for the low-rank spectral accumulators.
+
+Two primitives over compact sparse rows (values (n, m), indices (n, m)) and a
+narrow dense matrix of ``l`` columns (the sketch dimension, l ≪ p):
+
+    spmm:    T = W @ Omega          (n, l)   — project each sparse row
+    spmm_t:  Y = Wᵀ @ T             (p, l)   — scatter rows into the l-dim sketch
+
+Together they realize the low-rank co-occurrence delta Wᵀ(W·Omega) = S·Omega
+(repro.lowrank) without ever materializing the dense (n, p) batch or the (p, p)
+co-occurrence matrix S — the only dense objects are (n, l) and (p, l).
+
+TPU adaptation: like sparse_assign, the irregular gather Omega[indices] has no
+fast MXU form, so each row block is densified into a (block_rows, p) VMEM
+scratch (a rolled scalar-store loop — the _scatter_outer pattern moved into
+VMEM) and both products become dense MXU matmuls against the narrow (p, l)
+operand. For spmm_t the (p, l) output block is revisited by every grid step:
+zero-initialized at step 0, accumulated thereafter (the standard reduction
+grid pattern), so the kernel's HBM writes stay O(p·l) regardless of n.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def default_block_rows(p: int, dtype=jnp.float32, vmem_budget: int = 8 << 20) -> int:
+    """Row-block size so the (block_rows, p) densify scratch fits the budget."""
+    bytes_per_row = p * jnp.dtype(dtype).itemsize
+    br = max(8, vmem_budget // max(1, bytes_per_row))
+    return int(min(128, 1 << int(np.floor(np.log2(br)))))
+
+
+def _densify(vals_ref, idx_ref, w_ref, bn: int, m: int):
+    """Scatter the block's sparse rows into the (bn, p) VMEM scratch."""
+    w_ref[...] = jnp.zeros_like(w_ref)
+
+    def body(t, _):
+        i = t // m
+        j = t % m
+        col = idx_ref[i, j]
+        v = vals_ref[i, j]
+        pl.store(w_ref, (i, pl.dslice(col, 1)), jnp.full((1,), v, w_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, bn * m, body, 0)
+
+
+def _spmm_kernel(vals_ref, idx_ref, dense_ref, out_ref, w_ref, *, bn: int, m: int):
+    _densify(vals_ref, idx_ref, w_ref, bn, m)
+    out_ref[...] = jax.lax.dot(
+        w_ref[...], dense_ref[...], preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+def _spmm_t_kernel(vals_ref, idx_ref, t_ref, out_ref, w_ref, *, bn: int, m: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    _densify(vals_ref, idx_ref, w_ref, bn, m)
+    # Wᵀ @ T as a dot_general contracting the row axis — no explicit transpose
+    acc = jax.lax.dot_general(
+        w_ref[...], t_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def _pad_rows(values, indices, extra, br):
+    n = values.shape[0]
+    n_pad = -n % br
+    if n_pad:
+        values = jnp.pad(values, ((0, n_pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, n_pad), (0, 0)))
+        if extra is not None:
+            extra = jnp.pad(extra, ((0, n_pad), (0, 0)))
+    return values, indices, extra, n_pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmm(values: jax.Array, indices: jax.Array, dense: jax.Array,
+         block_rows: int | None = None, interpret: bool = False) -> jax.Array:
+    """T (n, l) = W @ dense for compact sparse rows W and dense (p, l)."""
+    n, m = values.shape
+    p, ell = dense.shape
+    br = block_rows or default_block_rows(p, values.dtype)
+    values, indices, _, n_pad = _pad_rows(values, indices, None, br)
+
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, bn=br, m=m),
+        grid=((n + n_pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, m), lambda i: (i, 0)),
+            pl.BlockSpec((br, m), lambda i: (i, 0)),
+            pl.BlockSpec((p, ell), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, ell), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, ell), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((br, p), values.dtype)],
+        interpret=interpret,
+    )(values, indices, dense.astype(values.dtype))
+    return out[:n] if n_pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("p", "block_rows", "interpret"))
+def spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int,
+           block_rows: int | None = None, interpret: bool = False) -> jax.Array:
+    """Y (p, l) = Wᵀ @ t for compact sparse rows W (n over p columns), t (n, l).
+
+    Zero-padded rows contribute nothing, so ragged blocks are exact.
+    """
+    n, m = values.shape
+    ell = t.shape[1]
+    br = block_rows or default_block_rows(p, values.dtype)
+    values, indices, t, n_pad = _pad_rows(values, indices, t, br)
+
+    return pl.pallas_call(
+        functools.partial(_spmm_t_kernel, bn=br, m=m),
+        grid=((n + n_pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, m), lambda i: (i, 0)),
+            pl.BlockSpec((br, m), lambda i: (i, 0)),
+            pl.BlockSpec((br, ell), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((p, ell), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, ell), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((br, p), values.dtype)],
+        interpret=interpret,
+    )(values, indices, t.astype(values.dtype))

@@ -1,0 +1,37 @@
+"""Low-rank spectral subsystem: streaming PCA without the (p, p) accumulator.
+
+The Thm-6 covariance path of every other backend materializes Σ w wᵀ — a
+(p, p) array — even when the consumer only wants k ≪ p principal components.
+This package replaces it with constant-memory O(l·p) accumulators sharing the
+``init / delta / apply / finalize`` algebra of ``repro.stream.accumulators``:
+
+- :mod:`repro.lowrank.range_finder` — randomized range-finder / co-occurrence
+  state: Y = S·Omega accumulated exactly via sparse-times-dense kernels; linear,
+  so the (p, l) delta psums across shards (the StreamEngine / stream.sharded
+  path). Finalized by single-pass Nyström + in-basis Thm-6 debias.
+- :mod:`repro.lowrank.fd` — Frequent-Directions (l, p) sketch, SVD-shrink on
+  overflow: deterministic guarantee, sequential fold.
+- :mod:`repro.lowrank.model` — the shared :class:`LowRankCov` factored
+  eigenmodel both finalize to, the fixed test matrix :func:`omega`, and the
+  in-basis debiased eigensolve.
+
+Front door: ``Plan(cov_path="lowrank", rank=l)`` — ``SparsifiedPCA`` then runs
+O(l·p) on every backend. See also ``kernels/spmm.py`` (the feeding kernels).
+"""
+from repro.lowrank.fd import (  # noqa: F401
+    FDState,
+    fd_finalize,
+    fd_finalize_mean,
+    fd_init,
+    fd_update,
+)
+from repro.lowrank.model import LowRankCov, eig_in_basis, omega  # noqa: F401
+from repro.lowrank.range_finder import (  # noqa: F401
+    RangeState,
+    range_apply,
+    range_delta,
+    range_finalize,
+    range_finalize_mean,
+    range_init,
+    range_update,
+)

@@ -1,0 +1,115 @@
+"""Frequent-Directions accumulator — the deterministic l × p sketch.
+
+Liberty's Frequent Directions maintains an (l, p) matrix B with the guarantee
+0 ≼ S − BᵀB ≼ (‖A‖_F² / (l − k)) I for every k < l, where S = Σ_i w_i w_iᵀ.
+Batches of compact sparse rows are appended in chunks of at most l rows —
+scattered straight into the l-row buffer (the ``_scatter_outer`` pattern;
+the (b, p) batch is never densified, only (≤l, p) chunks) — and on overflow
+the stacked (≤2l, p) buffer is SVD-shrunk back to l rows
+(σ'² = max(σ² − σ²_{l+1}, 0)).
+
+Unlike :mod:`repro.lowrank.range_finder`, the shrink is NOT additive: FD folds
+are order-dependent and fold sequentially on every backend (the ``repro.api``
+reducer feeds each (step, shard) sketch in the same linear order regardless of
+backend, so backends still agree bit-for-bit). The psum-able engine path is
+the range-finder; FD is the deterministic-guarantee alternative behind
+``Plan(lowrank_method="fd")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import _cov_scale, stream_finalize_mean
+from repro.core.sampling import SparseRows
+from repro.lowrank.model import LowRankCov, eig_in_basis
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FDState:
+    """FD sketch + the exact side accumulators (all O(p·l) or O(p)).
+
+    sketch: (l, p) the current Frequent-Directions matrix B.
+    diag:   (p,)   Σ w_i ∘ w_i (exact, for the Thm-6 debias).
+    sum_w:  (p,)   Σ w_i (Thm-4 mean numerator).
+    count:  ()     rows folded (int32).
+    """
+
+    sketch: jax.Array
+    diag: jax.Array
+    sum_w: jax.Array
+    count: jax.Array
+
+    def tree_flatten(self):
+        return (self.sketch, self.diag, self.sum_w, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def nbytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize
+                   for a in (self.sketch, self.diag, self.sum_w, self.count))
+
+
+def fd_init(p: int, ell: int) -> FDState:
+    return FDState(
+        sketch=jnp.zeros((ell, p), jnp.float32),
+        diag=jnp.zeros((p,), jnp.float32),
+        sum_w=jnp.zeros((p,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def _shrink(stacked: jax.Array, ell: int) -> jax.Array:
+    """SVD-shrink a (>l, p) stack back to l rows (the FD overflow step)."""
+    _, s, vt = jnp.linalg.svd(stacked, full_matrices=False)
+    delta = s[ell] ** 2 if s.shape[0] > ell else jnp.float32(0.0)
+    s_shrunk = jnp.sqrt(jnp.maximum(s[:ell] ** 2 - delta, 0.0))
+    return s_shrunk[:, None] * vt[:ell]
+
+
+@jax.jit
+def fd_update(state: FDState, batch: SparseRows) -> FDState:
+    """Fold one sketched batch (sequential — FD shrink is order-dependent)."""
+    values, indices = batch.values, batch.indices
+    n = values.shape[0]
+    ell, p = state.sketch.shape
+
+    sketch = state.sketch
+    for start in range(0, n, ell):                # static chunk schedule
+        v_c = values[start:start + ell].astype(jnp.float32)
+        i_c = indices[start:start + ell]
+        # scatter c ≤ l rows straight into the sketch buffer (the
+        # _scatter_outer pattern) — the only dense intermediate is
+        # (l, p)-bounded, never (b, p)
+        rows = SparseRows(v_c, i_c, p).to_dense()
+        sketch = _shrink(jnp.concatenate([sketch, rows]), ell)
+
+    flat_idx = indices.reshape(-1)
+    v32 = values.astype(jnp.float32)
+    return FDState(
+        sketch=sketch,
+        diag=state.diag.at[flat_idx].add((v32 * v32).reshape(-1)),
+        sum_w=state.sum_w.at[flat_idx].add(v32.reshape(-1)),
+        count=state.count + jnp.int32(n),
+    )
+
+
+# THE Thm-4 mean formula lives in core.estimators (see range_finder.py).
+fd_finalize_mean = stream_finalize_mean
+
+
+def fd_finalize(state: FDState, m: int) -> LowRankCov:
+    """Rank-l eigenmodel of Ĉ_n: S ≈ BᵀB = V diag(σ²) Vᵀ, then the Thm-6 scale
+    and in-basis diagonal debias."""
+    ell, p = state.sketch.shape
+    if m < 2:
+        raise ValueError("covariance estimator needs m >= 2 (Thm B4, Eq. 50)")
+    _, s, vt = jnp.linalg.svd(state.sketch, full_matrices=False)
+    return eig_in_basis(vt.T, jnp.diag(s ** 2),
+                        scale=_cov_scale(p, m) / state.count,
+                        diag_s=state.diag, corr=(p - m) / (p - 1))

@@ -59,7 +59,10 @@ class KMeansState:
     counts:  (r, K, p) — per-coordinate observation counts (Eq. 39 weights);
                          int32: the running-mean weights must stay exact —
                          f32 would saturate at 2^24 and silently turn the
-                         mean update into a fixed-rate EMA;
+                         mean update into a fixed-rate EMA. With a decay
+                         (forgetting) factor they ARE float32: decay bounds
+                         the counts by b·n_shards/(1−decay), far below the
+                         2^24 saturation point, so exactness survives;
     obj:     (r,)      — accumulated mini-batch objective (hypothesis selector);
     count:   ()        — samples folded so far (int32, exact to 2^31 rows).
     """
@@ -77,11 +80,14 @@ class KMeansState:
         return cls(*children)
 
 
-def kmeans_init(key: jax.Array, first_batch: SparseRows, k: int, n_init: int = 3) -> KMeansState:
+def kmeans_init(key: jax.Array, first_batch: SparseRows, k: int, n_init: int = 3,
+                decay: float = 1.0) -> KMeansState:
     """Seed r = n_init hypotheses with K-means++ on the first sketched batch.
 
     Runs on replicated data so sharded and single-device engines start from
-    bit-identical centers.
+    bit-identical centers. ``decay`` < 1 switches the count accumulators to
+    float32 (see :class:`KMeansState`); pass the same value to
+    :func:`kmeans_apply`.
     """
 
     def one(rkey):
@@ -91,17 +97,20 @@ def kmeans_init(key: jax.Array, first_batch: SparseRows, k: int, n_init: int = 3
     centers = jax.lax.map(one, jax.random.split(key, n_init))
     return KMeansState(
         centers=centers.astype(jnp.float32),
-        counts=jnp.zeros(centers.shape, jnp.int32),
+        counts=jnp.zeros(centers.shape, jnp.int32 if decay == 1.0 else jnp.float32),
         obj=jnp.zeros((n_init,), jnp.float32),
         count=jnp.zeros((), jnp.int32),
     )
 
 
-def kmeans_delta(state: KMeansState, batch: SparseRows):
-    """Assignment + scatter sums for one batch under every hypothesis.
+def kmeans_delta_with_assign(state: KMeansState, batch: SparseRows):
+    """(delta, assign) for one batch under every hypothesis.
 
-    Assignment (the hot, O(n·m·K) step) stays local to the shard; only the
-    returned (sums, cnts, obj, n) — fixed-size in the batch — ever needs a psum.
+    ``assign`` (r, n) int32 are the nearest-center labels under the
+    step-start centers — already computed inside the delta, returned for
+    callers that also track reassignment counts (so the convergence signal
+    costs ONE extra assignment pass after the apply, not a recomputation of
+    this one).
     """
     values, indices = batch.values, batch.indices
     k, p = state.centers.shape[1:]
@@ -113,21 +122,43 @@ def kmeans_delta(state: KMeansState, batch: SparseRows):
         sums = jnp.zeros((k, p), jnp.float32).at[rows, indices].add(
             values.astype(jnp.float32))
         cnts = jnp.zeros((k, p), jnp.int32).at[rows, indices].add(1)
-        return sums, cnts, jnp.sum(jnp.min(d, axis=1)).astype(jnp.float32)
+        return sums, cnts, jnp.sum(jnp.min(d, axis=1)).astype(jnp.float32), \
+            a.astype(jnp.int32)
 
-    sums, cnts, obj = jax.vmap(one)(state.centers)
-    return sums, cnts, obj, jnp.int32(values.shape[0])
+    sums, cnts, obj, assign = jax.vmap(one)(state.centers)
+    return (sums, cnts, obj, jnp.int32(values.shape[0])), assign
 
 
-def kmeans_apply(state: KMeansState, delta) -> KMeansState:
+def kmeans_delta(state: KMeansState, batch: SparseRows):
+    """Assignment + scatter sums for one batch under every hypothesis.
+
+    Assignment (the hot, O(n·m·K) step) stays local to the shard; only the
+    returned (sums, cnts, obj, n) — fixed-size in the batch — ever needs a psum
+    (the per-row labels of :func:`kmeans_delta_with_assign` are dead code here,
+    eliminated under jit).
+    """
+    delta, _ = kmeans_delta_with_assign(state, batch)
+    return delta
+
+
+def kmeans_apply(state: KMeansState, delta, decay: float = 1.0) -> KMeansState:
     """Online per-coordinate mean update — the streaming form of Eq. 39.
 
     new_center = (count·center + batch_sum) / (count + batch_count) wherever the
     batch touched the coordinate; untouched coordinates keep their value (the
     paper's never-sampled-coordinate convention).
+
+    ``decay`` < 1 is the forgetting factor for non-stationary streams: the
+    accumulated counts shrink BEFORE the delta is applied, so older
+    observations are geometrically down-weighted (effective memory
+    ≈ 1/(1−decay) steps) and the centers can track drifting clusters. The
+    state must have been built with ``kmeans_init(..., decay=...)`` (float
+    counts). Decay is applied once per psum'd step — the same place the delta
+    is — so sharded and single-device streams stay identical.
     """
     sums, cnts, obj, n = delta
-    new_counts = state.counts + cnts
+    old_counts = state.counts if decay == 1.0 else state.counts * decay
+    new_counts = old_counts + cnts.astype(state.counts.dtype)
     cnts_f = cnts.astype(jnp.float32)
     centers = jnp.where(
         cnts > 0,
@@ -136,6 +167,25 @@ def kmeans_apply(state: KMeansState, delta) -> KMeansState:
         state.centers,
     )
     return KMeansState(centers, new_counts, state.obj + obj, state.count + n)
+
+
+def kmeans_reassigned(state: KMeansState, batch: SparseRows,
+                      prev_assign: jax.Array) -> jax.Array:
+    """(r,) int32 — how many of the batch's rows change nearest center across
+    one apply: labels under ``state.centers`` (post-update) vs ``prev_assign``
+    (the labels :func:`kmeans_delta_with_assign` computed pre-update).
+
+    The mini-batch convergence signal (ROADMAP streaming-K-means item): as the
+    per-coordinate means settle, the count decays toward zero; a persistently
+    high count means the stream is still reshaping the solution (or drifting,
+    under a decay factor).
+    """
+
+    def one(c_new, a_prev):
+        a1 = jnp.argmin(sparse_sq_dists(batch.values, batch.indices, c_new), axis=1)
+        return jnp.sum(a1.astype(jnp.int32) != a_prev).astype(jnp.int32)
+
+    return jax.vmap(one)(state.centers, prev_assign)
 
 
 def kmeans_finalize(state: KMeansState):

@@ -44,6 +44,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import sketch as sketch_mod
 from repro.core.sampling import SparseRows
 from repro.core.sketch import batch_key  # noqa: F401  (re-exported; the repo-wide discipline)
+from repro import lowrank as lowrank_mod
 from repro.stream import accumulators as acc
 from repro.utils.prng import fold_in_str
 
@@ -52,22 +53,39 @@ Source = Callable[[int, int, int], Any]  # (seed, step, shard) -> (b, p) array
 
 @dataclasses.dataclass(frozen=True)
 class StreamKMeansConfig:
-    """Mini-batch streaming sparsified K-means: K clusters, r parallel seeds."""
+    """Mini-batch streaming sparsified K-means: K clusters, r parallel seeds.
+
+    ``decay`` < 1 is the forgetting factor for non-stationary streams: the
+    per-coordinate count accumulators shrink by ``decay`` once per psum'd step
+    (inside ``kmeans_apply``, so sharded == single-device holds), giving the
+    centers an effective memory of ≈ 1/(1−decay) steps.
+    """
 
     k: int
     n_init: int = 3
+    decay: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {self.decay}")
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class EngineState:
-    """Everything the engine carries between batches — a donated pytree."""
+    """Everything the engine carries between batches — a donated pytree.
 
-    moments: acc.MomentState
+    Exactly one of ``moments`` / ``lowrank`` accumulates the second moment AND
+    the Thm-4 mean (RangeState carries sum_w/count itself, so the lowrank path
+    runs no moment accumulator — one (p,) scatter and psum per step, not two).
+    """
+
+    moments: acc.MomentState | None
     kmeans: acc.KMeansState | None
+    lowrank: lowrank_mod.RangeState | None = None
 
     def tree_flatten(self):
-        return (self.moments, self.kmeans), None
+        return (self.moments, self.kmeans, self.lowrank), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -85,6 +103,7 @@ class StreamResult:
     centers: jax.Array | None = None        # original domain, (K, p)
     centers_pre: jax.Array | None = None    # preconditioned domain, (K, p_pad)
     kmeans_obj: jax.Array | None = None
+    cov_lowrank: "lowrank_mod.LowRankCov | None" = None  # cov_path="lowrank"
 
 
 def _normalize_source(source) -> Source:
@@ -132,15 +151,23 @@ class StreamEngine:
         sparsified K-means alongside the moment estimators.
     impl: preconditioning backend forwarded to sketch ("auto" = Pallas kernel
         on TPU, jnp butterfly elsewhere).
-    cov_path: "dense" (scatter batch to (b, p), one matmul) or "compact"
-        (scatter b·m² outer products directly) — pick "compact" when γ ≪ 1 and
-        the dense (b, p) intermediate would dominate the step's memory.
+    cov_path: "dense" (scatter batch to (b, p), one matmul), "compact"
+        (scatter b·m² outer products directly — pick it when γ ≪ 1 and the
+        dense (b, p) intermediate would dominate the step's memory), or
+        "lowrank" (the repro.lowrank range-finder state: the second-moment
+        accumulator shrinks from (p, p) to the (p, rank) projection S·Omega, and
+        the per-step psum shrinks with it; finalize returns the factored
+        eigenmodel on ``StreamResult.cov_lowrank`` instead of ``cov``).
+    rank: sketch width l of the "lowrank" path (required there). The engine's
+        lowrank path is the linear range-finder — the order-dependent FD
+        variant lives behind the estimator layer (``Plan(lowrank_method="fd")``),
+        where folds are sequential by construction.
     """
 
     def __init__(self, spec: sketch_mod.SketchSpec, source, *, n_shards: int = 1,
                  mesh=None, axis: str = "data", track_cov: bool = True,
                  kmeans: StreamKMeansConfig | None = None, impl: str = "auto",
-                 cov_path: str = "dense"):
+                 cov_path: str = "dense", rank: int | None = None):
         self.spec = spec
         self.source = _normalize_source(source)
         self.n_shards = int(n_shards)
@@ -157,6 +184,14 @@ class StreamEngine:
             # fail before streaming, not at finalize (Thm B4 needs m ≥ 2)
             raise ValueError(f"track_cov needs m >= 2, got m={spec.m}; "
                              "raise gamma/m or pass track_cov=False")
+        self.lowrank = cov_path == "lowrank" and track_cov
+        self._omega = None
+        if self.lowrank:
+            if rank is None or not 2 <= rank <= spec.p_pad:
+                raise ValueError(f"cov_path='lowrank' needs 2 <= rank <= "
+                                 f"p_pad={spec.p_pad}, got rank={rank}")
+            self.rank = int(rank)
+            self._omega = lowrank_mod.omega(spec.key, spec.p_pad, self.rank)
         self._update = jax.jit(self._build_update(), donate_argnums=0)
         self._scan = None  # compiled-once lax.scan over a whole stream
         self.state: EngineState | None = None  # set by run()/run_scanned()
@@ -169,15 +204,23 @@ class StreamEngine:
                                  impl=self.impl)
 
     def _deltas(self, state: EngineState, batch: SparseRows):
-        md = acc.moment_delta(batch, track_cov=self.track_cov, cov_path=self.cov_path)
+        md = (None if self.lowrank
+              else acc.moment_delta(batch, track_cov=self.track_cov,
+                                    cov_path=self.cov_path))
         kd = acc.kmeans_delta(state.kmeans, batch) if state.kmeans is not None else None
-        return md, kd
+        ld = (lowrank_mod.range_delta(batch, self._omega, impl=self.impl)
+              if self.lowrank else None)
+        return md, kd, ld
 
     def _apply(self, state: EngineState, deltas) -> EngineState:
-        md, kd = deltas
+        md, kd, ld = deltas
         return EngineState(
-            moments=acc.moment_apply(state.moments, md),
-            kmeans=acc.kmeans_apply(state.kmeans, kd) if kd is not None else state.kmeans,
+            moments=(acc.moment_apply(state.moments, md)
+                     if md is not None else state.moments),
+            kmeans=(acc.kmeans_apply(state.kmeans, kd, decay=self.kmeans.decay)
+                    if kd is not None else state.kmeans),
+            lowrank=(lowrank_mod.range_apply(state.lowrank, ld)
+                     if ld is not None else state.lowrank),
         )
 
     def _build_update(self):
@@ -223,10 +266,17 @@ class StreamEngine:
             # shard id n_shards is never used by the stream — an independent mask
             s0 = self._sketch_local(x0.reshape(-1, x0.shape[-1]), jnp.int32(0), self.n_shards)
             km = acc.kmeans_init(fold_in_str(self.spec.key, "stream-kmeans"), s0,
-                                 self.kmeans.k, self.kmeans.n_init)
+                                 self.kmeans.k, self.kmeans.n_init,
+                                 decay=self.kmeans.decay)
+        return self._fresh_state(km)
+
+    def _fresh_state(self, km) -> EngineState:
         return EngineState(
-            moments=acc.moment_init(self.spec.p_pad, track_cov=self.track_cov),
+            moments=(None if self.lowrank
+                     else acc.moment_init(self.spec.p_pad, track_cov=self.track_cov)),
             kmeans=km,
+            lowrank=(lowrank_mod.range_init(self.spec.p_pad, self.rank)
+                     if self.lowrank else None),
         )
 
     def _host_global_batch(self, seed, step, device_put: bool = True):
@@ -278,11 +328,9 @@ class StreamEngine:
             x0 = jnp.asarray(xs[0]).reshape(-1, xs.shape[-1])
             s0 = self._sketch_local(x0, jnp.int32(0), self.n_shards)
             km = acc.kmeans_init(fold_in_str(self.spec.key, "stream-kmeans"), s0,
-                                 self.kmeans.k, self.kmeans.n_init)
-        return EngineState(
-            moments=acc.moment_init(self.spec.p_pad, track_cov=self.track_cov),
-            kmeans=km,
-        )
+                                 self.kmeans.k, self.kmeans.n_init,
+                                 decay=self.kmeans.decay)
+        return self._fresh_state(km)
 
     # ---------------------------------------------------------- finalizing --
 
@@ -291,15 +339,26 @@ class StreamEngine:
         if state is None:
             raise RuntimeError("no stream folded yet — call run()/run_scanned(), "
                                "or pass an EngineState explicitly")
-        mean = acc.moment_finalize_mean(state.moments, self.spec.m)
-        cov = (acc.moment_finalize_cov(state.moments, self.spec.m)
-               if self.track_cov else None)
+        if state.lowrank is not None:
+            # RangeState carries the Thm-4 accumulators itself (see EngineState)
+            mean = lowrank_mod.range_finalize_mean(state.lowrank, self.spec.m)
+            count = state.lowrank.count
+            cov = None
+            cov_lowrank = lowrank_mod.range_finalize(state.lowrank, self.spec.m,
+                                                     self._omega)
+        else:
+            mean = acc.moment_finalize_mean(state.moments, self.spec.m)
+            count = state.moments.count
+            cov = (acc.moment_finalize_cov(state.moments, self.spec.m)
+                   if self.track_cov else None)
+            cov_lowrank = None
         centers = centers_pre = obj = None
         if state.kmeans is not None:
             centers_pre, obj = acc.kmeans_finalize(state.kmeans)
             centers = sketch_mod.unmix_dense(centers_pre, self.spec)
-        return StreamResult(mean=mean, cov=cov, count=state.moments.count,
-                            centers=centers, centers_pre=centers_pre, kmeans_obj=obj)
+        return StreamResult(mean=mean, cov=cov, count=count,
+                            centers=centers, centers_pre=centers_pre, kmeans_obj=obj,
+                            cov_lowrank=cov_lowrank)
 
     def assign(self, batch: SparseRows, state: EngineState | None = None) -> jax.Array:
         """Labels for already-sketched rows under the best hypothesis' centers."""

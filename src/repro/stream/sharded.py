@@ -23,6 +23,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.sampling import SparseRows
+from repro.lowrank import range_finder as lr_range
 from repro.stream import accumulators as acc
 
 
@@ -67,6 +68,47 @@ def sharded_moments(s: SparseRows, mesh, axes=("data",), track_cov: bool = True,
     fn = _moments_fn(mesh, tuple(axes), bool(track_cov), cov_path, p)
     st = fn(values, indices)
     return acc.MomentState(st.sum_w, st.sum_wwt, jnp.int32(n))
+
+
+@functools.lru_cache(maxsize=None)
+def _lowrank_fn(mesh, axes, p, ell, impl):
+    """Compiled psum reduction of the low-rank range-finder delta — the
+    cross-shard traffic is the fixed (p, l) + 2·(p,) state, never (p, p)."""
+
+    def local(values, indices, omega_mat):
+        delta = lr_range.range_delta(SparseRows(values, indices, p), omega_mat,
+                                     impl=impl)
+        for a in axes:
+            delta = jax.lax.psum(delta, a)
+        return delta
+
+    row_spec = P(axes if len(axes) > 1 else axes[0], None)
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(row_spec, row_spec, P()),
+                             out_specs=P()))
+
+
+def sharded_lowrank(s: SparseRows, omega_mat: jax.Array, mesh, axes=("data",),
+                    impl: str = "auto") -> lr_range.RangeState:
+    """psum-reduced RangeState delta for a row-sharded sketch (replicated out).
+
+    The streaming low-rank analogue of :func:`sharded_moments`: same zero-pad
+    handling (pad rows contribute nothing; the true n overrides the count).
+    """
+    p = s.p
+    n = s.values.shape[0]
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    pad = -n % n_shards
+    values, indices = s.values, s.indices
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+
+    fn = _lowrank_fn(mesh, tuple(axes), p, omega_mat.shape[1], impl)
+    st = fn(values, indices, omega_mat)
+    return lr_range.RangeState(st.y, st.diag, st.sum_w, jnp.int32(n))
 
 
 def sharded_mean(s: SparseRows, mesh, axes=("data",)) -> jax.Array:

@@ -98,6 +98,13 @@ def test_sparserows_gamma_deprecated():
     with pytest.warns(DeprecationWarning, match="p_pad"):
         g = s.gamma
     assert g == 0.25
+    # raw-constructed rows (the unpadded-p case the deprecation exists for)
+    # warn too, and the warning points at the replacement
+    raw = sampling.SparseRows(jnp.ones((2, 250)), jnp.tile(jnp.arange(250), (2, 1)),
+                              p=1000)
+    with pytest.warns(DeprecationWarning, match="spec.gamma") as rec:
+        assert raw.gamma == 0.25
+    assert len(rec) == 1
 
 
 @pytest.mark.parametrize("seed", range(25))
