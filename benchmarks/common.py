@@ -5,6 +5,30 @@ import time
 from typing import Callable
 
 import jax
+import numpy as np
+
+
+def spiked(key, n: int, p: int, k: int, noise: float = 1e-2,
+           lam_hi: float = 10.0, lam_lo: float = 7.0):
+    """Spiked covariance model: k planted directions over a small iso floor
+    (the benchmark twin of tests/conftest.spiked — tests must not import
+    benchmarks, so each side keeps one canonical copy)."""
+    import jax.numpy as jnp
+
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (p, k)))
+    lam = jnp.linspace(lam_hi, lam_lo, k)
+    z = jax.random.normal(jax.random.fold_in(key, 1), (n, k)) * lam
+    return z @ u.T + noise * jax.random.normal(jax.random.fold_in(key, 2), (n, p))
+
+
+def max_angle_sin(a, b) -> float:
+    """Largest principal-angle sine between the row spaces of a and b (f64)."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    a /= np.linalg.norm(a, axis=1, keepdims=True)
+    b /= np.linalg.norm(b, axis=1, keepdims=True)
+    s = np.linalg.svd(a @ b.T, compute_uv=False)
+    return float(np.sqrt(np.maximum(0.0, 1.0 - s**2)).max())
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

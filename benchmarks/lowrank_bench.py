@@ -19,21 +19,15 @@ import os
 import sys
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, max_angle_sin as _max_angle_sin, spiked, timeit
 from repro.api import Plan, SparsifiedPCA
 
 RECORDS: list[dict] = []
 
 
 def _spiked(n, p, k):
-    key = jax.random.PRNGKey(0)
-    u, _ = jnp.linalg.qr(jax.random.normal(key, (p, k)))
-    lam = jnp.linspace(10.0, 7.0, k)
-    z = jax.random.normal(jax.random.fold_in(key, 1), (n, k)) * lam
-    return z @ u.T + 0.01 * jax.random.normal(jax.random.fold_in(key, 2), (n, p))
+    return spiked(jax.random.PRNGKey(0), n, p, k)
 
 
 def _state_bytes(est: SparsifiedPCA) -> int:
@@ -41,15 +35,6 @@ def _state_bytes(est: SparsifiedPCA) -> int:
     if st is None:  # batch dense/compact: the retained sketch IS the state
         return sum(s.nbytes() for s in est._reducer.parts)
     return sum(leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(st))
-
-
-def _max_angle_sin(a, b) -> float:
-    a = np.asarray(a, np.float64)
-    b = np.asarray(b, np.float64)
-    a /= np.linalg.norm(a, axis=1, keepdims=True)
-    b /= np.linalg.norm(b, axis=1, keepdims=True)
-    s = np.linalg.svd(a @ b.T, compute_uv=False)
-    return float(np.sqrt(np.maximum(0.0, 1.0 - s**2)).max())
 
 
 def record(name, us, rows, acc_bytes, angle=None):

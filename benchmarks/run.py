@@ -28,6 +28,7 @@ def main() -> None:
         grad_compress_bench,
         kernel_bench,
         lowrank_bench,
+        refine_bench,
         stream_bench,
     )
 
@@ -45,6 +46,7 @@ def main() -> None:
         ("stream_bench", stream_bench.run),
         ("api_bench", api_bench.run),
         ("lowrank_bench", lowrank_bench.run),
+        ("refine_bench", refine_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

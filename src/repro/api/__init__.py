@@ -30,6 +30,13 @@ Plan also constructs a :class:`repro.stream.StreamEngine` via
 :func:`make_engine` — the launcher ``repro.launch.stream`` is a thin shim over
 this; ``fit_many(plan, consumers, source=src, steps=n)`` is the estimator-API
 front door to the same fused pass.
+
+Single-pass is the floor, not the ceiling: because every batch's mask
+regenerates from (seed, step, shard), ``SparsifiedPCA.fit_refine`` /
+``SparsifiedKMeans.fit_refine`` (and ``fit_many(..., refine=True)``,
+``Plan(refine_passes=)``) replay the source for second-pass refinement —
+PCA power iteration and two-pass Alg.-2 K-means — storing nothing
+(``repro.refine``).
 """
 from __future__ import annotations
 

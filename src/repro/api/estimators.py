@@ -39,6 +39,7 @@ from repro.core.grad_compress import CompressConfig, compress_grads, mask_spec
 from repro.core.sampling import SparseRows
 from repro.core.sketch import batch_key
 from repro import lowrank as lowrank_mod
+from repro import refine as refine_mod
 from repro.stream import accumulators as acc
 from repro.stream import sharded as sharded_mod
 from repro.utils.prng import fold_in_str
@@ -243,6 +244,7 @@ class SketchCursor:
         self.spec: sketch_mod.SketchSpec | None = None
         self.chunk = 0           # linear chunk index → plan.step_shard(chunk)
         self.count = 0           # rows folded through this cursor
+        self.chunk_rows: list[int] = []  # rows per chunk — the replay contract
         self.n_sketches = 0      # sketch_mod.sketch invocations (one per chunk)
         self.last_sketch: SparseRows | None = None
         self.consumers: list["SketchedEstimator"] = []
@@ -278,6 +280,7 @@ class SketchCursor:
             c._consume(s, step, shard, n)
         self.chunk += 1
         self.count += n
+        self.chunk_rows.append(n)
 
     def partial_fit(self, x) -> None:
         x = jnp.asarray(x)
@@ -408,6 +411,97 @@ class SketchedEstimator:
     def _finalize(self) -> None:
         raise NotImplementedError
 
+    # ---------------------------------------------------------- refinement --
+    # Second-pass replay refinement (repro.refine): subclasses that support it
+    # override _refine_supported/_refine_check and the _refine_* fold hooks
+    # documented in repro.refine.replay; the base class only owns the drivers.
+
+    def _refine_supported(self) -> bool:
+        return False
+
+    def _refine_check(self) -> None:
+        raise ValueError(
+            f"{type(self).__name__} has no second-pass refinement: its "
+            "estimator is already exact given the sketch (nothing a replay "
+            "could sharpen). fit_refine applies to SparsifiedPCA on the "
+            "lowrank 'range' path and to minibatch SparsifiedKMeans")
+
+    def _refine_needs_signal(self) -> bool:
+        return False
+
+    def _resolve_passes(self, passes: int | None) -> int:
+        if passes is None:
+            passes = self.plan.refine_passes or 1
+        if passes < 1:
+            raise ValueError(f"refinement needs passes >= 1, got {passes}")
+        return int(passes)
+
+    def refine(self, x=None, passes: int | None = None, *, source=None,
+               steps: int | None = None, seed: int | None = None) -> "SketchedEstimator":
+        """Replay the FITTED pass ``passes`` more times and sharpen the fit.
+
+        ``x`` must be the same array ``fit`` consumed (re-chunked and re-masked
+        identically under the (step, shard) key discipline; the row count is
+        checked), or ``source`` / ``steps`` / ``seed`` the same stream
+        ``fit_stream`` pulled — the replay regenerates every sketch
+        bit-identically, storing nothing. ``passes`` defaults to
+        ``plan.refine_passes`` (or 1). Repeat calls RESUME: ``refine(x);
+        refine(x)`` continues the iteration where the first call stopped
+        (≡ one ``refine(x, passes=2)``), with ``refine_passes_`` accumulating.
+        """
+        self._refine_check()
+        if not self._fitted:
+            raise RuntimeError("refine() replays a fitted estimator — call "
+                               "fit()/fit_stream() first, or use fit_refine()")
+        if x is not None:
+            n = int(jnp.asarray(x).shape[0])
+            if n != self.count_:
+                raise ValueError(
+                    f"refine(x) got {n} rows but the fitted pass folded "
+                    f"{self.count_}; the replay must regenerate the SAME "
+                    "chunks — pass the array fit() consumed")
+            # an array replay re-chunks in uniform batch_size pieces; a first
+            # pass fed through ragged partial_fit calls has chunk boundaries
+            # (hence (step, shard) mask keys) that chunking cannot reproduce
+            bs = self.plan.batch_size
+            uniform = [min(bs, n - i) for i in range(0, n, bs)]
+            if self._cursor.chunk_rows != uniform:
+                raise ValueError(
+                    "the fitted pass was fed through partial_fit calls whose "
+                    f"chunk boundaries {self._cursor.chunk_rows} differ from "
+                    f"the uniform batch_size={bs} chunking an array replay "
+                    "regenerates; refine() would fold DIFFERENT (step, shard) "
+                    "masks — refit with fit(x) (or batch_size-aligned "
+                    "partial_fit calls) before refining")
+        src = None
+        if source is not None:
+            from repro.stream.engine import normalize_source
+
+            src = normalize_source(source)
+        refine_mod.run_refine(self.plan, self.spec_, [self],
+                              self._resolve_passes(passes), data=x, source=src,
+                              steps=steps, seed=seed)
+        return self
+
+    def fit_refine(self, x=None, passes: int | None = None, *, source=None,
+                   steps: int | None = None, seed: int | None = None) -> "SketchedEstimator":
+        """One-pass fit + ``passes`` replay refinement passes in one call.
+
+        The data argument doubles as the replay source: an in-memory ``x`` is
+        fit then re-chunked per pass; a ``(seed, step, shard) → (b, p)``
+        ``source`` is streamed once then replayed per pass.
+        """
+        self._refine_check()
+        if (x is None) == (source is None):
+            raise ValueError("fit_refine needs exactly one of x or source=")
+        if x is not None:
+            self.fit(x)
+        else:
+            if steps is None:
+                raise ValueError("fit_refine(source=...) needs steps=")
+            self.fit_stream(source, steps=steps, seed=seed)
+        return self.refine(x, passes, source=source, steps=steps, seed=seed)
+
     # ------------------------------------------------------------- utility --
 
     def sketch(self, x, mask_key: jax.Array | int | None = None) -> SparseRows:
@@ -534,6 +628,8 @@ class SparsifiedPCA(SketchedEstimator):
         self.explained_variance_ = evals
         self.mean_ = self._unmix_vec(mean_pre)
         self.count_ = int(n)
+        self.refine_passes_ = 0           # refine() overwrites after its replay
+        self.refine_subspace_change_ = None
 
     def transform(self, x) -> jax.Array:
         """Project rows onto the fitted components (original domain, uncentered
@@ -542,6 +638,83 @@ class SparsifiedPCA(SketchedEstimator):
 
     def result(self) -> pca_mod.PCAResult:
         return pca_mod.PCAResult(self.components_, self.explained_variance_, self.mean_)
+
+    # ---------------------------------------------------------- refinement --
+    # Power iteration against the regenerable source (repro.refine.power):
+    # each pass replays every (step, shard) sketch and accumulates Y = S·Q
+    # through the SAME RangeState deltas as the first pass (sharded: one
+    # fixed-size psum per step via sharded_lowrank), squaring the one-pass
+    # gap ratio. Extra fitted attrs: refine_passes_ (int, 0 = one-pass fit)
+    # and refine_subspace_change_ ((passes,) max principal-angle sine between
+    # consecutive power bases — the per-pass convergence diagnostic).
+
+    def _refine_supported(self) -> bool:
+        return (self.plan.cov_path == "lowrank"
+                and self.plan.lowrank_method == "range")
+
+    def _refine_check(self) -> None:
+        if self.plan.cov_path != "lowrank":
+            raise ValueError(
+                "fit_refine sharpens the lowrank range-finder's subspace; "
+                f"cov_path={self.plan.cov_path!r} accumulates the full "
+                "covariance exactly, so its eigendecomposition has no "
+                "refinement gap — use Plan(cov_path='lowrank', rank=l)")
+        if self.plan.lowrank_method != "range":
+            raise ValueError(
+                "lowrank_method='fd' has no replayable linear operator (the "
+                "SVD-shrink fold is order-dependent); power-iteration "
+                "refinement needs lowrank_method='range'")
+
+    def _refine_pass_begin(self, f: int) -> None:
+        if f == 0 and not self.refine_passes_:
+            # the first basis is free: orth of the ALREADY-FOLDED first-pass
+            # state (debiased against Omega) — no extra replay. A repeat
+            # refine() instead RESUMES from self._rq (the basis the previous
+            # refinement's last pass produced), continuing the iteration.
+            self._rq = refine_mod.power_orth(self._reducer.state,
+                                             self._reducer._omega, self.spec_.m)
+            self._rchanges: list[float] = []
+        self._rstate = lowrank_mod.range_init(self.spec_.p_pad, self.plan.rank)
+        self._rstep_parts: list[SparseRows] = []
+
+    def _refine_fold(self, s: SparseRows, step: int, shard: int) -> None:
+        if self.plan.backend == "sharded":
+            self._rstep_parts.append(s)
+            if shard == self.plan.n_shards - 1:
+                self._refine_flush()
+        else:
+            self._rstate = lowrank_mod.range_update(self._rstate, s, self._rq,
+                                                    impl=self.plan.impl)
+
+    def _refine_flush(self) -> None:
+        if not self._rstep_parts:
+            return
+        step_sketch = _concat_sparse(self._rstep_parts, self.spec_.p_pad)
+        delta = sharded_mod.sharded_lowrank(step_sketch, self._rq,
+                                            self.plan.resolve_mesh(),
+                                            (self.plan.axis,), impl=self.plan.impl)
+        self._rstate = lowrank_mod.range_apply(self._rstate, delta)
+        self._rstep_parts = []
+
+    def _refine_pass_end(self, f: int, last: bool, signal: bool) -> None:
+        self._refine_flush()
+        q_new = refine_mod.power_orth(self._rstate, self._rq, self.spec_.m)
+        # convergence is watched on the top-n_components columns — the
+        # subspace the consumer keeps; wider slices are dominated by the
+        # oversampling columns churning in the (near-degenerate) tail
+        r = self.n_components
+        self._rchanges.append(
+            refine_mod.subspace_change(q_new[:, :r], self._rq[:, :r]))
+        self._rq_prev, self._rq = self._rq, q_new
+
+    def _refine_end(self, passes: int) -> None:
+        self.cov_lowrank_ = refine_mod.power_finalize(self._rstate, self._rq_prev,
+                                                      self.spec_.m)
+        comps_pre, evals = self.cov_lowrank_.top(self.n_components)
+        self.components_ = sketch_mod.unmix_dense(comps_pre, self.spec_)
+        self.explained_variance_ = evals
+        self.refine_passes_ += passes    # cumulative across repeat refine()s
+        self.refine_subspace_change_ = np.asarray(self._rchanges)
 
 
 class SparsifiedKMeans(SketchedEstimator):
@@ -684,11 +857,92 @@ class SparsifiedKMeans(SketchedEstimator):
         self.centers_pre_ = centers_pre
         self.centers_ = sketch_mod.unmix_dense(centers_pre, self.spec_)
         self.objective_ = obj
+        self.refine_passes_ = 0           # refine() overwrites after its replay
+        self.refine_reassign_counts_ = None
+        self.refine_reassign_fraction_ = None
 
     def predict(self, x) -> jax.Array:
         """Nearest-center labels for new rows (sketched with a one-shot mask)."""
         s = self.sketch(x)
         return acc.kmeans_assign(self.centers_pre_, s)
+
+    # ---------------------------------------------------------- refinement --
+    # Two-pass (Alg. 2) replay refinement (repro.refine.kmeans2): each pass
+    # re-assigns every replayed row against FROZEN pass-start centers (the
+    # best first-pass hypothesis) and rebuilds centers from those consistent
+    # assignments — the unbiased per-coordinate center estimator over ONE
+    # assignment, instead of the streaming fold's evolving ones. The per-batch
+    # delta depends only on the frozen centers, so folds commute and all three
+    # backends produce BIT-IDENTICAL refined centers. Extra fitted attrs:
+    # refine_passes_, refine_reassign_counts_ / refine_reassign_fraction_ —
+    # rows reassigned by each rebuild, continuing the streaming
+    # reassign_counts_ convergence signal across passes. The count for the
+    # LAST rebuild is only observable one replay later, so when
+    # track_reassignments is on, one trailing measurement-only replay runs
+    # (rebuild discarded; it also upgrades objective_ to the true objective
+    # of the FINAL centers). With tracking off the counts cover the first
+    # passes-1 rebuilds and objective_ is measured under the pre-rebuild
+    # centers of the last pass.
+
+    def _refine_supported(self) -> bool:
+        return self.algorithm == "minibatch" and self.decay == 1.0
+
+    def _refine_check(self) -> None:
+        if self.algorithm != "minibatch":
+            raise ValueError(
+                "algorithm='lloyd' retains the sketch and already iterates "
+                "assignment/update to a fixed point on it — there is no "
+                "second-pass gap to close; two-pass refinement applies to "
+                "the streaming algorithm='minibatch' fold")
+        if self.decay < 1.0:
+            raise ValueError(
+                "two-pass refinement rebuilds centers as a UNIFORM mean over "
+                "the whole replayed history, which would resurrect exactly the "
+                "stale rows a decay= fit deliberately forgets (and drag the "
+                "centers back toward pre-drift positions); refine the "
+                "undecayed fit, or keep the decayed one-pass centers "
+                "(decay-weighted rebuilds are a ROADMAP item)")
+
+    def _refine_needs_signal(self) -> bool:
+        return self.track_reassignments
+
+    def _refine_pass_begin(self, f: int) -> None:
+        if f == 0 and not self.refine_passes_:
+            # fresh refinement freezes the best first-pass hypothesis (THE
+            # selection rule — kmeans_finalize); a repeat refine() resumes
+            # from self._rc, the previous refinement's rebuilt centers
+            self._rc, _ = acc.kmeans_finalize(self._km_state)
+            self._rc_prev = None
+            self._rflips: list[tuple[int, int]] = []
+        self._r2 = refine_mod.kmeans2_init(self.k, self.spec_.p_pad)
+
+    def _refine_fold(self, s: SparseRows, step: int, shard: int) -> None:
+        self._r2 = refine_mod.kmeans2_apply(
+            self._r2, refine_mod.kmeans2_delta(s, self._rc, self._rc_prev))
+
+    def _refine_pass_end(self, f: int, last: bool, signal: bool) -> None:
+        if self._rc_prev is not None:
+            # flips between c_{f-1} and c_f = rows reassigned by rebuild f
+            self._rflips.append((int(self._r2.flips), int(self._r2.count)))
+        self._robj = self._r2.obj
+        if signal:
+            # every rebuild so far is measured — a resumed refine() must not
+            # re-count the last one, so drop the pending comparison centers
+            self._rc_prev = None
+        else:
+            self._rc_prev = self._rc
+            self._rc = refine_mod.kmeans2_centers(self._r2, self._rc)
+
+    def _refine_end(self, passes: int) -> None:
+        self.centers_pre_ = self._rc
+        self.centers_ = sketch_mod.unmix_dense(self._rc, self.spec_)
+        self.objective_ = self._robj
+        self.refine_passes_ += passes    # cumulative across repeat refine()s
+        if self._rflips:
+            cnt = np.array([c for c, _ in self._rflips])
+            rows = np.array([max(r, 1) for _, r in self._rflips])
+            self.refine_reassign_counts_ = cnt
+            self.refine_reassign_fraction_ = cnt / rows
 
 
 # --------------------------------------------------------- grad compressor --

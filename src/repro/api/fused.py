@@ -35,6 +35,7 @@ import numpy as np
 from repro.api.estimators import SketchCursor, SketchedEstimator, as_key
 from repro.api.plan import Plan
 from repro.core import sketch as sketch_mod
+from repro import refine as refine_mod
 
 # Plan fields that determine WHAT the shared sketch is (spec + chunk→key
 # mapping). Consumers must agree with the driving plan on these; the backend —
@@ -117,7 +118,7 @@ def _check_consumer(plan: Plan, c: SketchedEstimator, i: int, key0) -> None:
 
 def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
              source=None, steps: int | None = None, seed: int | None = None,
-             finalize: bool = True) -> SharedSketchRun:
+             finalize: bool = True, refine: bool | int = False) -> SharedSketchRun:
     """Fit every consumer from ONE ``source → sketch → fan-out`` pass.
 
     Parameters
@@ -137,6 +138,14 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
         ``plan.n_shards`` shards — exactly like ``estimator.fit_stream``.
     finalize: pass False to stop after ingest (e.g. to keep feeding via
         ``run.partial_fit``); call ``run.finalize()`` when done.
+    refine: run second-pass replay refinement (``repro.refine``) after
+        finalize on every consumer that supports it — PCA power iteration on
+        the lowrank-range path, two-pass (Alg. 2) minibatch K-means. ``True``
+        uses ``plan.refine_passes`` (or 1); an int overrides the pass count.
+        Each replay pass regenerates every (step, shard) sketch ONCE and fans
+        it out to all refiners — the shared-cursor discipline applied to
+        refinement, so one shared-sketch run feeds both refiners. Requires
+        ``finalize=True`` (refinement replays a finalized first pass).
 
     Returns the :class:`SharedSketchRun`; the fitted attributes live on the
     consumer objects themselves, identical (≤1e-5) to what separate ``fit``
@@ -150,6 +159,9 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
         raise ValueError("provide exactly one of data or source=")
     if source is not None and steps is None:
         raise ValueError("source= needs steps=")
+    if refine and not finalize:
+        raise ValueError("refine= replays a FINALIZED first pass; drop "
+                         "finalize=False (or refine later via estimator.refine)")
     for i, c in enumerate(consumers):
         if not isinstance(c, SketchedEstimator):
             raise TypeError(f"consumers[{i}] is {type(c).__name__}, expected a "
@@ -157,6 +169,14 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
     key0 = as_key(consumers[0].key)
     for i, c in enumerate(consumers):
         _check_consumer(plan, c, i, key0)
+    refiners: tuple[SketchedEstimator, ...] = ()
+    if refine:
+        refiners = tuple(c for c in consumers if c._refine_supported())
+        if not refiners:
+            raise ValueError(
+                "refine= given but no consumer supports second-pass "
+                "refinement (SparsifiedPCA with cov_path='lowrank'/"
+                "lowrank_method='range', or minibatch SparsifiedKMeans)")
 
     cursor = SketchCursor(plan, key0)
     for c in consumers:
@@ -164,12 +184,21 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
         c._cursor = cursor      # adopt the shared pass (reset() detaches again)
         cursor.register(c)
 
+    src = None
     if data is not None:
         cursor.partial_fit(data)
     else:
         from repro.stream.engine import normalize_source
 
-        cursor.fold_source(normalize_source(source), steps, seed)
+        src = normalize_source(source)
+        cursor.fold_source(src, steps, seed)
 
     run = SharedSketchRun(consumers, cursor)
-    return run.finalize() if finalize else run
+    if not finalize:
+        return run
+    run.finalize()
+    if refiners:
+        passes = (plan.refine_passes or 1) if refine is True else int(refine)
+        refine_mod.run_refine(plan, cursor.spec, refiners, passes, data=data,
+                              source=src, steps=steps, seed=seed)
+    return run

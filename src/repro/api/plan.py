@@ -61,6 +61,11 @@ class Plan:
                 linear so its (p, l) delta psums across shards (the default);
                 "fd" — Frequent Directions, deterministic guarantee but a
                 sequential (order-dependent) fold.
+    refine_passes: default number of second-pass replay refinements for
+                ``fit_refine`` / ``fit_many(refine=True)`` (repro.refine: PCA
+                power iteration on the lowrank-range path, two-pass Alg.-2
+                K-means for the minibatch fold). 0 = plain one-pass fits;
+                ``fit_refine`` with no explicit ``passes`` then runs 1.
     dtype:      input rows are cast to this before sketching.
     """
 
@@ -76,6 +81,7 @@ class Plan:
     cov_path: Literal["dense", "compact", "lowrank"] = "dense"
     rank: int | None = None
     lowrank_method: Literal["range", "fd"] = "range"
+    refine_passes: int = 0
     dtype: Any = "float32"
 
     def __post_init__(self):
@@ -94,6 +100,8 @@ class Plan:
                     f"sketch), got rank={self.rank}")
         elif self.rank is not None:
             raise ValueError("rank= only applies to cov_path='lowrank'")
+        if self.refine_passes < 0:
+            raise ValueError(f"refine_passes must be >= 0, got {self.refine_passes}")
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
         if self.n_shards < 1:

@@ -1,0 +1,41 @@
+"""Second-pass refinement over the regenerable source — zero stored data.
+
+The paper's sampling is single-pass, but its guarantees are per-step: the
+range-finder's PCA subspace is pinned at the one-pass gap ratio, and streaming
+K-means centers inherit one round of assignment noise (each batch was assigned
+against the centers as they were when it arrived). Because every backend
+regenerates per-batch masks from the ``(seed, step, shard)`` contract
+(``core.sketch.batch_key``), extra passes cost zero stored data — replaying
+the source reproduces every sketch bit-identically.
+
+- :mod:`repro.refine.power` — PCA power iteration: replay with the Gaussian
+  test matrix replaced by the current basis, Y = S·Q accumulated by the same
+  ``kernels/spmm``-fed :class:`~repro.lowrank.range_finder.RangeState` (same
+  mask-noise debiasing, same per-step psum), gap ratio squared per pass,
+  finalized through the existing :class:`~repro.lowrank.model.LowRankCov`
+  core solve.
+- :mod:`repro.refine.kmeans2` — two-pass (Alg. 2) K-means: re-assign every
+  row against FROZEN first-pass centers on a replay pass and rebuild centers
+  from those consistent assignments (the unbiased per-coordinate center
+  estimator); reassignment counts continue as the convergence signal.
+- :mod:`repro.refine.replay` — the shared replay driver: one regenerated
+  sketch per (step, shard) chunk per pass, fanned out to every refiner.
+
+Front doors: ``Plan(refine_passes=q)`` + ``SparsifiedPCA.fit_refine`` /
+``SparsifiedKMeans.fit_refine``, ``StreamEngine.replay()`` (scan-safe; one
+fixed-size psum per step under a mesh), and ``fit_many(..., refine=True)``.
+"""
+from repro.refine.kmeans2 import (  # noqa: F401
+    KMeans2State,
+    kmeans2_apply,
+    kmeans2_centers,
+    kmeans2_delta,
+    kmeans2_init,
+)
+from repro.refine.power import (  # noqa: F401
+    debiased_action,
+    power_finalize,
+    power_orth,
+    subspace_change,
+)
+from repro.refine.replay import replay_sketches, run_refine  # noqa: F401

@@ -1,0 +1,112 @@
+"""Two-pass (Alg. 2) K-means refinement over the regenerable source.
+
+Mini-batch streaming K-means assigns each batch against the centers AS THEY
+WERE when the batch arrived, so the finalized centers inherit one round of
+assignment noise: early batches were attributed to centers that have since
+moved (ROADMAP "two-pass (Alg. 2) refinement"). Because every batch's sketch
+regenerates from the (seed, step, shard) contract, a second pass fixes this
+without storing anything: re-assign every row against FROZEN first-pass
+centers, and rebuild each center as the per-coordinate mean of its
+consistently-assigned sparse rows — the paper's unbiased center estimator
+(the steady state of the Eq. 39 update), now over one consistent assignment.
+
+The accumulator is the fixed-size :class:`KMeans2State`; its per-batch delta
+depends only on the frozen centers (not on the accumulated state), so folds
+commute and batch / stream / sharded backends produce BIT-IDENTICAL refined
+centers (tests/test_refine.py asserts equality, not tolerance). The delta is
+additive, so a distributed replay psums it per step exactly like the moment
+deltas.
+
+Convergence signal: each pass also counts rows whose nearest frozen center
+differs from their nearest center one rebuild earlier — the same
+reassignment-count signal ``SparsifiedKMeans`` tracks per step during
+streaming, continued across refinement passes (it decays to zero as the
+rebuilds converge to a Lloyd fixed point of the sketch).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import sparse_sq_dists
+from repro.core.sampling import SparseRows
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KMeans2State:
+    """One replay pass's fixed-size accumulators (all frozen-center driven).
+
+    sums:  (K, p) Σ of sampled values per (cluster, coordinate)
+    cnts:  (K, p) per-coordinate observation counts (int32 — exact)
+    obj:   ()     Σ min-distance² under the frozen centers
+    flips: ()     rows whose frozen-center label ≠ their label under the
+                  previous pass's centers (0 when no previous centers)
+    count: ()     rows folded
+    """
+
+    sums: jax.Array
+    cnts: jax.Array
+    obj: jax.Array
+    flips: jax.Array
+    count: jax.Array
+
+    def tree_flatten(self):
+        return (self.sums, self.cnts, self.obj, self.flips, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def kmeans2_init(k: int, p: int) -> KMeans2State:
+    return KMeans2State(
+        sums=jnp.zeros((k, p), jnp.float32),
+        cnts=jnp.zeros((k, p), jnp.int32),
+        obj=jnp.zeros((), jnp.float32),
+        flips=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def kmeans2_delta(batch: SparseRows, frozen: jax.Array,
+                  prev: jax.Array | None = None) -> KMeans2State:
+    """One batch's contribution under FROZEN centers — local, additive,
+    psum-able, and independent of the accumulated state (folds commute).
+
+    ``prev`` (the centers one rebuild earlier) enables the flip count; pass
+    None on the first pass (one distance sweep instead of two).
+    """
+    values, indices = batch.values, batch.indices
+    k, p = frozen.shape
+    d = sparse_sq_dists(values, indices, frozen)               # (n, K)
+    a = jnp.argmin(d, axis=1)
+    rows = jnp.broadcast_to(a[:, None], indices.shape)
+    v32 = values.astype(jnp.float32)
+    sums = jnp.zeros((k, p), jnp.float32).at[rows, indices].add(v32)
+    cnts = jnp.zeros((k, p), jnp.int32).at[rows, indices].add(1)
+    if prev is None:
+        flips = jnp.zeros((), jnp.int32)
+    else:
+        a_prev = jnp.argmin(sparse_sq_dists(values, indices, prev), axis=1)
+        flips = jnp.sum(a != a_prev).astype(jnp.int32)
+    return KMeans2State(sums, cnts, jnp.sum(jnp.min(d, axis=1)).astype(jnp.float32),
+                        flips, jnp.int32(values.shape[0]))
+
+
+def kmeans2_apply(state: KMeans2State, delta: KMeans2State) -> KMeans2State:
+    """Fold a (possibly psum'd) delta into the pass accumulator."""
+    return KMeans2State(state.sums + delta.sums, state.cnts + delta.cnts,
+                        state.obj + delta.obj, state.flips + delta.flips,
+                        state.count + delta.count)
+
+
+def kmeans2_centers(state: KMeans2State, frozen: jax.Array) -> jax.Array:
+    """Rebuild: per-coordinate mean of the consistently-assigned sparse rows;
+    never-sampled (cluster, coordinate) cells keep their frozen value (the
+    paper's never-sampled-coordinate convention, same as the streaming fold)."""
+    return jnp.where(state.cnts > 0,
+                     state.sums / jnp.maximum(state.cnts, 1).astype(jnp.float32),
+                     frozen)

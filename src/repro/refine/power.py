@@ -1,0 +1,77 @@
+"""PCA power-iteration refinement over the regenerable source (ROADMAP
+"single-pass accuracy ceiling").
+
+The one-pass range-finder pins its subspace error at the one-pass gap ratio:
+the basis is orth of Y' = S'·Omega for a RANDOM Omega, so the captured range
+leaks tail directions in proportion to σ_{r+1}/σ_k of the debiased operator
+S' = S − corr·diag(S). Every backend regenerates batch masks from the
+(seed, step, shard) contract, so a replay pass costs zero stored data — and
+replaying with Omega replaced by the CURRENT basis Q is exactly one step of
+power iteration:
+
+    Y_r = S·Q_{r-1}          (accumulated by the same kernels/spmm range_delta)
+    Q_r = orth(Y_r − corr·(diag(S) ∘ Q_{r-1}))      (debias, then orthonormalize)
+
+Each pass multiplies the leaked-tail fraction by another gap ratio (squares it
+counting the initial sketch), while the accumulator stays the same O(l·p)
+:class:`~repro.lowrank.range_finder.RangeState` — per-pass deltas psum across
+shards exactly like the first pass. Finalize reuses the one-pass core solve
+(:func:`~repro.lowrank.range_finder.range_finalize`) with Omega → Q_{q-1}: the
+fat least-squares system Qᵀ·Y' ≈ core·(QᵀQ_{q-1}) is even better conditioned
+than the Gaussian one, because Q_{q-1} already spans the captured range.
+
+S here is the SKETCH's co-occurrence matrix, so power iteration converges to
+the dense-path eigenvectors of the SAME sketched estimate Ĉ_n — the estimator
+noise floor of Thm 6 is unchanged; what shrinks is the range-finder's subspace
+gap on top of it (tests/test_refine.py measures dense-vs-lowrank angles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.lowrank.model import LowRankCov
+from repro.lowrank.range_finder import RangeState, range_finalize
+
+
+def debiased_action(state: RangeState, q_prev: jax.Array, m: int) -> jax.Array:
+    """(p, l) — the debiased operator's action S'·Q_prev / count, in closed form.
+
+    ``state.y`` accumulated S·Q_prev over the replay; diag(S) is carried
+    exactly, so the mask-noise diagonal floor is removed without another pass
+    (the same move as the one-pass finalize, with Omega → Q_prev).
+    """
+    p = state.y.shape[0]
+    corr = (p - m) / (p - 1)
+    return (state.y - corr * state.diag[:, None] * q_prev) / state.count
+
+
+def power_orth(state: RangeState, q_prev: jax.Array, m: int) -> jax.Array:
+    """The next power-iteration basis: orth(S'·Q_prev), (p, l) orthonormal.
+
+    Orthonormalized by SVD rather than QR so the columns come out ordered by
+    singular value — the leading l/2 columns are the model-rank subspace the
+    finalize will keep, which is what convergence diagnostics should watch
+    (the trailing columns churn in the noise tail forever).
+    """
+    u, _, _ = jnp.linalg.svd(debiased_action(state, q_prev, m), full_matrices=False)
+    return u
+
+
+def power_finalize(state: RangeState, q_prev: jax.Array, m: int,
+                   rank: int | None = None) -> LowRankCov:
+    """Finalize the LAST pass's state through the one-pass core solve.
+
+    Identical algebra to :func:`range_finalize` with the test matrix Q_prev in
+    place of Omega — basis = top-l/2 left singular vectors of the debiased
+    action, core = fat least-squares — so the refined model has the same rank
+    and eigenvalue scaling as the one-pass model it supersedes.
+    """
+    return range_finalize(state, m, q_prev, rank=rank)
+
+
+def subspace_change(q_new: jax.Array, q_old: jax.Array) -> float:
+    """Largest principal-angle sine between two orthonormal bases — the
+    per-pass convergence diagnostic (decays by the gap ratio each pass)."""
+    s = jnp.linalg.svd(q_new.T @ q_old, compute_uv=False)
+    return float(jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.min(s) ** 2)))

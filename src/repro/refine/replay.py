@@ -1,0 +1,104 @@
+"""Replay of the regenerable source — the second-pass driver.
+
+Every backend keys chunk j's mask with ``sketch.batch_key(spec, step, shard)``
+where ``(step, shard) = plan.step_shard(j)``, so the full sketch sequence of a
+finished pass regenerates BIT-IDENTICALLY from (plan, spec) plus the original
+data (in-memory array or ``(seed, step, shard)`` source) — nothing was stored.
+:func:`replay_sketches` is that regeneration as a generator;
+:func:`run_refine` walks it once per refinement pass and fans each sketch out
+to every refiner — one sketch per (step, shard) chunk per pass, shared by all
+refiners exactly like the forward :class:`~repro.api.estimators.SketchCursor`
+pass (the ``fit_many(refine=True)`` story).
+
+Refiner protocol (duck-typed; implemented by ``SparsifiedPCA`` /
+``SparsifiedKMeans``):
+
+- ``_refine_pass_begin(f)``      — allocate the pass-f fold state;
+- ``_refine_fold(s, step, shard)`` — fold one replayed sketch (sharded
+  refiners buffer a step and psum its fixed-size delta themselves);
+- ``_refine_pass_end(f, last, signal)`` — flush + rebuild (orthonormalize the
+  power basis / rebuild the frozen-assignment centers);
+- ``_refine_end(passes)``        — finalize the fitted attributes;
+- ``_refine_needs_signal()``     — True to request ONE trailing
+  measurement-only replay (fold ``f == passes``): same fold, rebuild
+  discarded. It prices the LAST rebuild's reassignment count (and the true
+  objective of the final centers) — the flip count between c_r and c_{r-1} is
+  only observable by re-assigning, i.e. one replay later.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sketch_mod
+from repro.core.sampling import SparseRows
+from repro.core.sketch import batch_key
+
+
+def replay_sketches(plan, spec: sketch_mod.SketchSpec, data=None, *, source=None,
+                    steps: int | None = None,
+                    seed: int | None = None) -> Iterator[tuple[SparseRows, int, int]]:
+    """Yield ``(sketch, step, shard)`` regenerating a finished pass exactly.
+
+    ``data``: the SAME (rows, p) array the pass ingested — re-chunked in
+    consecutive ``plan.batch_size`` chunks, chunk j under the
+    ``plan.step_shard(j)`` mask key, exactly as ``SketchCursor`` chunked it.
+    ``source``: the pass's ``(seed, step, shard) → (b, p)`` source (already
+    normalized by the caller), pulled for steps × n_shards batches.
+    """
+    if (data is None) == (source is None):
+        raise ValueError("replay needs exactly one of data or source=")
+    if data is not None:
+        x = jnp.asarray(data).astype(plan.dtype)
+        if x.ndim != 2 or x.shape[1] != spec.p:
+            raise ValueError(f"replay data has shape {x.shape}, but the fitted "
+                             f"pass was p={spec.p}")
+        bs = plan.batch_size
+        for j, i in enumerate(range(0, x.shape[0], bs)):
+            step, shard = plan.step_shard(j)
+            yield (sketch_mod.sketch(x[i:i + bs], spec,
+                                     batch_key=batch_key(spec, step, shard),
+                                     impl=plan.impl), step, shard)
+    else:
+        if steps is None:
+            raise ValueError("source= replay needs steps=")
+        for step in range(steps):
+            for shard in range(plan.n_shards):
+                rows = jnp.asarray(source(seed, step, shard)).astype(plan.dtype)
+                if rows.shape[-1] != spec.p:
+                    raise ValueError(f"source batch has p={rows.shape[-1]}, "
+                                     f"fitted pass was p={spec.p}")
+                yield (sketch_mod.sketch(rows, spec,
+                                         batch_key=batch_key(spec, step, shard),
+                                         impl=plan.impl), step, shard)
+
+
+def run_refine(plan, spec: sketch_mod.SketchSpec, refiners: Sequence, passes: int,
+               data=None, *, source=None, steps: int | None = None,
+               seed: int | None = None) -> None:
+    """Drive ``passes`` refinement passes over the regenerated sketch stream.
+
+    Each pass regenerates every (step, shard) sketch ONCE and fans it out to
+    every refiner (the shared-cursor discipline, applied to replay). A trailing
+    measurement-only fold runs iff some refiner requests it; refiners that
+    don't are simply not fed during it.
+    """
+    if passes < 1:
+        raise ValueError(f"refinement needs passes >= 1, got {passes}")
+    refiners = list(refiners)
+    signal = [r for r in refiners if r._refine_needs_signal()]
+    for f in range(passes + (1 if signal else 0)):
+        is_signal = f >= passes
+        active = signal if is_signal else refiners
+        for r in active:
+            r._refine_pass_begin(f)
+        for s, step, shard in replay_sketches(plan, spec, data, source=source,
+                                              steps=steps, seed=seed):
+            for r in active:
+                r._refine_fold(s, step, shard)
+        for r in active:
+            r._refine_pass_end(f, last=(f == passes - 1), signal=is_signal)
+    for r in refiners:
+        r._refine_end(passes)

@@ -45,6 +45,7 @@ from repro.core import sketch as sketch_mod
 from repro.core.sampling import SparseRows
 from repro.core.sketch import batch_key  # noqa: F401  (re-exported; the repo-wide discipline)
 from repro import lowrank as lowrank_mod
+from repro import refine as refine_mod
 from repro.stream import accumulators as acc
 from repro.utils.prng import fold_in_str
 
@@ -104,6 +105,8 @@ class StreamResult:
     centers_pre: jax.Array | None = None    # preconditioned domain, (K, p_pad)
     kmeans_obj: jax.Array | None = None
     cov_lowrank: "lowrank_mod.LowRankCov | None" = None  # cov_path="lowrank"
+    refine_passes: int = 0                  # replay() passes folded into this
+    refine_reassigned: tuple | None = None  # rows reassigned by rebuilds 1..q-1
 
 
 def _normalize_source(source) -> Source:
@@ -194,6 +197,8 @@ class StreamEngine:
             self._omega = lowrank_mod.omega(spec.key, spec.p_pad, self.rank)
         self._update = jax.jit(self._build_update(), donate_argnums=0)
         self._scan = None  # compiled-once lax.scan over a whole stream
+        self._refine_update = None  # lazily jitted replay() step update
+        self._refine_scan = None    # compiled-once lax.scan of one replay pass
         self.state: EngineState | None = None  # set by run()/run_scanned()
 
     # ------------------------------------------------------------ plumbing --
@@ -331,6 +336,180 @@ class StreamEngine:
                                  self.kmeans.k, self.kmeans.n_init,
                                  decay=self.kmeans.decay)
         return self._fresh_state(km)
+
+    # ------------------------------------------------------------ replaying --
+    # Second-pass refinement (repro.refine): the (seed, step, shard) contract
+    # regenerates every batch AND its mask, so extra passes store nothing.
+    # Each pass folds a fixed-size carry — a RangeState accumulating Y = S·Q
+    # (PCA power iteration) and/or a KMeans2State accumulating frozen-center
+    # assignment sums (two-pass Alg. 2) — through one jitted update per step;
+    # under a mesh the only cross-shard traffic is ONE psum of that fixed-size
+    # delta per step, exactly like run(). The carry is scan-safe:
+    # replay_scanned() folds a whole pass as one lax.scan.
+
+    def _build_refine_update(self):
+        """update(carry, x, step, q_mat, frozen, prev) → carry."""
+        has_lr, has_km = self.lowrank, self.kmeans is not None
+
+        def local_deltas(x, step, shard, q_mat, frozen, prev):
+            s = self._sketch_local(x, step, shard)
+            ld = (lowrank_mod.range_delta(s, q_mat, impl=self.impl)
+                  if has_lr else None)
+            kd = refine_mod.kmeans2_delta(s, frozen, prev) if has_km else None
+            return ld, kd
+
+        def apply(carry, deltas):
+            ld, kd = deltas
+            cl, ck = carry
+            return (lowrank_mod.range_apply(cl, ld) if ld is not None else cl,
+                    refine_mod.kmeans2_apply(ck, kd) if kd is not None else ck)
+
+        if self.mesh is None:
+            def update(carry, x, step, q_mat, frozen, prev):
+                deltas = local_deltas(x[0], step, 0, q_mat, frozen, prev)
+                for shard in range(1, self.n_shards):
+                    d = local_deltas(x[shard], step, shard, q_mat, frozen, prev)
+                    deltas = jax.tree.map(jnp.add, deltas, d)
+                return apply(carry, deltas)
+            return update
+
+        axis = self.axis
+
+        def sharded_update(carry, x, step, q_mat, frozen, prev):
+            deltas = local_deltas(x[0], step, jax.lax.axis_index(axis),
+                                  q_mat, frozen, prev)
+            deltas = jax.lax.psum(deltas, axis)  # the only cross-shard traffic
+            return apply(carry, deltas)
+
+        return shard_map(
+            sharded_update, mesh=self.mesh,
+            in_specs=(P(), P(axis), P(), P(), P(), P()), out_specs=P(),
+        )
+
+    def _init_refine_carry(self):
+        return (lowrank_mod.range_init(self.spec.p_pad, self.rank)
+                if self.lowrank else None,
+                refine_mod.kmeans2_init(self.kmeans.k, self.spec.p_pad)
+                if self.kmeans is not None else None)
+
+    def _replay_passes(self, fold_pass, passes: int,
+                       state: EngineState | None) -> StreamResult:
+        """Shared head/tail of replay()/replay_scanned(): per-pass basis
+        orthonormalization / center rebuild around ``fold_pass(carry, q,
+        frozen, prev) → carry``, then the refined finalize."""
+        state = state if state is not None else self.state
+        if state is None:
+            raise RuntimeError("no stream folded yet — run()/run_scanned() "
+                               "first; replay() refines a finished pass")
+        if not (self.lowrank or self.kmeans is not None):
+            raise ValueError(
+                "replay() refines the low-rank PCA basis and/or streaming "
+                "K-means centers; this engine tracks neither (dense moment "
+                "accumulators are already exact in one pass)")
+        if self.kmeans is not None and self.kmeans.decay < 1.0:
+            raise ValueError(
+                "replay()'s uniform Alg.-2 rebuild would un-forget the "
+                "history a decay= stream deliberately down-weights; refine "
+                "an undecayed engine (decay-weighted rebuilds are a ROADMAP "
+                "item)")
+        if passes < 1:
+            raise ValueError(f"replay needs passes >= 1, got {passes}")
+        m = self.spec.m
+        q = q_prev = None
+        if self.lowrank:
+            q = refine_mod.power_orth(state.lowrank, self._omega, m)
+        frozen = prev = None
+        if self.kmeans is not None:
+            # the best first-pass hypothesis is the frozen Alg.-2 start; prev
+            # mirrors it on pass 0 (flips trivially 0 — dropped below) so the
+            # jitted update keeps one signature across passes
+            frozen, _ = acc.kmeans_finalize(state.kmeans)
+            prev = frozen
+        flips: list[int] = []
+        obj = None
+        lr_state = km_state = None
+        for r in range(passes):
+            carry = fold_pass(self._init_refine_carry(), q, frozen, prev)
+            lr_state, km_state = carry
+            if self.lowrank:
+                q_prev, q = q, refine_mod.power_orth(lr_state, q, m)
+            if self.kmeans is not None:
+                if r > 0:
+                    flips.append(int(km_state.flips))
+                obj = km_state.obj
+                prev = frozen
+                frozen = refine_mod.kmeans2_centers(km_state, frozen)
+
+        if self.lowrank:
+            mean = lowrank_mod.range_finalize_mean(lr_state, m)
+            count = lr_state.count
+            cov = None
+            cov_lowrank = refine_mod.power_finalize(lr_state, q_prev, m)
+        else:
+            base = self.finalize(state)
+            mean, cov, count, cov_lowrank = base.mean, base.cov, base.count, None
+        centers = centers_pre = None
+        if self.kmeans is not None:
+            centers_pre = frozen
+            centers = sketch_mod.unmix_dense(centers_pre, self.spec)
+        return StreamResult(mean=mean, cov=cov, count=count, centers=centers,
+                            centers_pre=centers_pre, kmeans_obj=obj,
+                            cov_lowrank=cov_lowrank, refine_passes=passes,
+                            refine_reassigned=tuple(flips))
+
+    def replay(self, steps: int, seed: int | None = None, passes: int = 1,
+               state: EngineState | None = None) -> StreamResult:
+        """Refine a finished run() by ``passes`` replays of the same source.
+
+        PCA (cov_path="lowrank"): each pass is one power iteration — the
+        replayed operator action S·Q replaces the Gaussian sketch S·Omega,
+        squaring the one-pass gap ratio per pass; finalize goes through the
+        same LowRankCov core solve. K-means: each pass re-assigns every row
+        against frozen pass-start centers and rebuilds them from those
+        consistent assignments (two-pass Alg. 2); ``refine_reassigned[r]`` is
+        the rows reassigned by rebuild r+1 (observable one replay later, so
+        the last rebuild's count needs a ``passes+1``-th measurement replay if
+        wanted — the estimator layer's track_reassignments does exactly that).
+        ``kmeans_obj`` is the objective under the LAST pass's frozen centers.
+        """
+        if self._refine_update is None:
+            self._refine_update = jax.jit(self._build_refine_update(),
+                                          donate_argnums=0)
+
+        def fold_pass(carry, q, frozen, prev):
+            for step in range(steps):
+                carry = self._refine_update(carry,
+                                            self._host_global_batch(seed, step),
+                                            jnp.int32(step), q, frozen, prev)
+            return carry
+
+        return self._replay_passes(fold_pass, passes, state)
+
+    def replay_scanned(self, xs, passes: int = 1,
+                       state: EngineState | None = None) -> StreamResult:
+        """replay() over a pre-staged stream ``xs (steps, n_shards, b, p)``,
+        each pass folded as ONE jitted lax.scan (the carry is fixed-size by
+        construction — scan-safety is the point of the delta algebra)."""
+        if self._refine_scan is None:
+            update = self._build_refine_update()
+
+            @jax.jit
+            def scan_pass(carry, xs, q, frozen, prev):
+                def body(c, inp):
+                    step, x = inp
+                    return update(c, x, step, q, frozen, prev), None
+                steps = xs.shape[0]
+                c, _ = jax.lax.scan(
+                    body, carry, (jnp.arange(steps, dtype=jnp.int32), xs))
+                return c
+
+            self._refine_scan = scan_pass
+        xs = jnp.asarray(xs)
+
+        def fold_pass(carry, q, frozen, prev):
+            return self._refine_scan(carry, xs, q, frozen, prev)
+
+        return self._replay_passes(fold_pass, passes, state)
 
     # ---------------------------------------------------------- finalizing --
 

@@ -19,3 +19,26 @@ def make_clusters(key, n, p, k, sep=3.0, noise=0.5):
     labels = jax.random.randint(lk, (n,), 0, k)
     x = centers[labels] + noise * jax.random.normal(nk, (n, p))
     return x, labels, centers
+
+
+def spiked(key, n, p, k, noise=1e-2, lam_hi=10.0, lam_lo=7.0):
+    """Spiked covariance model: k planted directions over a small iso floor.
+    THE spectral test model (test_lowrank, test_refine; benchmarks keep their
+    own copy in benchmarks/common.py — tests must not import benchmarks)."""
+    import jax.numpy as jnp
+
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (p, k)))
+    lam = jnp.linspace(lam_hi, lam_lo, k)
+    z = jax.random.normal(jax.random.fold_in(key, 1), (n, k)) * lam
+    return z @ u.T + noise * jax.random.normal(jax.random.fold_in(key, 2), (n, p))
+
+
+def max_angle_sin(a, b):
+    """Largest principal-angle sine between the row spaces of a and b, in f64
+    (the angles of interest sit at/below f32 resolution)."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    a /= np.linalg.norm(a, axis=1, keepdims=True)
+    b /= np.linalg.norm(b, axis=1, keepdims=True)
+    s = np.linalg.svd(a @ b.T, compute_uv=False)
+    return float(np.sqrt(np.maximum(0.0, 1.0 - s**2)).max())

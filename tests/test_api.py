@@ -291,6 +291,39 @@ def test_minibatch_tail_flush_and_interleaved_finalize():
     assert not np.allclose(np.asarray(est.centers_), c1)  # the tail data counted
 
 
+def test_minibatch_ragged_tail_with_decay():
+    """Ragged tails × decay < 1 (the forgetting factor): pending half steps
+    flush correctly under float counts, the per-step reassignment history has
+    one entry per APPLIED step at every partial_fit/finalize checkpoint, and
+    the decayed counts stay positive and bounded by b·n_shards/(1−decay)."""
+    decay = 0.8
+    x, _, _ = make_clusters(KEY, n=1030, p=16, k=3)
+    plan = _plan(backend="stream", batch_size=100, n_shards=2)
+    est = SparsifiedKMeans(3, plan, key=5, algorithm="minibatch", decay=decay)
+
+    est.partial_fit(x[:330])            # 4 chunks: 2 applied steps incl. tail30
+    est.finalize()                      #   → the pending (step 1, shard 1) flushes
+    assert est.count_ == 330
+    assert est.reassign_counts_ is not None and len(est.reassign_counts_) == 2
+    counts = np.asarray(est._km_state.counts)
+    assert counts.dtype == np.float32   # decay ⇒ float counts
+    assert (counts >= 0).all() and counts.sum() > 0
+    bound = 100 * 2 / (1 - decay)       # decay bounds any cell's count
+    assert counts.max() <= bound + 1e-3
+
+    est.partial_fit(x[330:])            # 7 more chunks, ends on a half step
+    est.finalize()
+    assert est.count_ == 1030
+    # 11 chunks / 2 shards → 6 applied steps total (finalize flushed the tail)
+    assert len(est.reassign_counts_) == 6
+    assert (np.asarray(est.reassign_counts_) >= 0).all()
+    assert est.reassign_fraction_.shape == (6,)
+    assert np.all(est.reassign_fraction_ <= 1.0)
+    counts = np.asarray(est._km_state.counts)
+    assert (counts >= 0).all() and counts.max() <= bound + 1e-3
+    assert np.isfinite(np.asarray(est.centers_)).all()
+
+
 def test_minibatch_zero_row_batch_is_noop():
     x, _, _ = make_clusters(KEY, n=300, p=32, k=3)
     plan = _plan(backend="stream", batch_size=100)

@@ -95,3 +95,78 @@ def test_kernel_assign_fn_in_lloyd():
     mu_k, a_k, o_k, _ = km.sparse_kmeans_core(vals, idx, p, k, KEY, n_init=2, max_iter=10, assign_fn=fn)
     np.testing.assert_allclose(mu_ref, mu_k, atol=1e-4)
     assert bool(jnp.all(a_ref == a_k))
+
+
+# -------------------------- satellite: spmm VMEM-budget fallback boundary ---
+# ops._sparse_mode holds the spmm kernels to a ~12 MB VMEM footprint
+# (the (p, l) operand block + the (block_rows, p) densify scratch, no p-tiling
+# yet — ROADMAP); past it, "kernel" silently falls back to the jnp path. The
+# switch point was untested: pin it exactly at the documented ceiling.
+
+_SPMM_BUDGET = ops._SPMM_VMEM_BUDGET
+
+
+def _spmm_vmem(p, ell):
+    from repro.kernels import spmm as spmm_mod
+
+    return (p * ell + spmm_mod.default_block_rows(p) * p) * 4
+
+
+@pytest.mark.parametrize("ell,expect", [
+    (255, "kernel"),   # just below: (8192·255 + 128·8192)·4 = 12 550 144 B
+    (256, "kernel"),   # exactly AT the 12 MB ceiling (≤ keeps the kernel)
+    (257, "ref"),      # one column over: 12 615 680 B > 12 MB → jnp fallback
+])
+def test_sparse_mode_fallback_engages_exactly_at_budget(ell, expect):
+    """p=8192 has block_rows=128, so l walks the footprint across the ceiling
+    in exact 32 KiB steps — the fallback must flip between at and above."""
+    p = 8192
+    vmem = _spmm_vmem(p, ell)
+    assert (vmem <= _SPMM_BUDGET) == (expect == "kernel"), (vmem, _SPMM_BUDGET)
+    assert ops._sparse_mode("kernel", p, ell) == expect
+
+
+@pytest.mark.parametrize("p,expect", [
+    (4096, "kernel"),   # 4096·(128+128)·4 = 4 MB
+    (8192, "kernel"),   # 8 MB
+    (16384, "ref"),     # 16 MB > 12 MB — the l=128 ceiling sits here
+    (32768, "ref"),     # 24 MB (block_rows drops to 64, still over)
+])
+def test_sparse_mode_p_sweep_at_l128(p, expect):
+    """The documented l=128 regime: kernels below the ceiling, jnp past it,
+    always agreeing with the footprint formula (block_rows shrinks with p)."""
+    assert ops._sparse_mode("kernel", p, 128) == expect
+    vmem = _spmm_vmem(p, 128)
+    assert (vmem <= _SPMM_BUDGET) == (expect == "kernel")
+
+
+def test_sparse_mode_vocabulary_and_interpret():
+    """"auto" resolves by backend (ref on CPU); Plan.impl spellings like "jnp"
+    normalize to ref instead of reaching a Pallas compile; "interpret" is
+    exempt from the VMEM budget (host interpreter has no VMEM)."""
+    assert ops._sparse_mode("auto", 1 << 20, 128) == "ref"      # CPU CI host
+    assert ops._sparse_mode("jnp", 256, 8) == "ref"
+    assert ops._sparse_mode("ref", 256, 8) == "ref"
+    assert ops._sparse_mode("interpret", 1 << 20, 128) == "interpret"
+
+
+def test_spmm_kernel_matches_oracle_at_boundary_p():
+    """Numeric check AT the fallback-boundary dimensionality (p=8192): the
+    interpreted kernel and the jnp oracle agree to 1e-5 on both products, so
+    flipping across the ceiling cannot change results beyond float noise.
+    Small row count + block_rows=8 keep the interpreted densify loop fast."""
+    from repro.kernels import spmm as spmm_mod
+
+    n, m, p, ell = 8, 4, 8192, 16
+    key = jax.random.fold_in(KEY, 8192)
+    values = jax.random.normal(key, (n, m))
+    idx = jnp.sort(jax.lax.top_k(jax.random.uniform(
+        jax.random.fold_in(key, 1), (n, p)), m)[1].astype(jnp.int32), axis=-1)
+    dense = jax.random.normal(jax.random.fold_in(key, 2), (p, ell))
+
+    t_ref = ref.ref_spmm(values, idx, dense)
+    t_k = spmm_mod.spmm(values, idx, dense, block_rows=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref), atol=1e-5)
+    y_ref = ref.ref_spmm_t(values, idx, t_ref, p)
+    y_k = spmm_mod.spmm_t(values, idx, t_ref, p, block_rows=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-5)

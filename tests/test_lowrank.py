@@ -20,29 +20,14 @@ from repro.core.sampling import SparseRows, sample_indices
 from repro.kernels import ref, spmm as spmm_mod
 from repro.stream import StreamEngine, StreamKMeansConfig, accumulators as acc
 from repro.stream import sharded as sharded_mod
-from tests.conftest import make_clusters
+from tests.conftest import make_clusters, max_angle_sin, spiked as _spiked
 
 KEY = jax.random.PRNGKey(0)
 BACKENDS = ("batch", "stream", "sharded")
 
 
-def spiked(n, p, k, noise=1e-2, lam_hi=10.0, lam_lo=7.0):
-    """Spiked covariance model: k planted directions over a small iso floor."""
-    u, _ = jnp.linalg.qr(jax.random.normal(KEY, (p, k)))
-    lam = jnp.linspace(lam_hi, lam_lo, k)
-    z = jax.random.normal(jax.random.fold_in(KEY, 1), (n, k)) * lam
-    return z @ u.T + noise * jax.random.normal(jax.random.fold_in(KEY, 2), (n, p))
-
-
-def max_angle_sin(a, b):
-    """Largest principal-angle sine between the row spaces of a and b, in f64
-    (the angles of interest sit at/below f32 resolution)."""
-    a = np.asarray(a, np.float64)
-    b = np.asarray(b, np.float64)
-    a /= np.linalg.norm(a, axis=1, keepdims=True)
-    b /= np.linalg.norm(b, axis=1, keepdims=True)
-    s = np.linalg.svd(a @ b.T, compute_uv=False)
-    return float(np.sqrt(np.maximum(0.0, 1.0 - s**2)).max())
+def spiked(n, p, k, **kw):
+    return _spiked(KEY, n, p, k, **kw)
 
 
 # ------------------------------------------------------- spmm kernels -------

@@ -1,0 +1,102 @@
+"""PRNG-discipline property sweep for ``core.sketch.batch_key`` — the
+(seed, step, shard) invariant the whole repo leans on: the stream engine, the
+estimator cursor, the gradient compressor, and now ``repro.refine``'s replay
+all regenerate per-batch masks from (root key, step, shard) alone. replay()
+silently depends on three properties, pinned here: no key collisions across
+the grid, bit-identical regeneration (same triple ⇒ same mask twice), and
+cross-shard / cross-step mask independence."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch
+from repro.core.sampling import sample_indices
+
+SEEDS = (0, 1, 17)
+STEPS = (0, 1, 2, 63, 1024)
+SHARDS = (0, 1, 7, 255)
+
+
+def _spec(seed: int, p: int = 256, m: int = 32) -> sketch.SketchSpec:
+    return sketch.make_spec(p, jax.random.PRNGKey(seed), m=m)
+
+
+def test_batch_key_no_collisions_across_grid():
+    """Every (seed, step, shard) triple yields a DISTINCT key — a collision
+    would correlate two batches' masks and break the independence the Thm-4/6
+    variance bounds assume (and make replay fold the wrong mask)."""
+    seen = {}
+    for seed, step, shard in itertools.product(SEEDS, STEPS, SHARDS):
+        key = np.asarray(jax.random.key_data(
+            sketch.batch_key(_spec(seed), step, shard)))
+        kb = key.tobytes()
+        assert kb not in seen, (
+            f"key collision: {(seed, step, shard)} vs {seen[kb]}")
+        seen[kb] = (seed, step, shard)
+    assert len(seen) == len(SEEDS) * len(STEPS) * len(SHARDS)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("step,shard", [(0, 0), (3, 1), (1024, 255)])
+def test_batch_key_replay_is_bit_identical(seed, step, shard):
+    """Same triple ⇒ the SAME key and the SAME sampled mask, twice — the
+    regeneration property replay() (and straggler backup dispatch) rests on."""
+    spec = _spec(seed)
+    k1 = sketch.batch_key(spec, step, shard)
+    k2 = sketch.batch_key(spec, step, shard)
+    np.testing.assert_array_equal(np.asarray(jax.random.key_data(k1)),
+                                  np.asarray(jax.random.key_data(k2)))
+    idx1 = sample_indices(k1, 64, spec.p_pad, spec.m)
+    idx2 = sample_indices(k2, 64, spec.p_pad, spec.m)
+    np.testing.assert_array_equal(np.asarray(idx1), np.asarray(idx2))
+    # and the full sketch regenerates bit-identically too
+    x = jax.random.normal(jax.random.PRNGKey(99), (64, spec.p))
+    s1 = sketch.sketch(x, spec, batch_key=k1)
+    s2 = sketch.sketch(x, spec, batch_key=k2)
+    np.testing.assert_array_equal(np.asarray(s1.values), np.asarray(s2.values))
+    np.testing.assert_array_equal(np.asarray(s1.indices), np.asarray(s2.indices))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_cross_shard_and_cross_step_mask_independence(seed):
+    """Masks of different (step, shard) batches behave as independent draws:
+    no two are equal, and the pairwise index-overlap matches the m²/p_pad
+    expectation of independent uniform m-subsets (within 5 sigma)."""
+    spec = _spec(seed)
+    n, m, pp = 128, spec.m, spec.p_pad
+    masks = {}
+    for step, shard in itertools.product((0, 1, 2), (0, 1, 2)):
+        idx = np.asarray(sample_indices(sketch.batch_key(spec, step, shard),
+                                        n, pp, m))
+        masks[(step, shard)] = idx
+    pairs = list(itertools.combinations(masks, 2))
+    expect = m * m / pp                    # E[overlap] per row, independent sets
+    sigma = np.sqrt(expect)                # Poisson-ish bound, generous at m≪p
+    for a, b in pairs:
+        assert not np.array_equal(masks[a], masks[b]), (a, b)
+        per_row = np.array([
+            len(np.intersect1d(masks[a][i], masks[b][i])) for i in range(n)])
+        assert abs(per_row.mean() - expect) < 5 * sigma / np.sqrt(n), (
+            a, b, per_row.mean(), expect)
+
+
+def test_step_shard_are_not_interchangeable():
+    """(step=a, shard=b) ≠ (step=b, shard=a) — the two fold_in levels must not
+    commute, or a transposed grid would silently reuse masks."""
+    spec = _spec(0)
+    k_ab = np.asarray(jax.random.key_data(sketch.batch_key(spec, 2, 5)))
+    k_ba = np.asarray(jax.random.key_data(sketch.batch_key(spec, 5, 2)))
+    assert not np.array_equal(k_ab, k_ba)
+
+
+def test_batch_key_differs_from_root_mask_key():
+    """batch_key(spec, 0, 0) must not collapse onto the spec's one-shot mask
+    key (a fold_in with value 0 is still a fold), or step-0 batches would
+    share masks with every one-shot sketch() call."""
+    spec = _spec(3)
+    root = np.asarray(jax.random.key_data(spec.mask_key()))
+    k00 = np.asarray(jax.random.key_data(sketch.batch_key(spec, 0, 0)))
+    assert not np.array_equal(root, k00)
