@@ -89,6 +89,30 @@ def run(json_path: str = "BENCH_api.json"):
         f"fused fit_many ingest only {speedup:.2f}x over sequential fits — "
         "the shared sketch pass has regressed")
 
+    # ---- scanned ingest: fit_many(scan=True)'s lax.scan hot loop vs the ----
+    # per-chunk host loop, on the stream backend (PCA moments + minibatch
+    # K-means — both scan-eligible folds). The compiled scan is lru-cached,
+    # so the timed iterations measure the hot loop, not compilation. Small
+    # chunks (batch_size=256 → 32 steps) are the regime the scan exists for:
+    # per-chunk Python dispatch dominates the host loop there.
+    spl = plan.replace(backend="stream", batch_size=256)
+
+    def host_ingest():
+        fit_many(spl, [SparsifiedPCA(8, spl, key=1),
+                       SparsifiedKMeans(8, spl, key=1, algorithm="minibatch")],
+                 x, finalize=False).sync()
+
+    def scan_ingest():
+        fit_many(spl, [SparsifiedPCA(8, spl, key=1),
+                       SparsifiedKMeans(8, spl, key=1, algorithm="minibatch")],
+                 x, finalize=False, scan=True).sync()
+
+    us_host = timeit(host_ingest, warmup=1, iters=3)
+    us_scan = timeit(scan_ingest, warmup=1, iters=3)
+    record("api/scan_ingest/pca+kmeans/host_loop", us_host, n, "stream", plan.gamma)
+    record("api/scan_ingest/pca+kmeans/lax_scan", us_scan, n, "stream", plan.gamma,
+           speedup_vs_sequential=us_host / us_scan)
+
     out = os.environ.get("BENCH_API_JSON", json_path)
     with open(out, "w") as f:
         json.dump({"records": RECORDS}, f, indent=2)

@@ -1,52 +1,129 @@
-"""Kernel micro-benchmarks: FWHT preconditioning + sparse assignment.
+"""Kernel micro-benchmarks: spmm / spmm_t / FWHT / sketch_fused / sparse_assign.
 
 On this CPU container the Pallas kernels run via the interpreter (correctness
-path); timings below benchmark the jnp reference lowering — the TPU roofline
-expectations (MXU-resident Kronecker matmuls) are derived analytically and
-reported as `derived`.
+path, far too slow to time); timings below benchmark the jnp reference
+lowering of each kernel's math, while the TPU expectation comes from the
+per-kernel analytic models in ``repro.roofline.kernels`` — which mirror the
+ACTUAL tiled schedules (the spmm pair calls the same tile planner the kernels
+use). Every measurement lands in ``BENCH_kernels.json`` with rows/sec and the
+achieved-vs-roofline fraction so CI archives the per-kernel trajectory; the
+p = 2^16 spmm entries double as the acceptance gate that the tiled kernels
+(not the jnp fallback) are what ``ops._sparse_mode`` selects there.
 """
 from __future__ import annotations
 
-import numpy as np
+import json
+import os
+import sys
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import ros
 from repro.kernels import fwht as kfwht
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels import spmm as kspmm
+from repro.roofline import kernels as rl
+
+RECORDS: list[dict] = []
 
 
-def run():
+def record(name: str, us: float, model: rl.KernelRoofline, **extra):
+    rec = {"name": name, "us_per_call": round(us, 1),
+           "rows_per_sec": round(model.n / (us / 1e6)),
+           "tpu_roofline_us": round(model.us, 2),
+           "tpu_roofline_rows_per_sec": round(model.rows_per_sec),
+           "roofline_fraction": round(model.us / us, 6),
+           "bound": model.bound, "hbm_bytes": model.hbm_bytes,
+           "flops": model.flops, **extra}
+    RECORDS.append(rec)
+    emit(name, us,
+         f"rows_per_sec={rec['rows_per_sec']:,} "
+         f"tpu_roofline_us={model.us:.1f} frac={rec['roofline_fraction']:.2e}")
+
+
+def _sparse_rows(key, n: int, m: int, p: int):
+    vals = jax.random.normal(key, (n, m), jnp.float32)
+    idx = jnp.sort(jax.lax.top_k(
+        jax.random.uniform(jax.random.fold_in(key, 1), (n, p)), m)[1]
+        .astype(jnp.int32), -1)
+    return vals, idx
+
+
+def run(json_path: str = "BENCH_kernels.json"):
+    RECORDS.clear()
     key = jax.random.PRNGKey(0)
-    for p in (1024, 4096, 8192):
-        n = 2048
+
+    # ---- FWHT preconditioning (single-tile and chunked-3-pass regimes) ------
+    for p in (1024, 8192, 1 << 16):
+        n = min(2048, (1 << 25) // p)
         x = jax.random.normal(key, (n, p), jnp.float32)
         s = jax.random.rademacher(jax.random.fold_in(key, 1), (p,), jnp.float32)
         fn = jax.jit(lambda x, s: ref.ref_hd_precondition(x, s))
         us = timeit(fn, x, s)
-        bytes_moved = 2 * n * p * 4
-        a, b = kfwht.factor_p(p)
-        macs = n * p * (a + b)
-        tpu_us = max(bytes_moved / 819e9, macs * 2 / 197e12) * 1e6
-        emit(f"kernel/fwht/p={p}", us,
-             f"cpu_GBps={bytes_moved/us*1e6/1e9:.1f} kronecker=({a}x{b}) "
-             f"tpu_roofline_us={tpu_us:.1f}")
+        record(f"kernel/fwht/p={p}", us, rl.fwht_roofline(n, p),
+               n=n, p=p)
 
-    # sparse assignment: compact (values, indices) vs dense distances
+    # ---- tiled spmm / spmm_t (the low-rank projection pair) -----------------
+    # p = 2^16 at l = 128 is the acceptance shape: the tiled kernels must be
+    # what the VMEM gate selects there (pre-tiling it fell back to jnp)
+    ell, m = 128, 64
+    for p in (4096, 1 << 16):
+        n = 512
+        vals, idx = _sparse_rows(key, n, m, p)
+        dense = jax.random.normal(jax.random.fold_in(key, 2), (p, ell), jnp.float32)
+        t = jax.random.normal(jax.random.fold_in(key, 3), (n, ell), jnp.float32)
+
+        selected = ops._sparse_mode("kernel", p, ell)
+        assert selected == "kernel", (
+            f"_sparse_mode demoted p={p}, l={ell} to {selected!r} — the tiled "
+            "spmm schedule should fit the VMEM budget at any p")
+        br, pb = kspmm.plan_tiles(p, ell, jnp.float32, jnp.float32)
+
+        us = timeit(jax.jit(ref.ref_spmm), vals, idx, dense)
+        record(f"kernel/spmm/p={p}", us, rl.spmm_roofline(n, m, p, ell),
+               n=n, m=m, p=p, ell=ell, block_rows=br, block_cols=pb)
+
+        us = timeit(jax.jit(lambda v, i, t: ref.ref_spmm_t(v, i, t, p)),
+                    vals, idx, t)
+        record(f"kernel/spmm_t/p={p}", us, rl.spmm_t_roofline(n, m, p, ell),
+               n=n, m=m, p=p, ell=ell, block_rows=br, block_cols=pb)
+
+    # ---- fused sketch (the streaming-ingest fast path) ----------------------
+    # fused regime (p ≤ 2^15) and the composed chunked-FWHT + gather fallback
+    for p in (4096, 1 << 16):
+        n = min(1024, (1 << 24) // p)
+        m_s = max(8, p // 20)  # γ = 0.05, the paper's Tables III/IV setting
+        x = jax.random.normal(key, (n, p), jnp.float32)
+        s = jax.random.rademacher(jax.random.fold_in(key, 1), (p,), jnp.float32)
+        _, idx = _sparse_rows(jax.random.fold_in(key, 4), n, m_s, p)
+        fn = jax.jit(lambda x, s, i: ref.ref_sketch_fused(x, s, i))
+        us = timeit(fn, x, s, idx)
+        record(f"kernel/sketch_fused/p={p}", us,
+               rl.sketch_fused_roofline(n, p, m_s),
+               n=n, p=p, m=m_s,
+               regime="fused" if p <= kfwht.MAX_P_SINGLE else "composed")
+
+    # ---- sparse assignment: compact (values, indices) vs dense distances ----
     n, p, k = 8192, 1024, 16
     for gamma in (0.05, 0.2):
-        m = int(gamma * p)
-        vals = jax.random.normal(key, (n, m), jnp.float32)
-        idx = jnp.sort(jax.lax.top_k(jax.random.uniform(key, (n, p)), m)[1].astype(jnp.int32), -1)
+        m_a = int(gamma * p)
+        vals, idx = _sparse_rows(key, n, m_a, p)
         ctr = jax.random.normal(key, (k, p), jnp.float32)
         fn = jax.jit(lambda v, i, c: ref.ref_sparse_assign(v, i, c)[0])
         us = timeit(fn, vals, idx, ctr)
-        hbm = n * m * 8 + k * p * 4
-        tpu_us = max(hbm / 819e9, 2 * n * p * k * 2 / 197e12) * 1e6
-        emit(f"kernel/sparse_assign/gamma={gamma}", us,
-             f"compact_bytes={n*m*8>>20}MB dense_bytes={n*p*4>>20}MB tpu_roofline_us={tpu_us:.1f}")
+        hbm = n * m_a * 8 + k * p * 4
+        model = rl.KernelRoofline("sparse_assign", n, hbm, 2 * n * p * k * 2)
+        record(f"kernel/sparse_assign/gamma={gamma}", us, model,
+               n=n, p=p, k=k, gamma=gamma)
+
+    out = os.environ.get("BENCH_KERNELS_JSON", json_path)
+    with open(out, "w") as f:
+        json.dump({"records": RECORDS}, f, indent=2)
+    print(f"kernel_bench: wrote {out} ({len(RECORDS)} records)", file=sys.stderr)
 
 
 if __name__ == "__main__":
+    print("name,us_per_call,derived")
     run()

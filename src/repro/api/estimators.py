@@ -26,12 +26,15 @@ come back in the ORIGINAL domain (eigenvectors / means / centers unmixed by
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import BACKENDS, Plan
 from repro.core import estimators as est
+from repro.core import ros
 from repro.core import kmeans as km
 from repro.core import pca as pca_mod
 from repro.core import sketch as sketch_mod
@@ -223,6 +226,111 @@ def _concat_sparse(parts: list[SparseRows], p: int) -> SparseRows:
                       jnp.concatenate([s.indices for s in parts]), p)
 
 
+# --------------------------------------------------------- scanned ingest ---
+# The opt-in lax.scan hot loop (cursor.scan = True / fit_many(scan=True)):
+# instead of one Python-dispatched sketch + fold round trip per chunk, the
+# aligned full-step prefix of each partial_fit array is staged as
+# (steps, n_shards, batch_size, p) and driven through ONE jitted scan whose
+# body regenerates chunk (step, shard)'s mask key exactly as fold_rows does
+# and applies the consumers' per-step fold semantics. This mirrors
+# StreamEngine.run_scanned: same sketches, same fold order, so results match
+# the host loop to float-summation reordering — but it is NOT bit-identical
+# across backends the way the host loop is, which is why it stays opt-in.
+#
+# Consumers describe their in-scan fold with a small hashable descriptor
+# (_scan_desc) so the compiled scan is shared across estimator instances via
+# the lru_cache below; consumers whose fold cannot run inside a scan
+# (retained sketches, shard_map reductions) return None and scan=True raises.
+
+
+def _tree_sum(deltas):
+    out = deltas[0]
+    for d in deltas[1:]:
+        out = jax.tree.map(jnp.add, out, d)
+    return out
+
+
+def _scan_step_fold(desc, plan: Plan):
+    """desc → fold(carry, aux, step_sketches) -> (carry, y) for one scan step.
+
+    Each fold replicates the corresponding host-loop semantics exactly:
+    moment/range/fd fold the step's shard sketches in (step, shard) linear
+    order; minibatch K-means takes every shard's delta against the step-start
+    state, sums them, and applies once (the StreamEngine per-step discipline).
+    """
+    kind = desc[0]
+    if kind == "moment":
+        cov_path = desc[1]
+
+        def fold(carry, aux, sketches):
+            for s in sketches:
+                carry = est.stream_update(carry, s, cov_path=cov_path)
+            return carry, jnp.zeros((), jnp.int32)
+    elif kind == "range":
+        def fold(carry, aux, sketches):
+            for s in sketches:
+                carry = lowrank_mod.range_update(carry, s, aux, impl=plan.impl)
+            return carry, jnp.zeros((), jnp.int32)
+    elif kind == "fd":
+        def fold(carry, aux, sketches):
+            for s in sketches:
+                carry = lowrank_mod.fd_update(carry, s)
+            return carry, jnp.zeros((), jnp.int32)
+    elif kind == "kmeans":
+        track, decay = desc[1], desc[2]
+
+        def fold(carry, aux, sketches):
+            if track:
+                pairs = [acc.kmeans_delta_with_assign(carry, s) for s in sketches]
+                new = acc.kmeans_apply(carry, _tree_sum([d for d, _ in pairs]),
+                                       decay=decay)
+                counts = _tree_sum([acc.kmeans_reassigned(new, s, a0)
+                                    for s, (_, a0) in zip(sketches, pairs)])
+                return new, counts
+            new = acc.kmeans_apply(
+                carry, _tree_sum([acc.kmeans_delta(carry, s) for s in sketches]),
+                decay=decay)
+            return new, jnp.zeros((), jnp.int32)
+    else:  # pragma: no cover - descriptors come from _scan_desc
+        raise ValueError(f"unknown scan descriptor {desc!r}")
+    return fold
+
+
+@functools.lru_cache(maxsize=None)
+def _build_scan_fn(plan: Plan, p: int, m: int, transform: str, impl: str,
+                   descs: tuple):
+    """The jitted scan over full (step × n_shards) blocks, cached on the
+    static description so repeated fit_many calls (and benchmark loops) reuse
+    one compilation per shape."""
+    n_shards = plan.n_shards
+    folds = tuple(_scan_step_fold(d, plan) for d in descs)
+
+    @jax.jit
+    def scan_all(carries, auxes, xs, step0, signs_key, mask_key):
+        def body(carry, inp):
+            t, x_step = inp
+            step = step0 + t
+            sketches = [
+                sketch_mod._sketch_impl(
+                    x_step[sh], signs_key,
+                    jax.random.fold_in(jax.random.fold_in(mask_key, step), sh),
+                    p, m, transform, impl)
+                for sh in range(n_shards)
+            ]
+            new, ys = [], []
+            for c, aux, fold in zip(carry, auxes, folds):
+                nc, y = fold(c, aux, sketches)
+                new.append(nc)
+                ys.append(y)
+            return tuple(new), tuple(ys)
+
+        steps = xs.shape[0]
+        return jax.lax.scan(body, carries,
+                            (jnp.arange(steps, dtype=jnp.int32), xs))
+
+    return scan_all
+
+
 # ------------------------------------------------------------ the cursor ----
 
 
@@ -248,6 +356,8 @@ class SketchCursor:
         self.n_sketches = 0      # sketch_mod.sketch invocations (one per chunk)
         self.last_sketch: SparseRows | None = None
         self.consumers: list["SketchedEstimator"] = []
+        self.scan = False        # opt-in lax.scan hot loop for partial_fit
+        self._scan_out = None    # last scan's carries — the sync() barrier
 
     def register(self, consumer: "SketchedEstimator") -> None:
         self.consumers.append(consumer)
@@ -288,16 +398,71 @@ class SketchCursor:
             raise ValueError(f"expected (rows, p) data, got shape {x.shape}")
         x = x.astype(self.plan.dtype)
         self.ensure_spec(x.shape[1])
+        start = self._fold_rows_scanned(x) if self.scan else 0
         bs = self.plan.batch_size
-        for i in range(0, x.shape[0], bs):
+        for i in range(start, x.shape[0], bs):
             self.fold_rows(x[i:i + bs])
+
+    def scan_descs(self) -> tuple | None:
+        """The consumers' in-scan fold descriptors, or None if any consumer
+        cannot fold inside lax.scan (see SketchedEstimator._scan_desc)."""
+        descs = tuple(c._scan_desc() for c in self.consumers)
+        if not descs or any(d is None for d in descs):
+            return None
+        return descs
+
+    def _fold_rows_scanned(self, x) -> int:
+        """Fold the step-aligned full-step prefix of ``x`` through ONE jitted
+        lax.scan (see _build_scan_fn) and return the rows consumed; the
+        ordinary host loop takes the ragged tail. A cursor mid-step
+        (chunk % n_shards != 0) folds everything on the host instead — the
+        scan only ever starts at a step boundary so mask keys stay aligned."""
+        plan, spec = self.plan, self.spec
+        ns, bs = plan.n_shards, plan.batch_size
+        if self.chunk % ns:
+            return 0
+        steps = x.shape[0] // (bs * ns)
+        if steps == 0:
+            return 0
+        descs = self.scan_descs()
+        if descs is None:
+            raise ValueError(
+                "scan=True but a registered consumer cannot fold inside "
+                "lax.scan: batch-backend moment estimators and Lloyd K-means "
+                "retain their sketches, and the sharded backend reduces "
+                "through shard_map collectives — use the default host loop "
+                "(scan=False) for those, or switch to stream/minibatch/"
+                "lowrank folds")
+        take = steps * ns * bs
+        xs = x[:take].reshape(steps, ns, bs, x.shape[1])
+        step0 = self.chunk // ns
+        for c in self.consumers:
+            c._scan_prepare(self, xs, step0)
+        scan_fn = _build_scan_fn(plan, spec.p, spec.m, spec.transform,
+                                 ros.resolve_impl(plan.impl), descs)
+        carries = tuple(c._scan_carry() for c in self.consumers)
+        auxes = tuple(c._scan_aux() for c in self.consumers)
+        new_carries, ys = scan_fn(carries, auxes, xs, jnp.int32(step0),
+                                  spec.signs_key(), spec.mask_key())
+        for c, nc, y in zip(self.consumers, new_carries, ys):
+            c._scan_absorb(nc, y, steps, ns * bs)
+        self.chunk += steps * ns
+        self.count += take
+        self.chunk_rows.extend([bs] * (steps * ns))
+        self.n_sketches += steps * ns
+        self.last_sketch = None  # the scan never materializes its sketches
+        self._scan_out = new_carries
+        return take
 
     def sync(self) -> None:
         """Block until the last folded chunk's sketch is materialized — the
         public ingest barrier (benchmarks time ingest against this, not
-        against private reducer state)."""
+        against private reducer state). After a scanned fold the barrier is
+        the scan's output carries (no per-chunk sketch ever materializes)."""
         if self.last_sketch is not None:
             jax.block_until_ready((self.last_sketch.values, self.last_sketch.indices))
+        if self._scan_out is not None:
+            jax.block_until_ready(self._scan_out)
 
     def fold_source(self, source, steps: int, seed: int | None = None) -> None:
         """One pass over a normalized ``(seed, step, shard) → (b, p)`` source
@@ -387,6 +552,46 @@ class SketchedEstimator:
     def _fold_sketch(self, s: SparseRows, step: int, shard: int) -> None:
         self._reducer.fold(s, step, shard)
 
+    # ------------------------------------------------------- scanned ingest --
+    # Hooks for the cursor's opt-in lax.scan hot loop (cursor.scan = True /
+    # fit_many(scan=True)). _scan_desc names the in-scan fold (a hashable
+    # key into _scan_step_fold) or returns None when this consumer's fold
+    # cannot run inside a scan; carry/aux/absorb move the fold state across
+    # the jit boundary.
+
+    def _scan_desc(self) -> tuple | None:
+        plan = self.plan
+        if self._keep_sketch:
+            return None  # retained sketches can't stream through a scan
+        if plan.cov_path == "lowrank" and self._track_cov and self._needs_moments:
+            if plan.lowrank_method == "fd":
+                return ("fd",)
+            # range on sharded reduces through shard_map psums — host only
+            return None if plan.backend == "sharded" else ("range",)
+        if not self._needs_moments:
+            return None
+        if plan.backend != "stream":
+            # batch retains the sketch; sharded reduces via shard_map
+            return None
+        # mean-only folds under cov_path="lowrank" still use the dense delta
+        # (mirrors _MomentReducer._moment_cov_path)
+        return ("moment", "dense" if plan.cov_path == "lowrank" else plan.cov_path)
+
+    def _scan_prepare(self, cursor: "SketchCursor", xs, step0: int) -> None:
+        """Called before the scan launches with the staged (steps, n_shards,
+        batch_size, p) block — subclasses that lazily init from a first
+        sketch do so here (on the host, outside the scan)."""
+
+    def _scan_carry(self):
+        return self._reducer.state
+
+    def _scan_aux(self):
+        return self._reducer._omega
+
+    def _scan_absorb(self, carry, ys, steps: int, rows_per_step: int) -> None:
+        self._reducer.state = carry
+        self.count_ += steps * rows_per_step
+
     def fit(self, x) -> "SketchedEstimator":
         self.reset()
         self.partial_fit(x)
@@ -453,6 +658,7 @@ class SketchedEstimator:
         if not self._fitted:
             raise RuntimeError("refine() replays a fitted estimator — call "
                                "fit()/fit_stream() first, or use fit_refine()")
+        chunk_rows = None
         if x is not None:
             n = int(jnp.asarray(x).shape[0])
             if n != self.count_:
@@ -460,19 +666,11 @@ class SketchedEstimator:
                     f"refine(x) got {n} rows but the fitted pass folded "
                     f"{self.count_}; the replay must regenerate the SAME "
                     "chunks — pass the array fit() consumed")
-            # an array replay re-chunks in uniform batch_size pieces; a first
-            # pass fed through ragged partial_fit calls has chunk boundaries
-            # (hence (step, shard) mask keys) that chunking cannot reproduce
-            bs = self.plan.batch_size
-            uniform = [min(bs, n - i) for i in range(0, n, bs)]
-            if self._cursor.chunk_rows != uniform:
-                raise ValueError(
-                    "the fitted pass was fed through partial_fit calls whose "
-                    f"chunk boundaries {self._cursor.chunk_rows} differ from "
-                    f"the uniform batch_size={bs} chunking an array replay "
-                    "regenerates; refine() would fold DIFFERENT (step, shard) "
-                    "masks — refit with fit(x) (or batch_size-aligned "
-                    "partial_fit calls) before refining")
+            # an array replay must regenerate the SAME chunk boundaries (hence
+            # (step, shard) mask keys) the fitted pass folded — the cursor's
+            # recorded chunk_rows, which cover ragged partial_fit histories
+            # that uniform batch_size re-chunking could not reproduce
+            chunk_rows = list(self._cursor.chunk_rows)
         src = None
         if source is not None:
             from repro.stream.engine import normalize_source
@@ -480,7 +678,7 @@ class SketchedEstimator:
             src = normalize_source(source)
         refine_mod.run_refine(self.plan, self.spec_, [self],
                               self._resolve_passes(passes), data=x, source=src,
-                              steps=steps, seed=seed)
+                              steps=steps, seed=seed, chunk_rows=chunk_rows)
         return self
 
     def fit_refine(self, x=None, passes: int | None = None, *, source=None,
@@ -819,6 +1017,41 @@ class SparsifiedKMeans(SketchedEstimator):
                 rows += s.n
             self._reassign_history.append((np.asarray(counts), rows))
         self._km_step_sketches = []
+
+    # ------------------------------------------------------- scanned ingest --
+
+    def _scan_desc(self) -> tuple | None:
+        if self.algorithm != "minibatch":
+            return None  # lloyd retains the sketch — host loop only
+        # the minibatch fold is backend-independent (per-step deltas against
+        # the step-start state), so every backend scans
+        return ("kmeans", self.track_reassignments, self.decay)
+
+    def _scan_prepare(self, cursor: "SketchCursor", xs, step0: int) -> None:
+        if self._km_state is None:
+            # host-sketch chunk (step0, shard 0) once for the data-dependent
+            # init — the scan re-sketches it identically (same mask key)
+            spec = cursor.spec
+            s0 = sketch_mod.sketch(xs[0, 0], spec,
+                                   batch_key=batch_key(spec, step0, 0),
+                                   impl=self.plan.impl)
+            self._km_state = acc.kmeans_init(
+                fold_in_str(spec.key, "api-kmeans"), s0, self.k, self.n_init,
+                decay=self.decay)
+
+    def _scan_carry(self):
+        return self._km_state
+
+    def _scan_aux(self):
+        return None
+
+    def _scan_absorb(self, carry, ys, steps: int, rows_per_step: int) -> None:
+        self._km_state = carry
+        self.count_ += steps * rows_per_step
+        if self.track_reassignments:
+            counts = np.asarray(ys)  # (steps, n_init)
+            for t in range(steps):
+                self._reassign_history.append((counts[t], rows_per_step))
 
     # ----------------------------------------------------------- finalize ---
 

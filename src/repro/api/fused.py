@@ -118,7 +118,8 @@ def _check_consumer(plan: Plan, c: SketchedEstimator, i: int, key0) -> None:
 
 def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
              source=None, steps: int | None = None, seed: int | None = None,
-             finalize: bool = True, refine: bool | int = False) -> SharedSketchRun:
+             finalize: bool = True, refine: bool | int = False,
+             scan: bool = False) -> SharedSketchRun:
     """Fit every consumer from ONE ``source → sketch → fan-out`` pass.
 
     Parameters
@@ -146,6 +147,15 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
         it out to all refiners — the shared-cursor discipline applied to
         refinement, so one shared-sketch run feeds both refiners. Requires
         ``finalize=True`` (refinement replays a finalized first pass).
+    scan: drive in-memory ingest through ONE jitted ``lax.scan`` over full
+        (step × n_shards) blocks instead of the per-chunk host loop (mirrors
+        ``StreamEngine.run_scanned``) — same sketches, same fold order, results
+        match the host loop to float-summation reordering (which is why it is
+        opt-in rather than the default). Requires ``data`` (a source pull is
+        host-driven by nature) and consumers whose folds run inside a scan:
+        stream-backend moments, lowrank PCA (non-sharded range / any-backend
+        fd), and minibatch K-means; batch moments, Lloyd K-means, and sharded
+        shard_map reductions raise.
 
     Returns the :class:`SharedSketchRun`; the fitted attributes live on the
     consumer objects themselves, identical (≤1e-5) to what separate ``fit``
@@ -183,6 +193,17 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
         c.reset()
         c._cursor = cursor      # adopt the shared pass (reset() detaches again)
         cursor.register(c)
+    if scan:
+        if data is None:
+            raise ValueError("scan=True stages in-memory data for lax.scan; "
+                             "source= ingest is host-driven — drop scan=True")
+        if cursor.scan_descs() is None:
+            raise ValueError(
+                "scan=True but a consumer cannot fold inside lax.scan "
+                "(batch-backend moments, Lloyd K-means, and sharded shard_map "
+                "reductions are host-loop only); drop scan=True or switch "
+                "those consumers to stream/minibatch/lowrank folds")
+        cursor.scan = True
 
     src = None
     if data is not None:
@@ -200,5 +221,7 @@ def fit_many(plan: Plan, consumers: Sequence[SketchedEstimator], data=None, *,
     if refiners:
         passes = (plan.refine_passes or 1) if refine is True else int(refine)
         refine_mod.run_refine(plan, cursor.spec, refiners, passes, data=data,
-                              source=src, steps=steps, seed=seed)
+                              source=src, steps=steps, seed=seed,
+                              chunk_rows=(list(cursor.chunk_rows)
+                                          if data is not None else None))
     return run

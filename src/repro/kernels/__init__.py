@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 - fwht:          fused ROS preconditioning y = H(d⊙x) — Kronecker MXU form
+- sketch_fused:  the FULL compression operator (precondition → sample) in one
+                 VMEM round trip — the streaming-ingest fast path
 - sparse_assign: sparsified K-means assignment on compact sparse rows
 - spmm:          sparse-times-dense pair (W·Omega and Wᵀ·T) feeding the
-                 low-rank spectral accumulators without densifying the batch
+                 low-rank spectral accumulators without densifying the batch;
+                 p-tiled so the VMEM footprint is bounded at any p
 - ops:           public wrappers (backend auto-selection)
 - ref:           pure-jnp oracles used for validation
 """
-from repro.kernels import fwht, ops, ref, sparse_assign, spmm  # noqa: F401
+from repro.kernels import fwht, ops, ref, sketch_fused, sparse_assign, spmm  # noqa: F401

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import fwht as _fwht
 from repro.kernels import ref as _ref
+from repro.kernels import sketch_fused as _sf
 from repro.kernels import sparse_assign as _sa
 from repro.kernels import spmm as _spmm
 
@@ -41,20 +42,26 @@ def sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array, mod
     return _sa.sparse_assign(values, indices, centers, interpret=(mode == "interpret"))
 
 
-# the spmm kernels hold the full (p, l) operand/output block + a (block_rows, p)
-# densify scratch in VMEM with no p-tiling yet (ROADMAP); past this budget the
-# compiled kernel cannot fit, so "auto"/"kernel" fall back to the jnp path
-# (which XLA still runs on-device) instead of failing to compile.
-_SPMM_VMEM_BUDGET = 12 << 20
+# The spmm kernels tile BOTH grid axes (row blocks × column blocks —
+# kernels/spmm.py), so their VMEM footprint is bounded by plan_tiles against
+# this budget at ANY p: the old "fall back to jnp past ~2^15" ceiling is gone.
+# The budget is defined once in kernels/spmm.py (the tile planner's input) and
+# re-exported here so the dispatch gate and the planner can never disagree;
+# "kernel" only demotes to "ref" in the pathological corner where even the
+# minimum (8, 256) tile exceeds it (an extremely wide l).
+_SPMM_VMEM_BUDGET = _spmm.SPMM_VMEM_BUDGET
 
 
-def _sparse_mode(mode: str, p: int, ell: int) -> str:
+def _sparse_mode(mode: str, p: int, ell: int,
+                 value_dtype=jnp.float32, dense_dtype=jnp.float32) -> str:
     """Normalize a backend name to this module's vocabulary.
 
     Call sites forward ``Plan.impl`` / ``StreamEngine.impl`` here verbatim, and
     that knob speaks the Hadamard vocabulary where the jnp reference is spelled
     "jnp" — map it (and any other non-kernel spelling) to "ref" rather than
-    falling through to a Pallas compile that CPU hosts reject.
+    falling through to a Pallas compile that CPU hosts reject. The VMEM check
+    uses the ONE tile model (spmm.plan_tiles / tile_vmem_bytes) at the actual
+    operand dtypes — no second, disagreeing footprint estimate lives here.
     """
     if mode == "auto":
         mode = "kernel" if _on_tpu() else "ref"
@@ -62,14 +69,15 @@ def _sparse_mode(mode: str, p: int, ell: int) -> str:
         return "ref"
     if mode == "interpret":  # host interpreter: no VMEM constraint to respect
         return mode
-    vmem = (p * ell + _spmm.default_block_rows(p) * p) * 4
+    br, pb = _spmm.plan_tiles(p, ell, value_dtype, dense_dtype)
+    vmem = _spmm.tile_vmem_bytes(p, ell, value_dtype, dense_dtype, br, pb)
     return "kernel" if vmem <= _SPMM_VMEM_BUDGET else "ref"
 
 
 def spmm(values: jax.Array, indices: jax.Array, dense: jax.Array,
          mode: str = "auto") -> jax.Array:
     """T (n, l) = W @ dense for compact sparse rows (the low-rank projection)."""
-    mode = _sparse_mode(mode, *dense.shape)
+    mode = _sparse_mode(mode, *dense.shape, values.dtype, dense.dtype)
     if mode == "ref":
         return _ref.ref_spmm(values, indices, dense)
     return _spmm.spmm(values, indices, dense, interpret=(mode == "interpret"))
@@ -78,10 +86,30 @@ def spmm(values: jax.Array, indices: jax.Array, dense: jax.Array,
 def spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int,
            mode: str = "auto") -> jax.Array:
     """Y (p, l) = Wᵀ @ t — scatter sparse rows into the l-dim sketch."""
-    mode = _sparse_mode(mode, p, t.shape[1])
+    mode = _sparse_mode(mode, p, t.shape[1], values.dtype, t.dtype)
     if mode == "ref":
         return _ref.ref_spmm_t(values, indices, t, p)
     return _spmm.spmm_t(values, indices, t, p, interpret=(mode == "interpret"))
+
+
+def sketch_fused(x: jax.Array, signs: jax.Array, indices: jax.Array,
+                 mode: str = "auto") -> jax.Array:
+    """values (n, m) = (H·(signs⊙x))[i, indices[i]] — the full compression
+    operator's value pass in one VMEM round trip (kernels.sketch_fused).
+
+    Above the fused kernel's single-tile ceiling (p > 2^15) the kernel modes
+    compose the chunked FWHT with an XLA gather — still the kernel FWHT path,
+    just not single-pass.
+    """
+    if mode == "auto":
+        mode = "kernel" if _on_tpu() else "ref"
+    if mode in ("kernel", "interpret"):
+        if x.shape[-1] <= _sf.MAX_P_FUSED:
+            return _sf.sketch_fused(x, signs, indices,
+                                    interpret=(mode == "interpret"))
+        y = _fwht.hd_precondition(x, signs, interpret=(mode == "interpret"))
+        return jnp.take_along_axis(y, indices, axis=-1)
+    return _ref.ref_sketch_fused(x, signs, indices)
 
 
 def kernel_assign_fn(mode: str = "auto"):

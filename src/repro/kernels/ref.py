@@ -30,17 +30,30 @@ def ref_sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array)
     return d, jnp.argmin(d, axis=1).astype(jnp.int32)
 
 
+def _spmm_out_dtype(a, b) -> jnp.dtype:
+    """The shared spmm promotion rule: operands promote jointly, accumulation
+    and output are at least f32 (kernels.spmm.promoted_dtypes agrees)."""
+    return jnp.promote_types(jnp.promote_types(a, b), jnp.float32)
+
+
 def ref_spmm(values: jax.Array, indices: jax.Array, dense: jax.Array) -> jax.Array:
     """T (n, l) = W @ dense — oracle for kernels.spmm.spmm.
 
     values/indices (n, m) compact sparse rows over p columns; dense (p, l).
     """
-    v = values.astype(jnp.float32)
-    return jnp.einsum("nm,nml->nl", v, dense.astype(jnp.float32)[indices])
+    out = _spmm_out_dtype(values.dtype, dense.dtype)
+    return jnp.einsum("nm,nml->nl", values.astype(out), dense.astype(out)[indices])
 
 
 def ref_spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int) -> jax.Array:
     """Y (p, l) = Wᵀ @ t — oracle for kernels.spmm.spmm_t (scatter-add rows)."""
-    contrib = values.astype(jnp.float32)[..., None] * t.astype(jnp.float32)[:, None, :]
-    return jnp.zeros((p, t.shape[1]), jnp.float32).at[
+    out = _spmm_out_dtype(values.dtype, t.dtype)
+    contrib = values.astype(out)[..., None] * t.astype(out)[:, None, :]
+    return jnp.zeros((p, t.shape[1]), out).at[
         indices.reshape(-1)].add(contrib.reshape(-1, t.shape[1]))
+
+
+def ref_sketch_fused(x: jax.Array, signs: jax.Array, indices: jax.Array) -> jax.Array:
+    """values (n, m) = (H·(signs⊙x))[i, indices[i]] — oracle for
+    kernels.sketch_fused (the composed precondition → gather it fuses away)."""
+    return jnp.take_along_axis(ref_hd_precondition(x, signs), indices, axis=-1)

@@ -20,7 +20,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.ros import hadamard_matrix
-from repro.kernels.fwht import default_block_rows, factor_p
+from repro.kernels.fwht import MAX_P_SINGLE, default_block_rows, factor_p
+
+# The fused kernel holds a whole (block_rows, p) preconditioned tile in VMEM,
+# so it shares the single-tile FWHT ceiling; above it, kernels.ops composes
+# the chunked FWHT with an XLA gather instead.
+MAX_P_FUSED = MAX_P_SINGLE
 
 
 def _kernel(x_ref, d_ref, ha_ref, hb_ref, idx_ref, out_ref, *, a: int, b: int, m: int):
@@ -52,10 +57,16 @@ def sketch_fused(x: jax.Array, signs: jax.Array, indices: jax.Array,
                  block_rows: int | None = None, interpret: bool = False) -> jax.Array:
     """values (n, m) = (H·(signs⊙x))[i, indices[i]] — fused precondition+sample.
 
-    x (n, p) with p a power of two; indices (n, m) int32 (sorted, distinct).
+    x (n, p) with p a power of two ≤ MAX_P_FUSED; indices (n, m) int32
+    (sorted, distinct). Dispatch through kernels.ops.sketch_fused to get the
+    composed chunked-FWHT + gather fallback above the ceiling.
     """
     n, p = x.shape
     m = indices.shape[1]
+    if p > MAX_P_FUSED:
+        raise ValueError(
+            f"p={p} exceeds the fused kernel's single-tile ceiling "
+            f"{MAX_P_FUSED}; use kernels.ops.sketch_fused (composed fallback)")
     a, b = factor_p(p)
     br = block_rows or default_block_rows(p, x.dtype)
     n_pad = -n % br

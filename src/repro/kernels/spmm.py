@@ -11,12 +11,22 @@ Together they realize the low-rank co-occurrence delta Wᵀ(W·Omega) = S·Omega
 co-occurrence matrix S — the only dense objects are (n, l) and (p, l).
 
 TPU adaptation: like sparse_assign, the irregular gather Omega[indices] has no
-fast MXU form, so each row block is densified into a (block_rows, p) VMEM
-scratch (a rolled scalar-store loop — the _scatter_outer pattern moved into
-VMEM) and both products become dense MXU matmuls against the narrow (p, l)
-operand. For spmm_t the (p, l) output block is revisited by every grid step:
-zero-initialized at step 0, accumulated thereafter (the standard reduction
-grid pattern), so the kernel's HBM writes stay O(p·l) regardless of n.
+fast MXU form, so each row block is densified into VMEM scratch (a rolled
+scalar-store loop — the _scatter_outer pattern moved into VMEM) and both
+products become dense MXU matmuls against the narrow operand.
+
+The p axis is TILED: the grid carries a second dimension over column blocks of
+``block_cols`` columns, the densify scratch is (block_rows, block_cols), and
+each step sees only a (block_cols, l) slice of the dense operand — so the VMEM
+footprint is bounded by :func:`plan_tiles` against :data:`SPMM_VMEM_BUDGET`
+regardless of p (no more p ≲ 2^15 ceiling). Stores into the scratch are MASKED
+(load-select-store) because a block only owns indices in [col0, col0+block_cols).
+For ``spmm`` the column blocks are the inner (fastest) grid axis, so each
+(block_rows, l) output block stays resident while its partial products
+accumulate; for ``spmm_t`` the ROW blocks are the inner axis and the (block_cols,
+l) output block is the one revisited — zero-initialized at the first reduction
+index, accumulated thereafter (the standard reduction-grid pattern), so HBM
+writes stay O(p·l) regardless of n.
 """
 from __future__ import annotations
 
@@ -24,50 +34,116 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def default_block_rows(p: int, dtype=jnp.float32, vmem_budget: int = 8 << 20) -> int:
-    """Row-block size so the (block_rows, p) densify scratch fits the budget."""
-    bytes_per_row = p * jnp.dtype(dtype).itemsize
-    br = max(8, vmem_budget // max(1, bytes_per_row))
-    return int(min(128, 1 << int(np.floor(np.log2(br)))))
+# THE spmm VMEM model: tiles are planned against this budget (plan_tiles), and
+# kernels/ops.py imports it for its dispatch gate — one number, one model.
+SPMM_VMEM_BUDGET = 12 << 20
 
 
-def _densify(vals_ref, idx_ref, w_ref, bn: int, m: int):
-    """Scatter the block's sparse rows into the (bn, p) VMEM scratch."""
+def promoted_dtypes(value_dtype, dense_dtype) -> tuple[jnp.dtype, jnp.dtype]:
+    """(operand, accumulator/output) dtypes — the kernels' promotion rule.
+
+    Operands promote jointly (bf16·bf16 stays bf16 into the MXU, mixed
+    bf16/f32 runs in f32, f64 stays f64); accumulation and the output are at
+    least f32 — the same promote_types ladder the ref.py oracles follow, so
+    kernel and oracle agree on output dtype for every input combination.
+    """
+    op = jnp.promote_types(value_dtype, dense_dtype)
+    return op, jnp.promote_types(op, jnp.float32)
+
+
+def tile_vmem_bytes(p: int, ell: int, value_dtype=jnp.float32,
+                    dense_dtype=jnp.float32, block_rows: int = 128,
+                    block_cols: int | None = None) -> int:
+    """Per-grid-step VMEM footprint of the tiled schedule (dominant terms).
+
+    Counts the (block_cols, l) dense operand tile, the (block_rows,
+    block_cols) densify scratch, and the resident output/input row tiles of
+    both kernels — all at the ACTUAL promoted dtypes.
+    """
+    op, out = promoted_dtypes(value_dtype, dense_dtype)
+    osz, outsz = jnp.dtype(op).itemsize, jnp.dtype(out).itemsize
+    pb = min(block_cols or p, p) if block_cols else p
+    return (pb * ell * osz                      # dense / t operand tile
+            + block_rows * pb * osz             # densify scratch
+            + (block_rows + pb) * ell * outsz)  # out tiles of spmm + spmm_t
+
+
+def plan_tiles(p: int, ell: int, value_dtype=jnp.float32,
+               dense_dtype=jnp.float32,
+               vmem_budget: int = SPMM_VMEM_BUDGET) -> tuple[int, int]:
+    """(block_rows, block_cols) so the tiled schedule fits ``vmem_budget``.
+
+    Prefers wide column blocks (fewer densify passes over the sparse rows,
+    fewer operand re-reads) and tall row blocks, shrinking column blocks
+    first, then rows, both by powers of two down to (8, 256).
+    """
+    pow2_p = 1 << max(0, (p - 1).bit_length())
+    br, pb = 128, min(pow2_p, 1 << 15)
+
+    def fits(br_, pb_):
+        return tile_vmem_bytes(p, ell, value_dtype, dense_dtype, br_, pb_) <= vmem_budget
+
+    while pb > 256 and not fits(br, pb):
+        pb //= 2
+    while br > 8 and not fits(br, pb):
+        br //= 2
+    return br, pb
+
+
+def _densify(vals_ref, idx_ref, w_ref, *, bn: int, m: int, col0):
+    """Masked scatter of the block's sparse rows into the (bn, pb) scratch.
+
+    Only indices in [col0, col0 + pb) land; out-of-block entries must not
+    clobber, so the store is load-select-store (a clamped blind store could
+    overwrite an in-block value already scattered at the clamp target).
+    """
     w_ref[...] = jnp.zeros_like(w_ref)
+    pb = w_ref.shape[1]
 
     def body(t, _):
         i = t // m
         j = t % m
-        col = idx_ref[i, j]
-        v = vals_ref[i, j]
-        pl.store(w_ref, (i, pl.dslice(col, 1)), jnp.full((1,), v, w_ref.dtype))
+        local = idx_ref[i, j] - col0
+        inside = (local >= 0) & (local < pb)
+        slot = jnp.where(inside, local, 0)
+        cur = pl.load(w_ref, (i, pl.dslice(slot, 1)))
+        v = jnp.full((1,), vals_ref[i, j], w_ref.dtype)
+        pl.store(w_ref, (i, pl.dslice(slot, 1)), jnp.where(inside, v, cur))
         return 0
 
     jax.lax.fori_loop(0, bn * m, body, 0)
 
 
-def _spmm_kernel(vals_ref, idx_ref, dense_ref, out_ref, w_ref, *, bn: int, m: int):
-    _densify(vals_ref, idx_ref, w_ref, bn, m)
-    out_ref[...] = jax.lax.dot(
-        w_ref[...], dense_ref[...], preferred_element_type=jnp.float32
-    ).astype(out_ref.dtype)
+def _spmm_kernel(vals_ref, idx_ref, dense_ref, out_ref, w_ref, *,
+                 bn: int, m: int, pb: int, acc_dtype):
+    j = pl.program_id(1)  # column-block (reduction) axis — innermost
 
-
-def _spmm_t_kernel(vals_ref, idx_ref, t_ref, out_ref, w_ref, *, bn: int, m: int):
-    @pl.when(pl.program_id(0) == 0)
+    @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    _densify(vals_ref, idx_ref, w_ref, bn, m)
+    _densify(vals_ref, idx_ref, w_ref, bn=bn, m=m, col0=j * pb)
+    out_ref[...] += jax.lax.dot(
+        w_ref[...], dense_ref[...], preferred_element_type=acc_dtype
+    ).astype(out_ref.dtype)
+
+
+def _spmm_t_kernel(vals_ref, idx_ref, t_ref, out_ref, w_ref, *,
+                   bn: int, m: int, pb: int, acc_dtype):
+    i = pl.program_id(1)  # row-block (reduction) axis — innermost
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    _densify(vals_ref, idx_ref, w_ref, bn=bn, m=m, col0=pl.program_id(0) * pb)
     # Wᵀ @ T as a dot_general contracting the row axis — no explicit transpose
     acc = jax.lax.dot_general(
         w_ref[...], t_ref[...], (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=acc_dtype)
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
@@ -82,53 +158,75 @@ def _pad_rows(values, indices, extra, br):
     return values, indices, extra, n_pad
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
 def spmm(values: jax.Array, indices: jax.Array, dense: jax.Array,
-         block_rows: int | None = None, interpret: bool = False) -> jax.Array:
-    """T (n, l) = W @ dense for compact sparse rows W and dense (p, l)."""
+         block_rows: int | None = None, block_cols: int | None = None,
+         interpret: bool = False) -> jax.Array:
+    """T (n, l) = W @ dense for compact sparse rows W and dense (p, l).
+
+    Padded rows (zero values, index 0) only ever write zeros into column
+    block 0, so ragged row blocks are exact; zero-padded dense rows past p
+    are never gathered (indices < p).
+    """
     n, m = values.shape
     p, ell = dense.shape
-    br = block_rows or default_block_rows(p, values.dtype)
+    op_dt, out_dt = promoted_dtypes(values.dtype, dense.dtype)
+    br0, pb0 = plan_tiles(p, ell, values.dtype, dense.dtype)
+    br = block_rows or br0
+    pb = block_cols or pb0
     values, indices, _, n_pad = _pad_rows(values, indices, None, br)
+    pc = -p % pb
+    dense = dense.astype(op_dt)
+    if pc:
+        dense = jnp.pad(dense, ((0, pc), (0, 0)))
 
     out = pl.pallas_call(
-        functools.partial(_spmm_kernel, bn=br, m=m),
-        grid=((n + n_pad) // br,),
+        functools.partial(_spmm_kernel, bn=br, m=m, pb=pb, acc_dtype=out_dt),
+        grid=((n + n_pad) // br, (p + pc) // pb),
         in_specs=[
-            pl.BlockSpec((br, m), lambda i: (i, 0)),
-            pl.BlockSpec((br, m), lambda i: (i, 0)),
-            pl.BlockSpec((p, ell), lambda i: (0, 0)),
+            pl.BlockSpec((br, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((pb, ell), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((br, ell), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n + n_pad, ell), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((br, p), values.dtype)],
+        out_specs=pl.BlockSpec((br, ell), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, ell), out_dt),
+        scratch_shapes=[pltpu.VMEM((br, pb), op_dt)],
         interpret=interpret,
-    )(values, indices, dense.astype(values.dtype))
+    )(values, indices, dense)
     return out[:n] if n_pad else out
 
 
-@functools.partial(jax.jit, static_argnames=("p", "block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("p", "block_rows", "block_cols", "interpret"))
 def spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int,
-           block_rows: int | None = None, interpret: bool = False) -> jax.Array:
+           block_rows: int | None = None, block_cols: int | None = None,
+           interpret: bool = False) -> jax.Array:
     """Y (p, l) = Wᵀ @ t for compact sparse rows W (n over p columns), t (n, l).
 
-    Zero-padded rows contribute nothing, so ragged blocks are exact.
+    Zero-padded rows contribute nothing, so ragged blocks are exact. Column
+    blocks are the OUTER grid axis here (the output is indexed by them), so
+    the compact rows are re-read once per column block — n·m·(p/block_cols)
+    sparse traffic against O(p·l) output writes.
     """
     n, m = values.shape
     ell = t.shape[1]
-    br = block_rows or default_block_rows(p, values.dtype)
+    op_dt, out_dt = promoted_dtypes(values.dtype, t.dtype)
+    br0, pb0 = plan_tiles(p, ell, values.dtype, t.dtype)
+    br = block_rows or br0
+    pb = block_cols or pb0
     values, indices, t, n_pad = _pad_rows(values, indices, t, br)
+    pc = -p % pb
 
-    return pl.pallas_call(
-        functools.partial(_spmm_t_kernel, bn=br, m=m),
-        grid=((n + n_pad) // br,),
+    out = pl.pallas_call(
+        functools.partial(_spmm_t_kernel, bn=br, m=m, pb=pb, acc_dtype=out_dt),
+        grid=((p + pc) // pb, (n + n_pad) // br),
         in_specs=[
-            pl.BlockSpec((br, m), lambda i: (i, 0)),
-            pl.BlockSpec((br, m), lambda i: (i, 0)),
-            pl.BlockSpec((br, ell), lambda i: (i, 0)),
+            pl.BlockSpec((br, m), lambda j, i: (i, 0)),
+            pl.BlockSpec((br, m), lambda j, i: (i, 0)),
+            pl.BlockSpec((br, ell), lambda j, i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((p, ell), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((p, ell), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((br, p), values.dtype)],
+        out_specs=pl.BlockSpec((pb, ell), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p + pc, ell), out_dt),
+        scratch_shapes=[pltpu.VMEM((br, pb), op_dt)],
         interpret=interpret,
-    )(values, indices, t.astype(values.dtype))
+    )(values, indices, t.astype(op_dt))
+    return out[:p] if pc else out

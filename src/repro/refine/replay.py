@@ -38,13 +38,16 @@ from repro.core.sketch import batch_key
 
 
 def replay_sketches(plan, spec: sketch_mod.SketchSpec, data=None, *, source=None,
-                    steps: int | None = None,
-                    seed: int | None = None) -> Iterator[tuple[SparseRows, int, int]]:
+                    steps: int | None = None, seed: int | None = None,
+                    chunk_rows: Sequence[int] | None = None,
+                    ) -> Iterator[tuple[SparseRows, int, int]]:
     """Yield ``(sketch, step, shard)`` regenerating a finished pass exactly.
 
-    ``data``: the SAME (rows, p) array the pass ingested — re-chunked in
-    consecutive ``plan.batch_size`` chunks, chunk j under the
-    ``plan.step_shard(j)`` mask key, exactly as ``SketchCursor`` chunked it.
+    ``data``: the SAME (rows, p) array the pass ingested — re-chunked into the
+    recorded ``chunk_rows`` boundaries (the cursor's per-chunk row counts, so
+    ragged partial_fit histories replay under exactly their original
+    (step, shard) mask keys), or in consecutive ``plan.batch_size`` chunks
+    when ``chunk_rows`` is None.
     ``source``: the pass's ``(seed, step, shard) → (b, p)`` source (already
     normalized by the caller), pulled for steps × n_shards batches.
     """
@@ -56,11 +59,21 @@ def replay_sketches(plan, spec: sketch_mod.SketchSpec, data=None, *, source=None
             raise ValueError(f"replay data has shape {x.shape}, but the fitted "
                              f"pass was p={spec.p}")
         bs = plan.batch_size
-        for j, i in enumerate(range(0, x.shape[0], bs)):
+        if chunk_rows is None:
+            n = int(x.shape[0])
+            chunk_rows = [min(bs, n - i) for i in range(0, n, bs)]
+        elif sum(chunk_rows) != x.shape[0]:
+            raise ValueError(
+                f"chunk_rows sums to {sum(chunk_rows)} but the replay data "
+                f"has {x.shape[0]} rows — pass the array the fitted pass "
+                "consumed")
+        i = 0
+        for j, rows in enumerate(chunk_rows):
             step, shard = plan.step_shard(j)
-            yield (sketch_mod.sketch(x[i:i + bs], spec,
+            yield (sketch_mod.sketch(x[i:i + rows], spec,
                                      batch_key=batch_key(spec, step, shard),
                                      impl=plan.impl), step, shard)
+            i += rows
     else:
         if steps is None:
             raise ValueError("source= replay needs steps=")
@@ -77,7 +90,8 @@ def replay_sketches(plan, spec: sketch_mod.SketchSpec, data=None, *, source=None
 
 def run_refine(plan, spec: sketch_mod.SketchSpec, refiners: Sequence, passes: int,
                data=None, *, source=None, steps: int | None = None,
-               seed: int | None = None) -> None:
+               seed: int | None = None,
+               chunk_rows: Sequence[int] | None = None) -> None:
     """Drive ``passes`` refinement passes over the regenerated sketch stream.
 
     Each pass regenerates every (step, shard) sketch ONCE and fans it out to
@@ -95,7 +109,8 @@ def run_refine(plan, spec: sketch_mod.SketchSpec, refiners: Sequence, passes: in
         for r in active:
             r._refine_pass_begin(f)
         for s, step, shard in replay_sketches(plan, spec, data, source=source,
-                                              steps=steps, seed=seed):
+                                              steps=steps, seed=seed,
+                                              chunk_rows=chunk_rows):
             for r in active:
                 r._refine_fold(s, step, shard)
         for r in active:

@@ -1,1 +1,1 @@
-from repro.roofline import analysis, hlo, hw  # noqa: F401
+from repro.roofline import analysis, hlo, hw, kernels  # noqa: F401

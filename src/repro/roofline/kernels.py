@@ -1,0 +1,133 @@
+"""Analytic roofline models for the Pallas kernels (TPU v5e constants, hw.py).
+
+One model per kernel, each reflecting the kernel's ACTUAL schedule — not a
+generic bytes-in-bytes-out guess. The spmm pair re-reads operands once per
+grid block exactly as the tiled BlockSpecs do (kernels/spmm.py plans the
+(block_rows, block_cols) tiles; the models call the same planner), the FWHT
+models the Kronecker (a + b) MAC count, and sketch_fused carries the fused
+vs composed HBM-traffic story the kernel exists for. benchmarks/kernel_bench.py
+divides measured throughput by these predictions to report the per-kernel
+roofline fraction into BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels import fwht as _fwht
+from repro.kernels import sketch_fused as _sf
+from repro.kernels import spmm as _spmm
+from repro.roofline import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoofline:
+    """Roofline prediction for one kernel invocation shape."""
+
+    name: str
+    n: int            # rows processed per invocation
+    hbm_bytes: int    # total HBM traffic under the kernel's tiling schedule
+    flops: int        # total floating-point ops (2 per MAC)
+
+    @property
+    def mem_us(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW * 1e6
+
+    @property
+    def compute_us(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16 * 1e6
+
+    @property
+    def us(self) -> float:
+        """Roofline time: max of the memory and compute legs."""
+        return max(self.mem_us, self.compute_us)
+
+    @property
+    def bound(self) -> str:
+        return "memory" if self.mem_us >= self.compute_us else "compute"
+
+    @property
+    def rows_per_sec(self) -> float:
+        return self.n / (self.us / 1e6)
+
+
+def _isz(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _pow2ceil(p: int) -> int:
+    return 1 << max(p - 1, 1).bit_length() if p & (p - 1) else p
+
+
+def spmm_roofline(n: int, m: int, p: int, ell: int,
+                  value_dtype=jnp.float32, dense_dtype=jnp.float32) -> KernelRoofline:
+    """T = W @ dense under the tiled (row_blocks × col_blocks) grid.
+
+    Sparse rows stream once ((n, m) values + int32 indices, resident across
+    the inner column-block axis); the (p, ell) dense operand is re-read once
+    per ROW block (each row block walks every column block); the (n, ell)
+    output block stays VMEM-resident over the reduction and writes once. The
+    densify trick buys dense MXU compute over the padded p: 2·n·p_pad·ell.
+    """
+    op_dt, out_dt = _spmm.promoted_dtypes(value_dtype, dense_dtype)
+    br, pb = _spmm.plan_tiles(p, ell, value_dtype, dense_dtype)
+    pp = -(-p // pb) * pb
+    row_blocks = -(-n // br)
+    hbm = (n * m * (_isz(value_dtype) + 4)
+           + row_blocks * pp * ell * _isz(op_dt)
+           + n * ell * _isz(out_dt))
+    return KernelRoofline("spmm", n, hbm, 2 * n * pp * ell)
+
+
+def spmm_t_roofline(n: int, m: int, p: int, ell: int,
+                    value_dtype=jnp.float32, t_dtype=jnp.float32) -> KernelRoofline:
+    """Y = Wᵀ @ t under the tiled (col_blocks × row_blocks) grid.
+
+    The (p_block, ell) output block is resident while the row-block axis
+    reduces, so the sparse rows AND the (n, ell) t operand are re-read once
+    per COLUMN block; the (p, ell) output writes once.
+    """
+    op_dt, out_dt = _spmm.promoted_dtypes(value_dtype, t_dtype)
+    br, pb = _spmm.plan_tiles(p, ell, value_dtype, t_dtype)
+    pp = -(-p // pb) * pb
+    col_blocks = pp // pb
+    hbm = (col_blocks * (n * m * (_isz(value_dtype) + 4)
+                         + n * ell * _isz(op_dt))
+           + pp * ell * _isz(out_dt))
+    return KernelRoofline("spmm_t", n, hbm, 2 * n * pp * ell)
+
+
+def fwht_roofline(n: int, p: int, dtype=jnp.float32) -> KernelRoofline:
+    """y = H(d⊙x) via the Kronecker MXU form: p = a·b costs (a + b) MACs per
+    element instead of the p a naive matmul would. Above the single-tile
+    ceiling the chunked 3-pass schedule makes three read+write sweeps."""
+    pp = _pow2ceil(max(p, 2))
+    sz = _isz(dtype)
+    if pp <= _fwht.MAX_P_SINGLE:
+        a, b = _fwht.factor_p(pp)
+        passes, macs = 1, n * pp * (a + b)
+    else:
+        f1, f2, f3 = _fwht.factor_p3(pp)
+        passes, macs = 3, n * pp * (f1 + f2 + f3)
+    return KernelRoofline("fwht", n, passes * 2 * n * pp * sz, 2 * macs)
+
+
+def sketch_fused_roofline(n: int, p: int, m: int, dtype=jnp.float32) -> KernelRoofline:
+    """The full compression operator values pass, fused: read x once, write
+    ONLY the (n, m) kept values + their indices — (1 + 2γ)·n·p traffic vs the
+    composed (3 + 2γ)-ish path (kernel_bench reports both so the ~2.5× HBM
+    win at γ=0.05 is visible in the trajectory)."""
+    pp = _pow2ceil(max(p, 2))
+    sz = _isz(dtype)
+    if pp <= _sf.MAX_P_FUSED:
+        a, b = _fwht.factor_p(pp)
+        hbm = n * pp * sz + n * m * (sz + 4)
+        macs = n * pp * (a + b)
+    else:
+        # composed fallback: chunked FWHT (3 read+write sweeps) then a gather
+        # that re-reads the dense intermediate and writes the kept values
+        f1, f2, f3 = _fwht.factor_p3(pp)
+        hbm = 3 * 2 * n * pp * sz + n * pp * sz + n * m * (sz + 4)
+        macs = n * pp * (f1 + f2 + f3)
+    return KernelRoofline("sketch_fused", n, hbm, 2 * macs)

@@ -604,3 +604,70 @@ def test_sharded_backend_matches_batch_on_8_devices():
                        cwd=os.path.dirname(os.path.dirname(__file__)),
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+
+
+# ------------------------------------------------- scanned ingest (scan=) ---
+
+
+def test_fit_many_scan_matches_host_loop():
+    """fit_many(scan=True) — the lax.scan hot loop — reproduces the host
+    chunk loop on every scan-eligible consumer: stream moments, lowrank-range
+    PCA, minibatch K-means (with the reassignment signal), including a ragged
+    tail that the host loop picks up after the scanned full steps."""
+    x = _lowrank(n=440, p=64)
+    plan = _plan(backend="stream", batch_size=100, n_shards=2)
+    plan_lr = plan.replace(cov_path="lowrank", rank=16)
+
+    def consumers():
+        return [SparsifiedMean(plan, key=1),
+                SparsifiedPCA(3, plan_lr, key=1),
+                SparsifiedKMeans(3, plan, key=1, algorithm="minibatch")]
+
+    host = consumers()
+    scanned = consumers()
+    fit_many(plan, host, x)
+    run = fit_many(plan, scanned, x, scan=True)
+
+    # the scan consumed 2 full steps (400 rows); the 40-row tail host-folded
+    assert run.cursor.chunk_rows == [100, 100, 100, 100, 40]
+    assert run.count == 440 and run.n_sketches == 5
+    for h, s in zip(host, scanned):
+        assert h.count_ == s.count_ == 440
+    np.testing.assert_allclose(np.asarray(scanned[0].mean_),
+                               np.asarray(host[0].mean_), atol=1e-5)
+    np.testing.assert_allclose(np.abs(np.asarray(scanned[1].components_)),
+                               np.abs(np.asarray(host[1].components_)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(scanned[2].centers_),
+                               np.asarray(host[2].centers_), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(scanned[2].reassign_counts_),
+                                  np.asarray(host[2].reassign_counts_))
+
+
+def test_fit_many_scan_extends_the_pass():
+    """SharedSketchRun.partial_fit keeps scanning: two scanned feeds ≡ one
+    host-loop fit of the concatenation (same chunks, same keys)."""
+    x = _lowrank(n=800, p=64)
+    plan = _plan(backend="stream", batch_size=100, n_shards=2)
+    whole = SparsifiedMean(plan, key=1)
+    fit_many(plan, [whole], x)
+    piecewise = SparsifiedMean(plan, key=1)
+    run = fit_many(plan, [piecewise], x[:400], finalize=False, scan=True)
+    run.partial_fit(x[400:]).finalize()
+    assert piecewise.count_ == 800
+    np.testing.assert_allclose(np.asarray(piecewise.mean_),
+                               np.asarray(whole.mean_), atol=1e-5)
+
+
+def test_fit_many_scan_validation():
+    """scan=True rejects consumers whose folds can't run inside lax.scan
+    (retained sketches / shard_map reductions) and source-driven ingest."""
+    x = _lowrank(n=400, p=64)
+    plan = _plan(backend="stream", batch_size=100)
+    with pytest.raises(ValueError, match="lax.scan"):
+        fit_many(plan, [SparsifiedKMeans(3, plan, key=1)], x, scan=True)  # lloyd
+    batch = _plan(backend="batch", batch_size=100)
+    with pytest.raises(ValueError, match="lax.scan"):
+        fit_many(batch, [SparsifiedCov(batch, key=1)], x, scan=True)
+    with pytest.raises(ValueError, match="scan=True"):
+        fit_many(plan, [SparsifiedMean(plan, key=1)],
+                 source=lambda s, t, sh: x[:100], steps=2, seed=0, scan=True)

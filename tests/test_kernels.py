@@ -97,47 +97,47 @@ def test_kernel_assign_fn_in_lloyd():
     assert bool(jnp.all(a_ref == a_k))
 
 
-# -------------------------- satellite: spmm VMEM-budget fallback boundary ---
-# ops._sparse_mode holds the spmm kernels to a ~12 MB VMEM footprint
-# (the (p, l) operand block + the (block_rows, p) densify scratch, no p-tiling
-# yet — ROADMAP); past it, "kernel" silently falls back to the jnp path. The
-# switch point was untested: pin it exactly at the documented ceiling.
+# ----------------------------- tiled spmm: VMEM planning + dtype handling ---
+# The spmm kernels tile BOTH grid axes (kernels/spmm.py), so plan_tiles must
+# find a (block_rows, block_cols) pair fitting the ONE budget at any p — the
+# old "fall back to jnp past ~2^15" ceiling is gone, and ops._sparse_mode
+# sizes the footprint at the ACTUAL operand dtypes (the old gate hard-coded
+# 4-byte items and disagreed with the planner's own budget).
 
 _SPMM_BUDGET = ops._SPMM_VMEM_BUDGET
 
 
-def _spmm_vmem(p, ell):
+def _spmm_vmem(p, ell, value_dtype=jnp.float32, dense_dtype=jnp.float32):
     from repro.kernels import spmm as spmm_mod
 
-    return (p * ell + spmm_mod.default_block_rows(p) * p) * 4
+    br, pb = spmm_mod.plan_tiles(p, ell, value_dtype, dense_dtype)
+    return spmm_mod.tile_vmem_bytes(p, ell, value_dtype, dense_dtype, br, pb)
 
 
-@pytest.mark.parametrize("ell,expect", [
-    (255, "kernel"),   # just below: (8192·255 + 128·8192)·4 = 12 550 144 B
-    (256, "kernel"),   # exactly AT the 12 MB ceiling (≤ keeps the kernel)
-    (257, "ref"),      # one column over: 12 615 680 B > 12 MB → jnp fallback
+@pytest.mark.parametrize("p", [4096, 8192, 16384, 32768, 1 << 16, 1 << 20])
+@pytest.mark.parametrize("dtypes", [
+    (jnp.float32, jnp.float32),
+    (jnp.bfloat16, jnp.bfloat16),
+    (jnp.bfloat16, jnp.float32),
 ])
-def test_sparse_mode_fallback_engages_exactly_at_budget(ell, expect):
-    """p=8192 has block_rows=128, so l walks the footprint across the ceiling
-    in exact 32 KiB steps — the fallback must flip between at and above."""
-    p = 8192
-    vmem = _spmm_vmem(p, ell)
-    assert (vmem <= _SPMM_BUDGET) == (expect == "kernel"), (vmem, _SPMM_BUDGET)
-    assert ops._sparse_mode("kernel", p, ell) == expect
+def test_sparse_mode_keeps_kernel_at_any_p_l128(p, dtypes):
+    """The l=128 regime across dtypes: the planned tiles always fit the
+    budget (column blocks shrink instead of falling back), so the gate keeps
+    the kernel at every p — including the old jnp-fallback sizes 2^14..2^20."""
+    vd, dd = dtypes
+    assert _spmm_vmem(p, 128, vd, dd) <= _SPMM_BUDGET
+    assert ops._sparse_mode("kernel", p, 128, vd, dd) == "kernel"
 
 
-@pytest.mark.parametrize("p,expect", [
-    (4096, "kernel"),   # 4096·(128+128)·4 = 4 MB
-    (8192, "kernel"),   # 8 MB
-    (16384, "ref"),     # 16 MB > 12 MB — the l=128 ceiling sits here
-    (32768, "ref"),     # 24 MB (block_rows drops to 64, still over)
-])
-def test_sparse_mode_p_sweep_at_l128(p, expect):
-    """The documented l=128 regime: kernels below the ceiling, jnp past it,
-    always agreeing with the footprint formula (block_rows shrinks with p)."""
-    assert ops._sparse_mode("kernel", p, 128) == expect
-    vmem = _spmm_vmem(p, 128)
-    assert (vmem <= _SPMM_BUDGET) == (expect == "kernel")
+def test_sparse_mode_gate_agrees_with_planner():
+    """The dispatch gate and the tile planner share ONE footprint model: the
+    gate's decision must equal the planner's own fits-the-budget check,
+    dtype by dtype (this is the single-sourcing the old gate lacked)."""
+    for p, ell in [(8192, 256), (1 << 16, 128), (4096, 512)]:
+        for vd, dd in [(jnp.float32, jnp.float32), (jnp.bfloat16, jnp.float32),
+                       (jnp.float64, jnp.float64)]:
+            fits = _spmm_vmem(p, ell, vd, dd) <= _SPMM_BUDGET
+            assert (ops._sparse_mode("kernel", p, ell, vd, dd) == "kernel") == fits
 
 
 def test_sparse_mode_vocabulary_and_interpret():
@@ -150,15 +150,53 @@ def test_sparse_mode_vocabulary_and_interpret():
     assert ops._sparse_mode("interpret", 1 << 20, 128) == "interpret"
 
 
-def test_spmm_kernel_matches_oracle_at_boundary_p():
-    """Numeric check AT the fallback-boundary dimensionality (p=8192): the
-    interpreted kernel and the jnp oracle agree to 1e-5 on both products, so
-    flipping across the ceiling cannot change results beyond float noise.
-    Small row count + block_rows=8 keep the interpreted densify loop fast."""
+def test_plan_tiles_respects_budget_and_alignment():
+    """plan_tiles output is a pow2 column block ≥ 256 (lane-aligned) whose
+    footprint fits the budget, at representative (p, l, dtype) corners."""
     from repro.kernels import spmm as spmm_mod
 
-    n, m, p, ell = 8, 4, 8192, 16
-    key = jax.random.fold_in(KEY, 8192)
+    for p, ell, vd, dd in [(512, 8, jnp.float32, jnp.float32),
+                           (1 << 16, 128, jnp.float32, jnp.float32),
+                           (1 << 20, 64, jnp.bfloat16, jnp.bfloat16),
+                           (12288, 32, jnp.float64, jnp.float64)]:
+        br, pb = spmm_mod.plan_tiles(p, ell, vd, dd)
+        assert pb >= 256 and (pb & (pb - 1)) == 0
+        assert br >= 8
+        assert spmm_mod.tile_vmem_bytes(p, ell, vd, dd, br, pb) <= _SPMM_BUDGET
+
+
+def test_spmm_tiled_matches_oracle_across_column_blocks():
+    """Multi-column-block parity: force small tiles so the grid walks several
+    column blocks (and padded p), checking the masked densify scatters each
+    index into exactly its own block on both products."""
+    from repro.kernels import spmm as spmm_mod
+
+    n, m, p, ell = 24, 6, 1500, 16   # pads to 3 × 512 column blocks
+    key = jax.random.fold_in(KEY, 1500)
+    values = jax.random.normal(key, (n, m))
+    idx = jnp.sort(jax.lax.top_k(jax.random.uniform(
+        jax.random.fold_in(key, 1), (n, p)), m)[1].astype(jnp.int32), axis=-1)
+    dense = jax.random.normal(jax.random.fold_in(key, 2), (p, ell))
+
+    t_ref = ref.ref_spmm(values, idx, dense)
+    t_k = spmm_mod.spmm(values, idx, dense, block_rows=8, block_cols=512,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref), atol=1e-5)
+    y_ref = ref.ref_spmm_t(values, idx, t_ref, p)
+    y_k = spmm_mod.spmm_t(values, idx, t_ref, p, block_rows=8, block_cols=512,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-4)
+
+
+@pytest.mark.slow
+def test_spmm_tiled_matches_oracle_at_p64k():
+    """The acceptance shape: p=2^16 at l=128 compiles (interpret mode) and
+    matches the jnp oracles with NO ref fallback selected by the gate."""
+    from repro.kernels import spmm as spmm_mod
+
+    n, m, p, ell = 8, 4, 1 << 16, 128
+    assert ops._sparse_mode("kernel", p, ell) == "kernel"
+    key = jax.random.fold_in(KEY, p)
     values = jax.random.normal(key, (n, m))
     idx = jnp.sort(jax.lax.top_k(jax.random.uniform(
         jax.random.fold_in(key, 1), (n, p)), m)[1].astype(jnp.int32), axis=-1)
@@ -169,4 +207,36 @@ def test_spmm_kernel_matches_oracle_at_boundary_p():
     np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref), atol=1e-5)
     y_ref = ref.ref_spmm_t(values, idx, t_ref, p)
     y_k = spmm_mod.spmm_t(values, idx, t_ref, p, block_rows=8, interpret=True)
-    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("vd,dd,out", [
+    (jnp.bfloat16, jnp.bfloat16, jnp.float32),   # bf16·bf16 accumulates in f32
+    (jnp.bfloat16, jnp.float32, jnp.float32),
+    (jnp.float32, jnp.bfloat16, jnp.float32),
+    (jnp.float32, jnp.float32, jnp.float32),
+])
+def test_spmm_mixed_dtype_parity(vd, dd, out):
+    """Kernel and oracle share ONE promotion rule (promoted_dtypes /
+    _spmm_out_dtype): mixed-dtype operands produce the same values to
+    tolerance AND the same output dtype (the old kernel silently cast dense
+    to values.dtype, degrading f32 operands to bf16 compute)."""
+    n, m, p, ell = 16, 4, 512, 8
+    key = jax.random.fold_in(KEY, 99)
+    values = jax.random.normal(key, (n, m)).astype(vd)
+    idx = jnp.sort(jax.lax.top_k(jax.random.uniform(
+        jax.random.fold_in(key, 1), (n, p)), m)[1].astype(jnp.int32), axis=-1)
+    dense = jax.random.normal(jax.random.fold_in(key, 2), (p, ell)).astype(dd)
+    from repro.kernels import spmm as spmm_mod
+
+    tol = 1e-5 if (vd, dd) == (jnp.float32, jnp.float32) else 5e-2
+    t_ref = ref.ref_spmm(values, idx, dense)
+    t_k = spmm_mod.spmm(values, idx, dense, block_rows=8, interpret=True)
+    assert t_k.dtype == t_ref.dtype == out
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_ref), atol=tol)
+
+    t32 = t_ref.astype(dd)
+    y_ref = ref.ref_spmm_t(values, idx, t32, p)
+    y_k = spmm_mod.spmm_t(values, idx, t32, p, block_rows=8, interpret=True)
+    assert y_k.dtype == y_ref.dtype == out
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=tol * 4)

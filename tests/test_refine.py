@@ -368,16 +368,29 @@ def test_refine_validation_surface():
         fitted.refine(jnp.ones((400, 16)))          # right n, wrong p
     with pytest.raises(ValueError, match="rows"):
         fitted.refine(x[:200])                      # a different-length slice
-    # a ragged partial_fit history re-chunks differently than an array replay
-    # would — the silent wrong-mask case is rejected, batch-aligned ones pass
+    # ragged partial_fit histories REPLAY now: the cursor's recorded per-chunk
+    # row counts drive the array re-chunking, so the replay folds exactly the
+    # original (step, shard) masks (the old code rejected these outright)
     ragged = SparsifiedPCA(2, plan_lr, key=0)
     ragged.partial_fit(x[:130]).partial_fit(x[130:]).finalize()
-    with pytest.raises(ValueError, match="chunk boundaries"):
-        ragged.refine(x)
+    assert ragged._cursor.chunk_rows == [100, 30, 100, 100, 70]
+    ragged.refine(x)
+    assert ragged.refine_passes_ == 1
+    # determinism: a twin with the same ragged history refines bit-identically
+    twin = SparsifiedPCA(2, plan_lr, key=0)
+    twin.partial_fit(x[:130]).partial_fit(x[130:]).finalize()
+    twin.refine(x)
+    np.testing.assert_array_equal(np.asarray(ragged.components_),
+                                  np.asarray(twin.components_))
+    # unequal-size calls whose chunks stay batch-aligned ≡ the equal-chunk
+    # fit_refine, bitwise (the boundaries — not the call sizes — are the keys)
     aligned = SparsifiedPCA(2, plan_lr, key=0)
     aligned.partial_fit(x[:100]).partial_fit(x[100:]).finalize()
-    aligned.refine(x)                               # 100-row pieces replay fine
+    aligned.refine(x)
     assert aligned.refine_passes_ == 1
+    whole = SparsifiedPCA(2, plan_lr, key=0).fit_refine(x, passes=1)
+    np.testing.assert_array_equal(np.asarray(aligned.components_),
+                                  np.asarray(whole.components_))
 
 
 # ------------------------------------------------- slow-lane acceptance -----
