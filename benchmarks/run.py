@@ -29,6 +29,7 @@ def main() -> None:
         kernel_bench,
         lowrank_bench,
         refine_bench,
+        serve_bench,
         stream_bench,
     )
 
@@ -47,6 +48,7 @@ def main() -> None:
         ("api_bench", api_bench.run),
         ("lowrank_bench", lowrank_bench.run),
         ("refine_bench", refine_bench.run),
+        ("serve_bench", serve_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

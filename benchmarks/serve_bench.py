@@ -1,0 +1,211 @@
+"""Sketch-serving subsystem benchmark → ``BENCH_serve.json``.
+
+Three claims of the serving layer, each measured and gated:
+
+1. **Multi-tenant scale** — a sweep up to ≥1000 concurrently live tenants
+   (stream backend, lowrank cov path) recording create+ingest+query
+   requests/sec and query latency p50/p99. Per-tenant resident state must be
+   sketch-sized: asserted ≪ the (p, p) accumulator's p²·4 bytes, and
+   *constant* in rows ingested (fold state is fixed-size, so total memory is
+   O(tenants), never O(tenants · rows) — the sub-linear growth claim).
+2. **Micro-batched ingest** — many tiny ingest requests drained through the
+   coalescing worker loop (``max_batch=64``, one jitted sketch+fold per
+   drained run) vs the same requests folded one-per-request
+   (``max_batch=1``). Gated at ≥2× rows/sec.
+3. **Snapshot/restore** — a live service checkpoints, restores, and answers
+   queries BIT-identically; ingesting identical further rows into original
+   and restored keeps them bit-identical (the cursor resumes at the same
+   (step, shard) mask keys).
+
+CI uploads the JSON as an artifact so the serving perf trajectory accumulates
+across commits (same convention as ``BENCH_api.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import Plan
+from repro.sketchserve import SketchService, restore_service
+
+RECORDS: list[dict] = []
+
+P_DIM = 128
+RANK = 8
+
+
+def record(name: str, us: float, **extra):
+    rec = {"name": name, "us_per_call": round(us, 1), **extra}
+    RECORDS.append(rec)
+    derived = " ".join(f"{k}={v}" for k, v in extra.items()
+                       if isinstance(v, (int, float, str)))
+    emit(name, us, derived)
+
+
+def _plan() -> Plan:
+    return Plan(backend="stream", gamma=0.25, batch_size=128,
+                cov_path="lowrank", rank=RANK)
+
+
+# ---------------------------------------------------------- 1. tenant sweep --
+
+
+def tenant_sweep(n_tenants: int, rng) -> None:
+    plan = _plan()
+    rows = rng.normal(size=(64, P_DIM)).astype(np.float32)
+    extra_rows = rng.normal(size=(64, P_DIM)).astype(np.float32)
+    with SketchService(max_queue=4 * n_tenants + 64,
+                       max_batch=128) as svc:
+        t0 = time.perf_counter()
+        for i in range(n_tenants):
+            svc.create_tenant(f"t{i}", "pca", plan=plan, key=1, n_components=4)
+        t_create = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        futs = [svc.ingest(f"t{i}", rows) for i in range(n_tenants)]
+        assert all(f.result().ok for f in futs)
+        t_ingest = time.perf_counter() - t0
+
+        # query latency over a fixed-size sample (finalize is lazy — these
+        # first queries pay it; the sample keeps the sweep O(tenants) overall)
+        sample = list(range(0, n_tenants, max(1, n_tenants // 32)))[:32]
+        lat = []
+        for i in sample:
+            tq = time.perf_counter()
+            svc.query(f"t{i}", "components").unwrap()
+            lat.append(time.perf_counter() - tq)
+        p50, p99 = np.quantile(np.array(lat) * 1e3, [0.5, 0.99])
+
+        # per-tenant resident fold state: sketch-sized, NEVER the (p, p)
+        # accumulator — and constant in rows ingested (sub-linear total memory)
+        sb0 = [svc.query(f"t{i}", "stats").unwrap()["state_bytes"]
+               for i in sample]
+        dense_bytes = P_DIM * P_DIM * 4
+        assert max(sb0) < dense_bytes / 4, (
+            f"per-tenant state {max(sb0)}B is not sketch-sized "
+            f"(dense (p,p) would be {dense_bytes}B)")
+        for i in sample[:8]:
+            for _ in range(4):
+                svc.ingest(f"t{i}", extra_rows).result()
+        sb1 = [svc.query(f"t{i}", "stats").unwrap()["state_bytes"]
+               for i in sample[:8]]
+        assert sb1 == sb0[:8], (
+            "per-tenant state grew with rows ingested — fold state must be "
+            f"fixed-size ({sb0[:8]} -> {sb1})")
+
+    reqs = 2 * n_tenants + len(sample)
+    dt = t_create + t_ingest + sum(lat)
+    record(f"serve/tenants/{n_tenants}", dt / reqs * 1e6,
+           tenants=n_tenants, requests_per_sec=round(reqs / dt),
+           create_s=round(t_create, 2), ingest_s=round(t_ingest, 2),
+           query_p50_ms=round(float(p50), 2), query_p99_ms=round(float(p99), 2),
+           state_bytes_per_tenant=int(max(sb0)), dense_state_bytes=dense_bytes)
+
+
+# ------------------------------------------------- 2. micro-batched ingest --
+
+
+def _drain_ingest(chunks: list[np.ndarray], max_batch: int) -> float:
+    """Queue every request up front, then start the worker — block sizes are
+    exactly max_batch, so both arms measure a steady-state drain."""
+    svc = SketchService(max_queue=len(chunks) + 8, max_batch=max_batch)
+    svc.create_tenant("t", "pca", plan=_plan(), key=1, n_components=4)
+    futs = [svc.ingest("t", c) for c in chunks]
+    t0 = time.perf_counter()
+    with svc:                      # start() drains; stop() waits for it all
+        for f in futs:
+            assert f.result(120).ok
+        dt = time.perf_counter() - t0
+    return dt
+
+
+def microbatch_bench(rng) -> None:
+    n_req, req_rows = 256, 16     # tiny requests: the coalescing regime
+    chunks = [rng.normal(size=(req_rows, P_DIM)).astype(np.float32)
+              for _ in range(n_req)]
+    total = n_req * req_rows
+    # two runs per arm: the first pays jit compilation of its fold shapes
+    # (process-global cache), the second is the measurement
+    for mb in (64, 1):
+        _drain_ingest(chunks, mb)
+    dt_batched = _drain_ingest(chunks, 64)
+    dt_unbatched = _drain_ingest(chunks, 1)
+    speedup = dt_unbatched / dt_batched
+    record("serve/ingest/unbatched", dt_unbatched / n_req * 1e6,
+           rows_per_sec=round(total / dt_unbatched), max_batch=1)
+    record("serve/ingest/microbatched", dt_batched / n_req * 1e6,
+           rows_per_sec=round(total / dt_batched), max_batch=64,
+           speedup_vs_unbatched=round(speedup, 2))
+    assert speedup >= 2.0, (
+        f"micro-batched ingest only {speedup:.2f}x over one-fold-per-request "
+        "— coalescing has regressed")
+
+
+# ------------------------------------------------------ 3. snapshot/restore --
+
+
+def snapshot_bench(rng, ckpt_dir: str) -> None:
+    plan = _plan()
+    x = rng.normal(size=(512, P_DIM)).astype(np.float32)
+    more = rng.normal(size=(256, P_DIM)).astype(np.float32)
+    with SketchService() as svc:
+        svc.create_tenant("p", "pca", plan=plan, key=7, n_components=4,
+                          group="g")
+        svc.create_tenant("k", "kmeans", plan=plan, key=7, k=4, group="g",
+                          algorithm="minibatch")
+        svc.ingest("g", x).result()
+        comps = svc.query("p", "components").unwrap()
+        centers = svc.query("k", "centers").unwrap()
+        t0 = time.perf_counter()
+        svc.snapshot(ckpt_dir)
+        t_save = time.perf_counter() - t0
+        # original continues ingesting after the snapshot
+        svc.ingest("g", more).result()
+        comps_cont = svc.query("p", "components").unwrap()
+
+    t0 = time.perf_counter()
+    svc2 = restore_service(ckpt_dir)
+    t_load = time.perf_counter() - t0
+    with svc2:
+        comps2 = svc2.query("p", "components").unwrap()
+        centers2 = svc2.query("k", "centers").unwrap()
+        assert np.array_equal(comps["components"], comps2["components"]), (
+            "snapshot/restore round-trip is not bit-identical (PCA)")
+        assert np.array_equal(centers, centers2), (
+            "snapshot/restore round-trip is not bit-identical (K-means)")
+        # resume: identical further ingest stays bit-identical (the restored
+        # cursor continues at the same (step, shard) mask keys)
+        svc2.ingest("g", more).result()
+        comps2_cont = svc2.query("p", "components").unwrap()
+        assert np.array_equal(comps_cont["components"],
+                              comps2_cont["components"]), (
+            "post-restore ingest diverged from the original process")
+    record("serve/snapshot/roundtrip", (t_save + t_load) * 1e6,
+           save_ms=round(t_save * 1e3, 1), restore_ms=round(t_load * 1e3, 1),
+           bit_identical=True)
+
+
+def run(json_path: str = "BENCH_serve.json"):
+    RECORDS.clear()
+    rng = np.random.default_rng(0)
+    for n in (64, 256, 1024):
+        tenant_sweep(n, rng)
+    microbatch_bench(rng)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        snapshot_bench(rng, os.path.join(d, "snap"))
+    out = os.environ.get("BENCH_SERVE_JSON", json_path)
+    with open(out, "w") as f:
+        json.dump({"records": RECORDS}, f, indent=2)
+    print(f"serve_bench: wrote {out} ({len(RECORDS)} records)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -27,6 +27,7 @@ come back in the ORIGINAL domain (eigenvectors / means / centers unmixed by
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -344,11 +345,25 @@ class SketchCursor:
     A lone estimator owns a one-consumer cursor; :func:`repro.api.fit_many`
     registers many consumers on one cursor, so a single compression pass feeds
     them all (the paper's pitch: compress once, answer every question).
+
+    Thread-safety contract: ``partial_fit`` / ``fold_source`` hold an internal
+    lock for the WHOLE call, so concurrent producers (e.g. several threads
+    feeding one :class:`~repro.api.fused.SharedSketchRun`) serialize — each
+    call folds atomically, chunk indices (hence (step, shard) mask keys) are
+    assigned in lock-acquisition order, and counts stay exact. Which producer
+    gets which chunk index is whatever the lock arbitration yields, so
+    multi-producer results are run-to-run ordering-dependent (still valid
+    estimates — every chunking is); a single producer (the
+    ``repro.sketchserve`` worker loop, which funnels all ingest through one
+    thread) stays fully deterministic. ``finalize``/``reduce`` are NOT
+    guarded: quiesce producers (or go through the sketchserve queue, which
+    orders queries after ingest) before reading fitted state.
     """
 
     def __init__(self, plan: Plan, key: jax.Array | int):
         self.plan = plan
         self.key = as_key(key)
+        self._lock = threading.Lock()
         self.spec: sketch_mod.SketchSpec | None = None
         self.chunk = 0           # linear chunk index → plan.step_shard(chunk)
         self.count = 0           # rows folded through this cursor
@@ -397,11 +412,12 @@ class SketchCursor:
         if x.ndim != 2:
             raise ValueError(f"expected (rows, p) data, got shape {x.shape}")
         x = x.astype(self.plan.dtype)
-        self.ensure_spec(x.shape[1])
-        start = self._fold_rows_scanned(x) if self.scan else 0
-        bs = self.plan.batch_size
-        for i in range(start, x.shape[0], bs):
-            self.fold_rows(x[i:i + bs])
+        with self._lock:  # concurrent producers serialize whole-call (see class doc)
+            self.ensure_spec(x.shape[1])
+            start = self._fold_rows_scanned(x) if self.scan else 0
+            bs = self.plan.batch_size
+            for i in range(start, x.shape[0], bs):
+                self.fold_rows(x[i:i + bs])
 
     def scan_descs(self) -> tuple | None:
         """The consumers' in-scan fold descriptors, or None if any consumer
@@ -468,11 +484,12 @@ class SketchCursor:
         """One pass over a normalized ``(seed, step, shard) → (b, p)`` source
         (the StreamEngine contract): each (step, shard) batch is folded under
         exactly that (step, shard) mask key."""
-        for step in range(steps):
-            for shard in range(self.plan.n_shards):
-                rows = jnp.asarray(source(seed, step, shard)).astype(self.plan.dtype)
-                self.ensure_spec(rows.shape[1])
-                self.fold_rows(rows)
+        with self._lock:  # concurrent producers serialize whole-call (see class doc)
+            for step in range(steps):
+                for shard in range(self.plan.n_shards):
+                    rows = jnp.asarray(source(seed, step, shard)).astype(self.plan.dtype)
+                    self.ensure_spec(rows.shape[1])
+                    self.fold_rows(rows)
 
 
 # -------------------------------------------------------------- base class --
@@ -634,6 +651,16 @@ class SketchedEstimator:
     def _refine_needs_signal(self) -> bool:
         return False
 
+    def _refine_metric(self) -> float:
+        """The latest per-pass convergence measurement (smaller = settled):
+        PCA's principal-angle change between consecutive power bases, the
+        minibatch K-means rebuild's reassigned-row fraction. Subclasses that
+        support refinement implement it; the ``tol=`` loop reads it."""
+        raise NotImplementedError
+
+    def _refine_tol_check(self) -> None:
+        """Subclass hook: reject ``tol=`` when the convergence signal is off."""
+
     def _resolve_passes(self, passes: int | None) -> int:
         if passes is None:
             passes = self.plan.refine_passes or 1
@@ -641,9 +668,10 @@ class SketchedEstimator:
             raise ValueError(f"refinement needs passes >= 1, got {passes}")
         return int(passes)
 
-    def refine(self, x=None, passes: int | None = None, *, source=None,
+    def refine(self, x=None, passes: int | None = None, *, tol: float | None = None,
+               max_passes: int = 16, source=None,
                steps: int | None = None, seed: int | None = None) -> "SketchedEstimator":
-        """Replay the FITTED pass ``passes`` more times and sharpen the fit.
+        """Replay the FITTED pass more times and sharpen the fit.
 
         ``x`` must be the same array ``fit`` consumed (re-chunked and re-masked
         identically under the (step, shard) key discipline; the row count is
@@ -653,11 +681,28 @@ class SketchedEstimator:
         ``plan.refine_passes`` (or 1). Repeat calls RESUME: ``refine(x);
         refine(x)`` continues the iteration where the first call stopped
         (≡ one ``refine(x, passes=2)``), with ``refine_passes_`` accumulating.
+
+        ``tol=`` replaces the fixed pass count with "refine until converged":
+        single passes run (resuming, exactly as repeat calls do) until the
+        per-pass convergence measurement — ``refine_subspace_change_[-1]`` for
+        PCA, ``refine_reassign_fraction_[-1]`` for minibatch K-means (needs
+        ``track_reassignments=True``, and prices one trailing measurement
+        replay per pass) — drops to ``tol`` or ``max_passes`` is hit;
+        ``refine_converged_`` records which. Mutually exclusive with
+        ``passes``.
         """
         self._refine_check()
         if not self._fitted:
             raise RuntimeError("refine() replays a fitted estimator — call "
                                "fit()/fit_stream() first, or use fit_refine()")
+        if tol is not None:
+            if passes is not None:
+                raise ValueError("pass a fixed passes= OR an adaptive tol=, not both")
+            if tol <= 0:
+                raise ValueError(f"tol must be > 0, got {tol}")
+            if max_passes < 1:
+                raise ValueError(f"max_passes must be >= 1, got {max_passes}")
+            self._refine_tol_check()
         chunk_rows = None
         if x is not None:
             n = int(jnp.asarray(x).shape[0])
@@ -676,18 +721,35 @@ class SketchedEstimator:
             from repro.stream.engine import normalize_source
 
             src = normalize_source(source)
-        refine_mod.run_refine(self.plan, self.spec_, [self],
-                              self._resolve_passes(passes), data=x, source=src,
-                              steps=steps, seed=seed, chunk_rows=chunk_rows)
+        if tol is None:
+            refine_mod.run_refine(self.plan, self.spec_, [self],
+                                  self._resolve_passes(passes), data=x, source=src,
+                                  steps=steps, seed=seed, chunk_rows=chunk_rows)
+            return self
+        # adaptive: one resuming pass at a time, watching the estimator's own
+        # convergence measurement (pure loop control — the replay math is the
+        # fixed-passes path's, so refine(tol=) ≡ refine(passes=q) for the q it
+        # settles on)
+        self.refine_converged_ = False
+        for _ in range(int(max_passes)):
+            refine_mod.run_refine(self.plan, self.spec_, [self], 1, data=x,
+                                  source=src, steps=steps, seed=seed,
+                                  chunk_rows=chunk_rows)
+            if self._refine_metric() <= tol:
+                self.refine_converged_ = True
+                break
         return self
 
-    def fit_refine(self, x=None, passes: int | None = None, *, source=None,
+    def fit_refine(self, x=None, passes: int | None = None, *,
+                   tol: float | None = None, max_passes: int = 16, source=None,
                    steps: int | None = None, seed: int | None = None) -> "SketchedEstimator":
-        """One-pass fit + ``passes`` replay refinement passes in one call.
+        """One-pass fit + replay refinement in one call.
 
         The data argument doubles as the replay source: an in-memory ``x`` is
         fit then re-chunked per pass; a ``(seed, step, shard) → (b, p)``
-        ``source`` is streamed once then replayed per pass.
+        ``source`` is streamed once then replayed per pass. ``tol=`` switches
+        from the fixed ``passes`` count to adaptive refine-until-converged
+        (see :meth:`refine`).
         """
         self._refine_check()
         if (x is None) == (source is None):
@@ -698,7 +760,8 @@ class SketchedEstimator:
             if steps is None:
                 raise ValueError("fit_refine(source=...) needs steps=")
             self.fit_stream(source, steps=steps, seed=seed)
-        return self.refine(x, passes, source=source, steps=steps, seed=seed)
+        return self.refine(x, passes, tol=tol, max_passes=max_passes,
+                           source=source, steps=steps, seed=seed)
 
     # ------------------------------------------------------------- utility --
 
@@ -727,6 +790,71 @@ class SketchedEstimator:
 
     def _unmix_vec(self, v_pre: jax.Array) -> jax.Array:
         return sketch_mod.unmix_dense(v_pre[None, :], self.spec_)[0]
+
+    # ------------------------------------------------------------ snapshot --
+    # State export/import for repro.sketchserve snapshot/restore: everything a
+    # restarted process needs to continue THIS estimator's ingest
+    # bit-identically, as a flat {name: array} dict. The spec is NOT exported
+    # — it re-derives deterministically from (plan, key, p); derived fitted
+    # attributes aren't either — finalize() recomputes them from the fold
+    # state. Import targets a freshly constructed estimator whose spec is
+    # already bound (the importer calls cursor.ensure_spec first).
+
+    def _export_state(self) -> dict:
+        r = self._reducer
+        if r is None:
+            raise RuntimeError("nothing folded yet — nothing to export")
+        if r._step_parts:
+            raise RuntimeError(
+                "a sharded reducer is mid-step (buffered shard sketches not "
+                "yet psum'd); ingest to a step boundary before snapshotting")
+        out: dict = {"count": np.int64(self.count_)}
+        st = r.state
+        if isinstance(st, lowrank_mod.RangeState):
+            out.update({"range.y": st.y, "range.diag": st.diag,
+                        "range.sum_w": st.sum_w, "range.count": st.count})
+        elif isinstance(st, lowrank_mod.FDState):
+            out.update({"fd.sketch": st.sketch, "fd.diag": st.diag,
+                        "fd.sum_w": st.sum_w, "fd.count": st.count})
+        elif st is not None:   # MomentState; sum_wwt present iff track_cov
+            out.update({"moment.sum_w": st.sum_w, "moment.count": st.count})
+            if st.sum_wwt is not None:
+                out["moment.sum_wwt"] = st.sum_wwt
+        if r.parts:            # retained sketches (batch moments / Lloyd)
+            out["parts.values"] = jnp.concatenate([s.values for s in r.parts])
+            out["parts.indices"] = jnp.concatenate([s.indices for s in r.parts])
+            out["parts.rows"] = np.array([s.n for s in r.parts], np.int64)
+        return out
+
+    def _import_state(self, arrs: dict) -> None:
+        if self.spec_ is None:
+            raise RuntimeError("bind the spec (cursor.ensure_spec) before "
+                               "importing snapshot state")
+        r = self._reducer
+        self.count_ = int(arrs["count"])
+        if "range.y" in arrs:
+            r.state = lowrank_mod.RangeState(
+                jnp.asarray(arrs["range.y"]), jnp.asarray(arrs["range.diag"]),
+                jnp.asarray(arrs["range.sum_w"]), jnp.asarray(arrs["range.count"]))
+        elif "fd.sketch" in arrs:
+            r.state = lowrank_mod.FDState(
+                jnp.asarray(arrs["fd.sketch"]), jnp.asarray(arrs["fd.diag"]),
+                jnp.asarray(arrs["fd.sum_w"]), jnp.asarray(arrs["fd.count"]))
+        elif "moment.sum_w" in arrs:
+            wwt = arrs.get("moment.sum_wwt")
+            r.state = acc.MomentState(
+                jnp.asarray(arrs["moment.sum_w"]),
+                None if wwt is None else jnp.asarray(wwt),
+                jnp.asarray(arrs["moment.count"]))
+        if "parts.values" in arrs:
+            values = jnp.asarray(arrs["parts.values"])
+            indices = jnp.asarray(arrs["parts.indices"])
+            r.parts = []
+            i = 0
+            for n in np.asarray(arrs["parts.rows"]).tolist():
+                r.parts.append(SparseRows(values[i:i + n], indices[i:i + n],
+                                          self.spec_.p_pad))
+                i += n
 
 
 # ----------------------------------------------------------- the estimators --
@@ -914,6 +1042,9 @@ class SparsifiedPCA(SketchedEstimator):
         self.refine_passes_ += passes    # cumulative across repeat refine()s
         self.refine_subspace_change_ = np.asarray(self._rchanges)
 
+    def _refine_metric(self) -> float:
+        return float(self.refine_subspace_change_[-1])
+
 
 class SparsifiedKMeans(SketchedEstimator):
     """Sparsified K-means over any backend.
@@ -921,7 +1052,7 @@ class SparsifiedKMeans(SketchedEstimator):
     algorithm="lloyd" (default, paper Alg. 1): the sketch — the γ-compressed
     dataset, which is the point of the method — is retained, and full Lloyd
     (``sparse_kmeans_core``; under the sharded backend, the same solver inside
-    the mesh context à la ``core.distributed.distributed_kmeans``) runs at
+    the mesh context via ``stream.sharded.sharded_kmeans``) runs at
     finalize. Fitted ``labels_`` covers every row folded.
 
     algorithm="minibatch": the constant-memory streaming accumulators of
@@ -1076,9 +1207,7 @@ class SparsifiedKMeans(SketchedEstimator):
             s_all = self._reducer.concat()
             init_key = fold_in_str(self.spec_.key, "api-kmeans")
             if self.plan.backend == "sharded":
-                from repro.core import distributed as dist
-
-                centers_pre, a, obj, it = dist.distributed_kmeans(
+                centers_pre, a, obj, it = sharded_mod.sharded_kmeans(
                     s_all, self.k, init_key, self.plan.resolve_mesh(),
                     n_init=self.n_init, max_iter=self.max_iter, tol=self.tol)
             else:
@@ -1098,6 +1227,38 @@ class SparsifiedKMeans(SketchedEstimator):
         """Nearest-center labels for new rows (sketched with a one-shot mask)."""
         s = self.sketch(x)
         return acc.kmeans_assign(self.centers_pre_, s)
+
+    # ------------------------------------------------------------ snapshot --
+
+    def _export_state(self) -> dict:
+        out = super()._export_state()
+        if self.algorithm == "minibatch":
+            if self._km_pending is not None or self._km_step_sketches:
+                raise RuntimeError(
+                    "the minibatch fold is mid-step (pending shard deltas); "
+                    "ingest to a step boundary before snapshotting")
+            if self._km_state is not None:
+                st = self._km_state
+                out.update({"km.centers": st.centers, "km.counts": st.counts,
+                            "km.obj": st.obj, "km.count": st.count})
+            if self._reassign_history:
+                out["km.reassign_counts"] = np.stack(
+                    [c for c, _ in self._reassign_history])
+                out["km.reassign_rows"] = np.array(
+                    [r for _, r in self._reassign_history], np.int64)
+        return out
+
+    def _import_state(self, arrs: dict) -> None:
+        super()._import_state(arrs)
+        if "km.centers" in arrs:
+            self._km_state = acc.KMeansState(
+                jnp.asarray(arrs["km.centers"]), jnp.asarray(arrs["km.counts"]),
+                jnp.asarray(arrs["km.obj"]), jnp.asarray(arrs["km.count"]))
+        if "km.reassign_counts" in arrs:
+            cnts = np.asarray(arrs["km.reassign_counts"])
+            rows = np.asarray(arrs["km.reassign_rows"]).tolist()
+            self._reassign_history = [(cnts[i], int(rows[i]))
+                                      for i in range(len(rows))]
 
     # ---------------------------------------------------------- refinement --
     # Two-pass (Alg. 2) replay refinement (repro.refine.kmeans2): each pass
@@ -1176,6 +1337,17 @@ class SparsifiedKMeans(SketchedEstimator):
             rows = np.array([max(r, 1) for _, r in self._rflips])
             self.refine_reassign_counts_ = cnt
             self.refine_reassign_fraction_ = cnt / rows
+
+    def _refine_tol_check(self) -> None:
+        if not self.track_reassignments:
+            raise ValueError(
+                "refine(tol=) watches the reassigned-row fraction of each "
+                "rebuild, which track_reassignments=False turned off — "
+                "re-construct with track_reassignments=True or use a fixed "
+                "passes=")
+
+    def _refine_metric(self) -> float:
+        return float(self.refine_reassign_fraction_[-1])
 
 
 # --------------------------------------------------------- grad compressor --

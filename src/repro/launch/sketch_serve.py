@@ -1,0 +1,86 @@
+"""Sketch-serving launcher: drive a synthetic multi-tenant workload through
+:class:`repro.sketchserve.SketchService` and report throughput/latency.
+
+``python -m repro.launch.sketch_serve --tenants 32 --groups 8 --requests 512``
+
+Spins up the service, creates ``--tenants`` tenants round-robin over
+``--groups`` shared-sketch groups (each group gets one PCA + one K-means
+co-registered on one compression pass; extra members are means), fires
+``--requests`` small ingest requests with a query mixed in every
+``--query-every``, then prints requests/sec, fold coalescing, query p50/p99,
+and (optionally) snapshots to ``--snapshot``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=32)
+    ap.add_argument("--groups", type=int, default=8)
+    ap.add_argument("--p", type=int, default=64)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--rows-per-request", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--query-every", type=int, default=64)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--snapshot", default=None, help="checkpoint dir (optional)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.api import Plan
+    from repro.sketchserve import SketchService
+
+    rng = np.random.default_rng(args.seed)
+    plan = Plan(backend="stream", gamma=0.25, batch_size=args.batch_size,
+                cov_path="lowrank", rank=args.rank)
+    kinds = ("pca", "kmeans", "mean")
+    t0 = time.time()
+    with SketchService(max_batch=args.max_batch) as svc:
+        for i in range(args.tenants):
+            gid, kind = f"g{i % args.groups}", kinds[min(i // args.groups, 2)]
+            extra = ({"n_components": 4} if kind == "pca"
+                     else {"k": 4, "algorithm": "minibatch"} if kind == "kmeans"
+                     else {})
+            svc.create_tenant(f"t{i}", kind, plan=plan, key=args.seed,
+                              group=gid, **extra)
+        t_create = time.time() - t0
+
+        lat: list[float] = []
+        futs = []
+        t0 = time.time()
+        for r in range(args.requests):
+            rows = rng.normal(size=(args.rows_per_request, args.p)).astype(np.float32)
+            futs.append(svc.ingest(f"g{r % args.groups}", rows))
+            if (r + 1) % args.query_every == 0:
+                tq = time.time()
+                svc.query(f"t{r % args.groups}", "components").unwrap()
+                lat.append(time.time() - tq)
+        rejected = sum(f.result().status == "rejected" for f in futs)
+        dt = time.time() - t0
+        stats = dict(svc.stats)
+        if args.snapshot:
+            step = svc.snapshot(args.snapshot)
+            print(f"snapshot step {step} -> {args.snapshot}")
+
+    folds = max(stats["ingest_folds"], 1)
+    print(f"tenants={args.tenants} groups={args.groups} "
+          f"created in {t_create:.2f}s")
+    print(f"{args.requests} ingest requests ({stats['ingest_rows']} rows) in "
+          f"{dt:.2f}s = {args.requests / dt:.0f} req/s, "
+          f"{stats['ingest_rows'] / dt:.0f} rows/s; "
+          f"{stats['ingest_requests'] / folds:.1f} requests/fold "
+          f"(micro-batching), {rejected} rejected")
+    if lat:
+        q = np.quantile(np.array(lat) * 1e3, [0.5, 0.99])
+        print(f"{len(lat)} queries (lazy finalize): p50={q[0]:.1f}ms "
+              f"p99={q[1]:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,11 @@ retired per-request when its budget is exhausted — finished slots continue to
 decode but their outputs are masked (the standard static-batch serving
 pattern; per-slot cache offsets for true continuous batching would need a
 vectorized cur_len in the decode path, noted as future work in DESIGN.md).
+
+The same queue→coalesce→one-jitted-step idiom serves the sketching side:
+``repro.sketchserve.SketchService`` micro-batches same-group ingest requests
+into a single sketch+fold step, the estimator analogue of this engine's
+wave-batched decode.
 """
 from __future__ import annotations
 

@@ -1,0 +1,30 @@
+"""Sketch-as-a-service: online multi-tenant estimator serving.
+
+The subsystem that turns the one-shot ``fit`` APIs into a long-lived server:
+an async request queue (:class:`SketchService`) accepting ingest / query /
+admin requests, a micro-batching worker loop that coalesces same-group
+ingest into one jitted sketch+fold step, per-tenant execution
+:class:`~repro.api.Plan`\\ s with admission control, lazy finalization, and
+crash-safe snapshot/restore over :mod:`repro.train.checkpoint`.
+
+Start here: :mod:`repro.sketchserve.service` (the model and the loop),
+:mod:`repro.sketchserve.protocol` (the request/response types),
+:mod:`repro.sketchserve.snapshot` (what persists and why restore is
+bit-identical). ``examples/sketch_service.py`` is the guided tour;
+``launch/sketch_serve.py`` drives a synthetic workload end to end.
+"""
+from repro.sketchserve.protocol import (AdminRequest, IngestRequest,
+                                        QueryRequest, Response)
+from repro.sketchserve.service import ESTIMATORS, SketchService
+from repro.sketchserve.snapshot import restore_service, save_service
+
+__all__ = [
+    "AdminRequest",
+    "ESTIMATORS",
+    "IngestRequest",
+    "QueryRequest",
+    "Response",
+    "SketchService",
+    "restore_service",
+    "save_service",
+]

@@ -1,0 +1,62 @@
+"""Request/response types of the sketch-serving queue.
+
+Three request families, one response shape:
+
+- :class:`IngestRequest` — rows for a tenant (or a whole co-registered
+  group); the worker loop coalesces contiguous same-group ingests into one
+  sketch+fold step (micro-batching).
+- :class:`QueryRequest` — read against live estimator state: ``transform`` /
+  ``predict`` (row payloads), ``components`` / ``centers`` / ``mean`` /
+  ``cov`` / ``stats`` (fitted attributes). Queries trigger lazy finalization.
+- :class:`AdminRequest` — tenant lifecycle (``create_tenant`` /
+  ``delete_tenant``), ``snapshot``, and ``refine``.
+
+Every request resolves to a :class:`Response` with ``status`` ∈
+{"ok", "rejected", "error"} — "rejected" is admission-control backpressure
+(full queue or per-group pending-row cap: resubmit later), "error" is a
+request that was admitted but failed (unknown tenant, no data yet, bad op).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class IngestRequest:
+    """Rows for ``target`` (a tenant id or a group id — a tenant id addresses
+    its whole group: co-registered tenants fold the same shared sketches)."""
+
+    target: str
+    rows: Any                      # (b, p) array-like
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    tenant: str
+    op: str                        # transform|predict|components|centers|mean|cov|stats
+    x: Any | None = None           # row payload for transform/predict
+
+
+@dataclasses.dataclass
+class AdminRequest:
+    op: str                        # create_tenant|delete_tenant|snapshot|refine
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Response:
+    status: str                    # ok | rejected | error
+    result: Any = None
+    error: str | None = None
+    info: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def unwrap(self) -> Any:
+        """``result`` if ok, else raise (rejected and failed requests alike)."""
+        if not self.ok:
+            raise RuntimeError(f"request {self.status}: {self.error}")
+        return self.result

@@ -1,0 +1,515 @@
+"""SketchService — the online estimator-serving loop.
+
+The sketching analogue of the LM engine in :mod:`repro.serve.engine`, built on
+the same shared-queue idiom: callers ``submit()`` requests into one bounded
+``queue.Queue`` and get back a ``concurrent.futures.Future``; a single worker
+thread drains the queue in micro-batches. Where the LM engine coalesces
+decode steps across sequences, this loop coalesces *ingest*: contiguous
+same-group :class:`~repro.sketchserve.protocol.IngestRequest` rows drained in
+one sweep are concatenated and folded through ONE
+``SketchCursor.partial_fit`` call — one jitted sketch+fold step instead of
+one per request. Coalescing changes chunk boundaries (hence which
+(step, shard) mask key covers which rows) relative to one-request-per-fold,
+which the estimator contract explicitly permits — every chunking is a valid
+estimate; the batching is pure throughput.
+
+Tenancy. A *tenant* is one estimator (mean / cov / pca / kmeans) with an id.
+Tenants created with the same ``group=`` co-register on one shared
+:class:`~repro.api.estimators.SketchCursor` — the :func:`repro.api.fit_many`
+discipline — so an ingest addressed to the group compresses rows ONCE and
+fans the sketch to every member (their plans must agree on the sketch
+geometry fields and share a key, enforced by the same check ``fit_many``
+runs). A tenant created without ``group=`` gets a private one-member group
+under its own id. Per-tenant live state is sketch-sized — the reducer's
+moment/lowrank state plus any retained sketch parts — never the (p, p)
+accumulator on the lowrank path, which is what lets thousands of tenants
+stay resident.
+
+Admission control. Two bounds, both answered with a ``status="rejected"``
+Response instead of unbounded buffering: the queue itself
+(``max_queue`` requests; ``submit`` never blocks) and a per-group cap on
+rows admitted but not yet folded (``max_pending_rows``). Rejected ingest is
+the backpressure signal — the producer resubmits later.
+
+Lazy finalization. Ingest only folds; ``finalize()`` (eigendecompositions,
+Lloyd iterations) runs when a query arrives for a tenant whose folded row
+count moved since it last finalized. A tenant that is written often and read
+rarely never pays finalize on the write path.
+
+Because all ingest funnels through the one worker thread, the cursor sees a
+single producer and the fold order is exactly queue order — results are
+deterministic given the request sequence (see the thread-safety contract on
+:class:`~repro.api.estimators.SketchCursor`).
+"""
+from __future__ import annotations
+
+import queue
+import re
+import threading
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+
+from repro.api.estimators import (SketchCursor, SparsifiedCov, SparsifiedKMeans,
+                                  SparsifiedMean, SparsifiedPCA, as_key)
+from repro.api.fused import _check_consumer
+from repro.api.plan import Plan
+from repro.sketchserve.protocol import (AdminRequest, IngestRequest,
+                                        QueryRequest, Response)
+
+ESTIMATORS = {
+    "mean": SparsifiedMean,
+    "cov": SparsifiedCov,
+    "pca": SparsifiedPCA,
+    "kmeans": SparsifiedKMeans,
+}
+
+_ID_RE = re.compile(r"^[A-Za-z0-9._-]+$")
+_STOP = object()
+
+
+def _ok(result=None, **info) -> Response:
+    return Response("ok", result=result, info=info)
+
+
+def _err(msg: str) -> Response:
+    return Response("error", error=msg)
+
+
+def _rejected(msg: str) -> Response:
+    return Response("rejected", error=msg)
+
+
+class _Tenant:
+    __slots__ = ("tid", "kind", "params", "est", "group", "finalized_rows",
+                 "finalize_count")
+
+    def __init__(self, tid, kind, params, est, group):
+        self.tid, self.kind, self.params = tid, kind, params
+        self.est, self.group = est, group
+        self.finalized_rows = -1     # cursor.count at last finalize (lazy)
+        self.finalize_count = 0
+
+
+class _Group:
+    """One shared compression pass + the tenants riding it."""
+
+    __slots__ = ("gid", "plan", "key", "cursor", "tenants", "pending_rows",
+                 "retain_ingest", "retained")
+
+    def __init__(self, gid: str, plan: Plan, key, retain_ingest: bool):
+        self.gid = gid
+        self.plan = plan
+        self.key = as_key(key)
+        self.cursor = SketchCursor(plan, self.key)
+        self.tenants: dict[str, _Tenant] = {}
+        self.pending_rows = 0        # admitted but not yet folded (admission cap)
+        self.retain_ingest = bool(retain_ingest)
+        self.retained: list[np.ndarray] = []  # fold-order chunks, for refine replay
+
+    def fold(self, rows: np.ndarray, scan: str) -> None:
+        """One sketch+fold step over a coalesced row block, optionally through
+        the cursor's jitted lax.scan burst path when the block spans at least
+        one full (batch_size × n_shards) step and every tenant folds in-scan."""
+        cur = self.cursor
+        use_scan = (scan == "auto"
+                    and rows.shape[0] >= cur.plan.batch_size * cur.plan.n_shards
+                    and cur.scan_descs() is not None)
+        cur.scan = use_scan
+        try:
+            cur.partial_fit(rows)
+        finally:
+            cur.scan = False
+        if self.retain_ingest:
+            self.retained.append(np.asarray(rows))
+
+
+def _state_nbytes(t: _Tenant) -> int:
+    """Resident fold-state bytes of one tenant (reducer moment/lowrank state,
+    retained sketch parts, K-means state) — what the serve bench asserts stays
+    sketch-sized and row-count-independent, never (p, p)."""
+    r = t.est._reducer
+    trees = []
+    if r is not None:
+        trees.append(r.state)
+        trees.append(list(r.parts))
+    for attr in ("_km_state", "_km_centers"):
+        trees.append(getattr(t.est, attr, None))
+    return sum(int(leaf.nbytes) for leaf in jax.tree_util.tree_leaves(trees)
+               if hasattr(leaf, "nbytes"))
+
+
+class SketchService:
+    """Async multi-tenant sketch server. See the module docstring for the
+    model; the short version:
+
+    >>> with SketchService() as svc:
+    ...     svc.create_tenant("p", "pca", plan=plan, key=7, n_components=4,
+    ...                       group="g")
+    ...     svc.create_tenant("k", "kmeans", plan=plan, key=7, k=8, group="g")
+    ...     svc.ingest("g", rows).result()          # one pass feeds both
+    ...     parts = svc.query("p", "components").unwrap()
+
+    ``submit`` is the non-blocking core (returns a Future); ``call`` /
+    ``query`` / ``ingest`` / ``create_tenant`` / ... are sugar over it. All
+    state mutation happens on the worker thread; admin helpers block until
+    their request is processed so a subsequent ingest always sees the tenant.
+    """
+
+    def __init__(self, *, max_queue: int = 1024, max_batch: int = 64,
+                 max_pending_rows: int = 1_000_000, scan: str = "auto"):
+        if scan not in ("auto", "never"):
+            raise ValueError(f"scan must be 'auto' or 'never', got {scan!r}")
+        self.max_batch = int(max_batch)
+        self.max_pending_rows = int(max_pending_rows)
+        self.scan = scan
+        self._queue: queue.Queue = queue.Queue(maxsize=int(max_queue))
+        self._groups: dict[str, _Group] = {}
+        self._tenants: dict[str, _Tenant] = {}
+        self._reg_lock = threading.Lock()   # registry reads from submit threads
+        self._thread: threading.Thread | None = None
+        self._snap_step = 0
+        self.stats = {"requests": 0, "ingest_requests": 0, "ingest_folds": 0,
+                      "ingest_rows": 0, "rejected": 0, "queries": 0,
+                      "finalizes": 0}
+
+    # ------------------------------------------------------------ lifecycle --
+
+    def start(self) -> "SketchService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="sketchserve-worker")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain every already-submitted request, then stop the worker."""
+        if self._thread is None:
+            return
+        self._queue.put((_STOP, None))
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "SketchService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --------------------------------------------------------------- submit --
+
+    def submit(self, req) -> Future:
+        """Enqueue one request; never blocks. The Future resolves to a
+        :class:`Response` — including ``status="rejected"`` when admission
+        control (full queue / per-group pending-row cap) turns it away."""
+        fut: Future = Future()
+        group = None
+        n = 0
+        if isinstance(req, IngestRequest):
+            rows = np.asarray(req.rows)
+            if rows.ndim != 2:
+                fut.set_result(_err(f"ingest rows must be (b, p), got shape "
+                                    f"{rows.shape}"))
+                return fut
+            req.rows = rows
+            n = int(rows.shape[0])
+            with self._reg_lock:
+                group = self._resolve_group(req.target)
+                if group is None:
+                    fut.set_result(_err(f"unknown tenant/group {req.target!r}"))
+                    return fut
+                if group.pending_rows + n > self.max_pending_rows:
+                    self.stats["rejected"] += 1
+                    fut.set_result(_rejected(
+                        f"group {group.gid!r} has {group.pending_rows} rows "
+                        f"pending (cap {self.max_pending_rows}); retry after "
+                        "the backlog folds"))
+                    return fut
+                group.pending_rows += n
+                req.target = group.gid   # normalize: maximal worker coalescing
+        elif isinstance(req, AdminRequest):
+            if self._thread is None:   # setup phase: no worker to serialize on
+                fut.set_result(self._handle_admin(req))
+                return fut
+        elif not isinstance(req, QueryRequest):
+            fut.set_result(_err(f"unknown request type {type(req).__name__}"))
+            return fut
+        try:
+            self._queue.put_nowait((req, fut))
+        except queue.Full:
+            if group is not None:
+                with self._reg_lock:
+                    group.pending_rows -= n
+            self.stats["rejected"] += 1
+            fut.set_result(_rejected(
+                f"request queue full ({self._queue.maxsize}); retry later"))
+        return fut
+
+    def call(self, req, timeout: float | None = 60.0) -> Response:
+        """submit + wait."""
+        return self.submit(req).result(timeout)
+
+    # sugar ------------------------------------------------------------------
+
+    def ingest(self, target: str, rows) -> Future:
+        return self.submit(IngestRequest(target, rows))
+
+    def query(self, tenant: str, op: str, x=None,
+              timeout: float | None = 60.0) -> Response:
+        return self.call(QueryRequest(tenant, op, x), timeout)
+
+    def create_tenant(self, tid: str, kind: str, *, plan: Plan | None = None,
+                      key=0, group: str | None = None,
+                      retain_ingest: bool = False, **params) -> Response:
+        resp = self.call(AdminRequest("create_tenant", dict(
+            tid=tid, kind=kind, plan=plan, key=key, group=group,
+            retain_ingest=retain_ingest, params=params)))
+        resp.unwrap()   # raise on error — creation must not fail silently
+        return resp
+
+    def delete_tenant(self, tid: str) -> None:
+        self.call(AdminRequest("delete_tenant", dict(tid=tid))).unwrap()
+
+    def snapshot(self, path: str) -> int:
+        """Checkpoint every live group/tenant (atomic-rename protocol of
+        :mod:`repro.train.checkpoint`); returns the snapshot step."""
+        return self.call(AdminRequest("snapshot", dict(path=path)),
+                         timeout=None).unwrap()
+
+    def refine(self, tenant: str, x=None, passes: int | None = None, *,
+               tol: float | None = None, max_passes: int = 16) -> Response:
+        """Second-pass replay refinement on one tenant, in the worker loop (so
+        it serializes against ingest). ``x=None`` replays the group's retained
+        ingest — requires ``retain_ingest=True`` at tenant creation."""
+        return self.call(AdminRequest("refine", dict(
+            tenant=tenant, x=x, passes=passes, tol=tol,
+            max_passes=max_passes)), timeout=None)
+
+    def tenants(self) -> list[str]:
+        with self._reg_lock:
+            return sorted(self._tenants)
+
+    # ---------------------------------------------------------- worker loop --
+
+    def _loop(self) -> None:
+        stop = False
+        while not stop:
+            items = [self._queue.get()]
+            while len(items) < self.max_batch:
+                try:
+                    items.append(self._queue.get_nowait())
+                except queue.Empty:
+                    break
+            batch = []
+            for req, fut in items:
+                if req is _STOP:
+                    stop = True       # drain this batch, fail later arrivals
+                elif stop:
+                    fut.set_result(_err("service stopped"))
+                else:
+                    batch.append((req, fut))
+            if batch:
+                self._process(batch)
+            for _ in items:
+                self._queue.task_done()
+
+    def _process(self, batch) -> None:
+        """Serve one drained micro-batch in queue order, coalescing each
+        contiguous run of same-group ingests into one fold. (Exposed for
+        tests: drives the same path the worker thread runs.)"""
+        pending: dict[str, list] = {}
+        for req, fut in batch:
+            if isinstance(req, IngestRequest):
+                pending.setdefault(req.target, []).append((req, fut))
+                continue
+            self._flush_ingest(pending)   # queries/admin see all prior ingest
+            pending = {}
+            self.stats["requests"] += 1
+            if isinstance(req, QueryRequest):
+                fut.set_result(self._handle_query(req))
+            else:
+                fut.set_result(self._handle_admin(req))
+        self._flush_ingest(pending)
+
+    def _flush_ingest(self, pending: dict[str, list]) -> None:
+        for target, items in pending.items():
+            self.stats["requests"] += len(items)
+            self.stats["ingest_requests"] += len(items)
+            with self._reg_lock:
+                group = self._resolve_group(target)
+            if group is None:   # deleted between submit and drain
+                for _, fut in items:
+                    fut.set_result(_err(f"unknown tenant/group {target!r}"))
+                continue
+            blocks = [req.rows for req, _ in items]
+            rows = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+            n = int(rows.shape[0])
+            try:
+                group.fold(rows, self.scan)
+                self.stats["ingest_folds"] += 1
+                self.stats["ingest_rows"] += n
+                resp = [_ok(int(b.shape[0]), group=group.gid,
+                            coalesced=len(items), count=group.cursor.count)
+                        for b in blocks]
+            except Exception as e:  # a bad block poisons its whole coalesced run
+                resp = [_err(f"ingest failed: {e}")] * len(items)
+            finally:
+                with self._reg_lock:
+                    group.pending_rows -= n
+            for (_, fut), r in zip(items, resp):
+                fut.set_result(r)
+
+    # -------------------------------------------------------------- queries --
+
+    def _handle_query(self, req: QueryRequest) -> Response:
+        self.stats["queries"] += 1
+        t = self._tenants.get(req.tenant)
+        if t is None:
+            return _err(f"unknown tenant {req.tenant!r}")
+        cur = t.group.cursor
+        if req.op == "stats":
+            return _ok({"kind": t.kind, "group": t.group.gid,
+                        "rows": cur.count, "chunks": cur.chunk,
+                        "n_sketches": cur.n_sketches,
+                        "pending_rows": t.group.pending_rows,
+                        "finalized_rows": t.finalized_rows,
+                        "finalize_count": t.finalize_count,
+                        "state_bytes": _state_nbytes(t)})
+        if cur.count == 0:
+            return _err(f"tenant {req.tenant!r} has no ingested rows yet")
+        if t.finalized_rows != cur.count:   # lazy: only when state moved
+            try:
+                t.est.finalize()
+            except Exception as e:
+                return _err(f"finalize failed: {e}")
+            t.finalized_rows = cur.count
+            t.finalize_count += 1
+            self.stats["finalizes"] += 1
+        try:
+            return self._read_fitted(t, req.op, req.x)
+        except AttributeError:
+            return _err(f"op {req.op!r} does not apply to a {t.kind!r} tenant")
+        except Exception as e:
+            return _err(f"query {req.op!r} failed: {e}")
+
+    def _read_fitted(self, t: _Tenant, op: str, x) -> Response:
+        est = t.est
+        if op == "mean":
+            return _ok(np.asarray(est.mean_))
+        if op == "cov":
+            return _ok(np.asarray(est.cov_))
+        if op == "components":
+            return _ok({"components": np.asarray(est.components_),
+                        "explained_variance": np.asarray(est.explained_variance_)})
+        if op == "centers":
+            return _ok(np.asarray(est.centers_))
+        if op == "transform":
+            if x is None:
+                return _err("transform needs an x payload")
+            return _ok(np.asarray(est.transform(np.asarray(x))))
+        if op == "predict":
+            if x is None:
+                return _err("predict needs an x payload")
+            return _ok(np.asarray(est.predict(np.asarray(x))))
+        return _err(f"unknown query op {op!r} (transform|predict|components|"
+                    "centers|mean|cov|stats)")
+
+    # ---------------------------------------------------------------- admin --
+
+    def _handle_admin(self, req: AdminRequest) -> Response:
+        p = req.params
+        try:
+            if req.op == "create_tenant":
+                return self._create_tenant(**p)
+            if req.op == "delete_tenant":
+                return self._delete_tenant(p["tid"])
+            if req.op == "snapshot":
+                from repro.sketchserve import snapshot as snap_mod
+                self._snap_step += 1
+                snap_mod.save_service(self, p["path"], step=self._snap_step)
+                return _ok(self._snap_step)
+            if req.op == "refine":
+                return self._refine(**p)
+            return _err(f"unknown admin op {req.op!r}")
+        except Exception as e:
+            return _err(f"admin {req.op!r} failed: {e}")
+
+    def _create_tenant(self, tid, kind, plan, key, group, retain_ingest,
+                       params) -> Response:
+        if not _ID_RE.match(tid or ""):
+            return _err(f"tenant id {tid!r} must match {_ID_RE.pattern}")
+        if tid in self._tenants or tid in self._groups:
+            return _err(f"id {tid!r} already exists")
+        if kind not in ESTIMATORS:
+            return _err(f"unknown kind {kind!r} (one of {sorted(ESTIMATORS)})")
+        gid = group if group is not None else tid
+        if not _ID_RE.match(gid):
+            return _err(f"group id {gid!r} must match {_ID_RE.pattern}")
+        if gid in self._tenants and gid not in self._groups:
+            return _err(f"group id {gid!r} collides with a tenant id")
+        g = self._groups.get(gid)
+        if g is None:
+            if plan is None:
+                return _err(f"first tenant of group {gid!r} must carry a plan")
+            g = _Group(gid, plan, key, retain_ingest)
+        est = ESTIMATORS[kind](plan=plan or g.plan, key=key, **params)
+        # the fit_many co-registration check: shared sketch ⇒ shared geometry+key
+        _check_consumer(g.plan, est, len(g.tenants), g.key)
+        if g.cursor.count > 0:
+            return _err(f"group {gid!r} already ingested {g.cursor.count} rows;"
+                        " tenants must co-register before ingest starts (a late"
+                        " joiner would silently miss them)")
+        est._cursor = g.cursor
+        g.cursor.register(est)
+        t = _Tenant(tid, kind, dict(params), est, g)
+        with self._reg_lock:
+            g.tenants[tid] = t
+            self._groups[gid] = g
+            self._tenants[tid] = t
+        return _ok(tid, group=gid)
+
+    def _delete_tenant(self, tid) -> Response:
+        t = self._tenants.get(tid)
+        if t is None:
+            return _err(f"unknown tenant {tid!r}")
+        g = t.group
+        with self._reg_lock:
+            del self._tenants[tid]
+            del g.tenants[tid]
+            if t.est in g.cursor.consumers:
+                g.cursor.consumers.remove(t.est)
+            if not g.tenants:
+                del self._groups[g.gid]
+        return _ok(tid, group_deleted=not g.tenants)
+
+    def _refine(self, tenant, x, passes, tol, max_passes) -> Response:
+        t = self._tenants.get(tenant)
+        if t is None:
+            return _err(f"unknown tenant {tenant!r}")
+        g = t.group
+        if x is None:
+            if not g.retain_ingest:
+                return _err(f"group {g.gid!r} was created with "
+                            "retain_ingest=False and no x payload was given — "
+                            "nothing to replay")
+            if not g.retained:
+                return _err("no ingested rows to replay yet")
+            x = np.concatenate(g.retained)
+        if t.finalized_rows != g.cursor.count:
+            t.est.finalize()
+            t.finalized_rows = g.cursor.count
+            t.finalize_count += 1
+        t.est.refine(np.asarray(x), passes, tol=tol, max_passes=max_passes)
+        return _ok({"passes": int(getattr(t.est, "refine_passes_", 0)),
+                    "converged": bool(getattr(t.est, "refine_converged_", False))})
+
+    # -------------------------------------------------------------- helpers --
+
+    def _resolve_group(self, target: str) -> _Group | None:
+        """Tenant id or group id → group (caller holds _reg_lock)."""
+        t = self._tenants.get(target)
+        if t is not None:
+            return t.group
+        return self._groups.get(target)

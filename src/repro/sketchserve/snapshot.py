@@ -1,0 +1,138 @@
+"""Snapshot/restore of a live :class:`~repro.sketchserve.service.SketchService`.
+
+Rides the :mod:`repro.train.checkpoint` atomic-rename protocol
+(``save_arrays`` / ``load_arrays``: manifest.json + arrays.npz + ``latest``
+pointer), so a serving snapshot is crash-safe the same way a training
+checkpoint is. What is written is exactly what a restarted process cannot
+re-derive:
+
+- per group: the Plan (as JSON; the ``mesh`` field must be None — an explicit
+  device mesh is a process-local object), the shared PRNG key, the cursor's
+  replay counters (``chunk`` / ``count`` / ``chunk_rows`` / ``n_sketches``)
+  and dimensionality ``p``, plus the retained ingest buffer when the group
+  keeps one for refine replay;
+- per tenant: kind, constructor params, its own Plan when it differs from the
+  group's (co-registered tenants may fold differently — only the sketch
+  geometry is shared), and the estimator's fold state via
+  ``SketchedEstimator._export_state``.
+
+NOT written: the SketchSpec (re-derived deterministically from
+(plan, key, p) by ``cursor.ensure_spec``) and every finalized attribute
+(recomputed lazily at the next query). Restore therefore resumes
+*bit-identically*: the restored cursor continues at the same chunk index, so
+the next ingested chunk folds under the same (step, shard) mask key it would
+have in the original process, and queries before/after the round-trip agree
+exactly — asserted by ``benchmarks/serve_bench.py`` and
+``tests/test_sketchserve.py``.
+
+Mid-step states (a sharded reducer holding un-psum'd shard sketches, a
+K-means fold between apply boundaries) refuse to snapshot with a clear error
+— ingest to a step boundary first.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import Plan
+from repro.train import checkpoint
+
+
+def plan_to_json(plan: Plan) -> dict:
+    """Plan → JSON-safe dict. Round-trips through :func:`plan_from_json`."""
+    if plan.mesh is not None:
+        raise ValueError(
+            "a Plan holding an explicit mesh cannot snapshot (device meshes "
+            "are process-local); build the plan with mesh=None — the sharded "
+            "backend auto-builds its mesh at first use")
+    d = dataclasses.asdict(plan)
+    d["dtype"] = str(np.dtype(plan.dtype))
+    return d
+
+
+def plan_from_json(d: dict) -> Plan:
+    return Plan(**d)
+
+
+def save_service(svc, path: str, step: int = 1) -> None:
+    """Write one checkpoint step of every live group/tenant under ``path``."""
+    arrays: dict[str, np.ndarray] = {}
+    groups: dict[str, dict] = {}
+    for gid, g in svc._groups.items():
+        gplan = plan_to_json(g.plan)
+        ginfo: dict = {
+            "plan": gplan,
+            "p": None if g.cursor.spec is None else int(g.cursor.spec.p),
+            "chunk": int(g.cursor.chunk),
+            "count": int(g.cursor.count),
+            "n_sketches": int(g.cursor.n_sketches),
+            "retain_ingest": g.retain_ingest,
+            "tenants": {},
+        }
+        arrays[f"{gid}/__key__"] = np.asarray(g.key)
+        arrays[f"{gid}/__chunk_rows__"] = np.asarray(g.cursor.chunk_rows,
+                                                     dtype=np.int64)
+        if g.retained:
+            arrays[f"{gid}/__retained__"] = np.concatenate(
+                [np.asarray(c) for c in g.retained])
+            arrays[f"{gid}/__retained_rows__"] = np.array(
+                [c.shape[0] for c in g.retained], np.int64)
+        for tid, t in g.tenants.items():
+            tplan = plan_to_json(t.est.plan)
+            ginfo["tenants"][tid] = {
+                "kind": t.kind,
+                "params": t.params,
+                "plan": None if tplan == gplan else tplan,
+            }
+            if g.cursor.spec is not None:
+                for name, v in t.est._export_state().items():
+                    arrays[f"{gid}/{tid}/{name}"] = np.asarray(v)
+        groups[gid] = ginfo
+    checkpoint.save_arrays(path, step, arrays,
+                           extra={"format": "sketchserve-v1", "groups": groups})
+
+
+def restore_service(path: str, **service_kwargs):
+    """Rebuild a :class:`SketchService` from the latest snapshot under
+    ``path``. Returned NOT started — call ``start()`` (or use ``with``) before
+    submitting; ``service_kwargs`` override queue/batch/admission settings."""
+    from repro.sketchserve.service import SketchService
+
+    arrays, extra = checkpoint.load_arrays(path)
+    if extra.get("format") != "sketchserve-v1":
+        raise ValueError(f"{path} is not a sketchserve snapshot "
+                         f"(format={extra.get('format')!r})")
+    svc = SketchService(**service_kwargs)
+    for gid, ginfo in extra["groups"].items():
+        gplan = plan_from_json(ginfo["plan"])
+        key = jnp.asarray(arrays[f"{gid}/__key__"])
+        for tid, tinfo in ginfo["tenants"].items():
+            tplan = (plan_from_json(tinfo["plan"]) if tinfo["plan"] is not None
+                     else gplan)
+            resp = svc._create_tenant(tid, tinfo["kind"], tplan, key, gid,
+                                      ginfo["retain_ingest"],
+                                      dict(tinfo["params"]))
+            if not resp.ok:
+                raise RuntimeError(f"restore of tenant {tid!r}: {resp.error}")
+        g = svc._groups[gid]
+        if f"{gid}/__retained__" in arrays:
+            flat = arrays[f"{gid}/__retained__"]
+            i = 0
+            for n in arrays[f"{gid}/__retained_rows__"].tolist():
+                g.retained.append(flat[i:i + n])
+                i += n
+        if ginfo["p"] is not None:
+            cur = g.cursor
+            cur.ensure_spec(int(ginfo["p"]))   # spec re-derives; binds reducers
+            cur.chunk = int(ginfo["chunk"])
+            cur.count = int(ginfo["count"])
+            cur.n_sketches = int(ginfo["n_sketches"])
+            cur.chunk_rows = arrays[f"{gid}/__chunk_rows__"].tolist()
+            for tid, t in g.tenants.items():
+                prefix = f"{gid}/{tid}/"
+                sub = {k[len(prefix):]: v for k, v in arrays.items()
+                       if k.startswith(prefix)}
+                t.est._import_state(sub)
+    return svc

@@ -4,7 +4,10 @@
                 jitted, optionally shard_map'd loop.
 - accumulators: constant-memory delta/apply algebra (Thm-4 mean, Thm-6 cov,
                 mini-batch streaming sparsified K-means).
-- sharded:      one-shot shard_map reductions used by repro.core.distributed.
+- sharded:      one-shot shard_map reductions + the distributed-data entry
+                points (shard_rows / sketch_sharded / sharded_kmeans).
+- queued:       QueueSource — live pushed chunks adapted to the
+                (seed, step, shard) source contract.
 """
 from repro.stream.accumulators import (  # noqa: F401
     KMeansState,
@@ -24,4 +27,12 @@ from repro.stream.engine import (  # noqa: F401
     batch_key,
     normalize_source,
 )
-from repro.stream.sharded import sharded_cov, sharded_mean, sharded_moments  # noqa: F401
+from repro.stream.queued import QueueSource  # noqa: F401
+from repro.stream.sharded import (  # noqa: F401
+    shard_rows,
+    sharded_cov,
+    sharded_kmeans,
+    sharded_mean,
+    sharded_moments,
+    sketch_sharded,
+)

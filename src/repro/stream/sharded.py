@@ -4,8 +4,9 @@ These are the batch (non-streaming) entry points of the same delta/psum algebra
 the StreamEngine loops: each shard computes its local accumulator delta from its
 rows, and the only collective is one psum of the fixed-size delta — (p,) for the
 mean, (p, p) for the covariance — regardless of how many rows each shard holds.
-repro.core.distributed delegates here, replacing its earlier global-view-jit
-wrappers with explicit collectives.
+(These absorbed the former ``repro.core.distributed`` shims: this module is
+the one home of the distributed one-pass setting, ``repro.api`` the front
+door over it.)
 
 The ``repro.api`` sharded backend also streams THROUGH :func:`sharded_moments`:
 its moment reducer buffers one step's shard sketches, reduces them with a
@@ -121,3 +122,39 @@ def sharded_cov(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
     """Thm-6 estimator with explicit psum accumulation (cross-shard traffic: (p,p))."""
     st = sharded_moments(s, mesh, axes, track_cov=True)
     return acc.moment_finalize_cov(st, s.m)
+
+
+# --------------------------------------------- distributed-data entry points --
+# Absorbed from the retired repro.core.distributed module (paper §I's
+# distributed setting): place rows on the mesh, sketch them in place, and run
+# the sparse Lloyd solver inside the mesh context so its many small
+# reductions lower to the same psums.
+
+
+def shard_rows(x: jax.Array, mesh, axes=("data",)) -> jax.Array:
+    """Place (n, …) data row-sharded over the mesh's data axes."""
+    from jax.sharding import NamedSharding
+
+    spec = P(axes if len(axes) > 1 else axes[0], *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def sketch_sharded(x: jax.Array, spec, mesh, axes=("data",)) -> SparseRows:
+    """One-pass compress of row-sharded data; output stays row-sharded."""
+    from repro.core import sketch
+
+    xs = shard_rows(x, mesh, axes)
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+        return sketch.sketch(xs, spec)
+
+
+def sharded_kmeans(s: SparseRows, k: int, key, mesh, n_init: int = 3,
+                   max_iter: int = 50, tol: float = 1e-6):
+    """Sparsified K-means on sharded sketches (assignment stays local; the
+    center/count scatter-adds psum over the data axes)."""
+    from repro.core import kmeans
+
+    with mesh:
+        return kmeans.sparse_kmeans_core(
+            s.values, s.indices, s.p, k, key, n_init=n_init, max_iter=max_iter,
+            tol=tol)

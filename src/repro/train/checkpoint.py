@@ -42,9 +42,26 @@ def save(ckpt_dir: str, step: int, state: Any, extra: dict | None = None,
     # materialize on host BEFORE returning (state may be donated by the next step)
     arrays = _flatten(state)
     treedef = jax.tree_util.tree_structure(state)
+    _save_arrays(ckpt_dir, step, arrays, extra, async_, keep_last,
+                 treedef=str(treedef))
+
+
+def save_arrays(ckpt_dir: str, step: int, arrays: dict[str, Any],
+                extra: dict | None = None, async_: bool = False,
+                keep_last: int = 3):
+    """Snapshot a flat ``{name: array}`` dict under the same atomic-rename
+    protocol as :func:`save` — for callers (``repro.sketchserve``) whose state
+    has no fixed pytree template to ``restore`` against; pair with
+    :func:`load_arrays`, which needs no ``like``."""
+    _save_arrays(ckpt_dir, step, {k: np.asarray(v) for k, v in arrays.items()},
+                 extra, async_, keep_last)
+
+
+def _save_arrays(ckpt_dir: str, step: int, arrays: dict, extra: dict | None,
+                 async_: bool, keep_last: int, treedef: str | None = None):
     meta = {
         "step": step,
-        "treedef": str(treedef),
+        "treedef": treedef,
         "keys": list(arrays.keys()),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
@@ -95,6 +112,19 @@ def latest_step_dir(ckpt_dir: str) -> str | None:
         return None
     with open(ptr) as f:
         return os.path.join(ckpt_dir, f.read().strip())
+
+
+def load_arrays(ckpt_dir: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Manifest-driven load of the latest snapshot as a flat ``{name: array}``
+    dict + its ``extra`` — no template required (the :func:`save_arrays`
+    counterpart). Raises FileNotFoundError if no checkpoint exists."""
+    d = latest_step_dir(ckpt_dir)
+    if d is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    return {k: data[k] for k in meta["keys"]}, meta.get("extra", {})
 
 
 def restore(ckpt_dir: str, like: Any, shardings: Any | None = None) -> tuple[Any, dict]:

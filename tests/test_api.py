@@ -518,24 +518,25 @@ def test_grad_compressor_stateful_front_door():
     np.testing.assert_array_equal(np.asarray(g1["a"]), np.asarray(g1b["a"]))
 
 
-# ----------------------------------------------------- shims still work -----
+# ----------------------------------------- pre-API entry points still work --
 
 
 def test_preexisting_entry_points_import_and_run():
-    """Every pre-API public entry point still imports and runs via its shim."""
-    from repro.core import distributed as dist
+    """Every pre-API public entry point still imports and runs from its home
+    (the distributed one-pass reductions live in repro.stream.sharded)."""
     from repro.core import estimators, kmeans as km_mod, pca as pca_mod
+    from repro.stream import sharded as dist
 
     x = jax.random.normal(KEY, (64, 32))
     spec = sketch.make_spec(32, jax.random.PRNGKey(1), gamma=0.5)
     s = sketch.sketch(x, spec)
     mesh = jax.make_mesh((1,), ("data",))
-    np.testing.assert_allclose(np.asarray(dist.distributed_mean(s, mesh)),
+    np.testing.assert_allclose(np.asarray(dist.sharded_mean(s, mesh)),
                                np.asarray(estimators.mean_estimator(s)), atol=1e-5)
-    np.testing.assert_allclose(np.asarray(dist.distributed_cov(s, mesh)),
+    np.testing.assert_allclose(np.asarray(dist.sharded_cov(s, mesh)),
                                np.asarray(estimators.cov_estimator(s)), atol=1e-4)
-    mu, a, obj, it = dist.distributed_kmeans(s, 3, jax.random.PRNGKey(2), mesh,
-                                             n_init=2, max_iter=10)
+    mu, a, obj, it = dist.sharded_kmeans(s, 3, jax.random.PRNGKey(2), mesh,
+                                         n_init=2, max_iter=10)
     assert mu.shape == (3, 32)
     # batch_key is importable from its historical home too
     from repro.stream import batch_key as bk

@@ -28,7 +28,7 @@ def test_sharded_estimators_match_single_device():
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch.mesh import make_host_mesh
         from repro.core import estimators, sketch
-        from repro.core import distributed as dist
+        from repro.stream import sharded as dist
 
         mesh = make_host_mesh(4, 2)
         key = jax.random.PRNGKey(0)
@@ -40,8 +40,8 @@ def test_sharded_estimators_match_single_device():
         cov_single = estimators.cov_estimator(s_single)
 
         s_shard = dist.sketch_sharded(x, spec, mesh, axes=("data",))
-        mean_d = dist.distributed_mean(s_shard, mesh)
-        cov_d = dist.distributed_cov(s_shard, mesh)
+        mean_d = dist.sharded_mean(s_shard, mesh)
+        cov_d = dist.sharded_cov(s_shard, mesh)
         np.testing.assert_allclose(np.asarray(mean_d), np.asarray(mean_single), atol=1e-5)
         np.testing.assert_allclose(np.asarray(cov_d), np.asarray(cov_single), atol=1e-3)
         print("estimators-match OK")
@@ -60,7 +60,7 @@ def test_distributed_kmeans_matches():
         from scipy.optimize import linear_sum_assignment
         from repro.launch.mesh import make_host_mesh
         from repro.core import kmeans as km, sketch
-        from repro.core import distributed as dist
+        from repro.stream import sharded as dist
 
         mesh = make_host_mesh(8, 1)
         key = jax.random.PRNGKey(0)
@@ -73,7 +73,7 @@ def test_distributed_kmeans_matches():
         mu1, a1, o1, _ = km.sparse_kmeans_core(s.values, s.indices, s.p, k, jax.random.PRNGKey(4))
         s_d = dist.sketch_sharded(x, spec, mesh)
         assert bool(jnp.all(s.values == s_d.values)) and bool(jnp.all(s.indices == s_d.indices))
-        mu2, a2, o2, _ = dist.distributed_kmeans(s_d, k, jax.random.PRNGKey(4), mesh)
+        mu2, a2, o2, _ = dist.sharded_kmeans(s_d, k, jax.random.PRNGKey(4), mesh)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4)
         a1, a2 = np.asarray(a1), np.asarray(a2)
         conf = np.zeros((k, k))

@@ -393,6 +393,57 @@ def test_refine_validation_surface():
                                   np.asarray(whole.components_))
 
 
+# ------------------------------------------------------------ adaptive tol --
+
+
+def test_refine_tol_converges_and_matches_fixed_passes():
+    """refine(tol=) is pure loop control over the resuming single-pass
+    machinery: it stops at the first pass whose convergence measurement drops
+    to tol, and the result is bit-identical to refine(passes=q) for the q it
+    settled on."""
+    p, k, ell = 64, 3, 12
+    x = spiked(1000, p, k)
+    plan = Plan(backend="stream", gamma=0.5, batch_size=200,
+                cov_path="lowrank", rank=ell)
+    # tol sits above the f32 core-solve floor (~1e-3 subspace-change noise)
+    # but far below the one-pass gap (~0.05): the loop must stop right when
+    # the power iteration crosses it
+    tol = 2e-3
+    est = SparsifiedPCA(k, plan, key=3).fit_refine(x, tol=tol)
+    assert est.refine_converged_
+    q = est.refine_passes_
+    assert 1 <= q < 16
+    ch = np.asarray(est.refine_subspace_change_)
+    assert ch[-1] <= tol and np.all(ch[:-1] > tol)     # stopped at the FIRST hit
+    fixed = SparsifiedPCA(k, plan, key=3).fit_refine(x, passes=q)
+    np.testing.assert_array_equal(np.asarray(est.components_),
+                                  np.asarray(fixed.components_))
+    # an unreachable tol runs to max_passes and says so
+    capped = SparsifiedPCA(k, plan, key=3).fit_refine(x, tol=1e-30, max_passes=2)
+    assert not capped.refine_converged_ and capped.refine_passes_ == 2
+
+
+def test_refine_tol_kmeans_and_validation():
+    xc, _, _ = make_clusters(KEY, n=1500, p=16, k=4, sep=2.0, noise=0.9)
+    base = Plan(backend="stream", gamma=0.5, batch_size=100)
+    km = SparsifiedKMeans(4, base, key=5, algorithm="minibatch").fit_refine(
+        xc, tol=0.05)
+    assert km.refine_converged_
+    assert float(km.refine_reassign_fraction_[-1]) <= 0.05
+    # the signal costs a trailing measurement replay per pass — it must exist
+    with pytest.raises(ValueError, match="track_reassignments"):
+        SparsifiedKMeans(4, base, key=5, algorithm="minibatch",
+                         track_reassignments=False).fit_refine(xc, tol=0.05)
+    x = spiked(400, 32, 2)
+    plan_lr = Plan(gamma=0.5, batch_size=100, cov_path="lowrank", rank=8)
+    with pytest.raises(ValueError, match="not both"):
+        SparsifiedPCA(2, plan_lr, key=0).fit_refine(x, passes=2, tol=1e-3)
+    with pytest.raises(ValueError, match="tol"):
+        SparsifiedPCA(2, plan_lr, key=0).fit_refine(x, tol=0.0)
+    with pytest.raises(ValueError, match="max_passes"):
+        SparsifiedPCA(2, plan_lr, key=0).fit_refine(x, tol=1e-3, max_passes=0)
+
+
 # ------------------------------------------------- slow-lane acceptance -----
 
 

@@ -1,0 +1,350 @@
+"""The sketch-serving subsystem (repro.sketchserve): service lifecycle parity
+with direct fits, shared-sketch groups, micro-batch coalescing, admission
+control, lazy finalization, snapshot/restore bit-identity, the QueueSource
+stream adapter, and the SketchCursor concurrent-producer contract."""
+import queue
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (Plan, SparsifiedCov, SparsifiedKMeans, SparsifiedMean,
+                       SparsifiedPCA, fit_many)
+from repro.sketchserve import (IngestRequest, QueryRequest, SketchService,
+                               restore_service)
+from repro.stream import QueueSource
+from tests.conftest import make_clusters, spiked
+
+KEY = jax.random.PRNGKey(0)
+P = 32
+BS = 64
+
+
+def _plan(**kw):
+    base = dict(backend="stream", gamma=0.5, batch_size=BS)
+    base.update(kw)
+    return Plan(**base)
+
+
+def _x(n=256, p=P, seed=0):
+    return np.asarray(spiked(jax.random.PRNGKey(seed), n, p, 3),
+                      np.float32)
+
+
+# ------------------------------------------------------------ fit parity ----
+
+
+@pytest.mark.parametrize("kind,params,op,attr", [
+    ("mean", {}, "mean", "mean_"),
+    ("cov", {}, "cov", "cov_"),
+    ("pca", {"n_components": 3}, "components", None),
+    ("kmeans", {"k": 3}, "centers", "centers_"),
+])
+def test_served_tenant_matches_direct_fit(kind, params, op, attr):
+    """Queue → coalesce → fold → lazy finalize ends bit-identical to the
+    direct estimator fit: requests sized in batch_size multiples keep the
+    chunk boundaries (hence (step, shard) mask keys) exactly fit(x)'s.
+    scan='never' pins both sides to the same host fold loop."""
+    x = _x(256)
+    plan = _plan() if kind != "pca" else _plan(cov_path="lowrank", rank=12)
+    from repro.sketchserve.service import ESTIMATORS
+
+    direct = ESTIMATORS[kind](plan=plan, key=3, **params).fit(x)
+    with SketchService(scan="never") as svc:
+        svc.create_tenant("t", kind, plan=plan, key=3, **params)
+        futs = [svc.ingest("t", x[i:i + 2 * BS]) for i in range(0, 256, 2 * BS)]
+        assert all(f.result().ok for f in futs)
+        got = svc.query("t", op).unwrap()
+    if kind == "pca":
+        np.testing.assert_array_equal(got["components"],
+                                      np.asarray(direct.components_))
+        np.testing.assert_array_equal(got["explained_variance"],
+                                      np.asarray(direct.explained_variance_))
+    else:
+        np.testing.assert_array_equal(got, np.asarray(getattr(direct, attr)))
+
+
+def test_group_shares_one_compression_pass():
+    """Co-registered tenants ride ONE cursor: n_sketches counts chunks, not
+    chunks × tenants, and both results equal the fit_many twins."""
+    x = _x(256)
+    plan = _plan(cov_path="lowrank", rank=12)
+    with SketchService(scan="never") as svc:
+        svc.create_tenant("p", "pca", plan=plan, key=7, n_components=3,
+                          group="g")
+        svc.create_tenant("k", "kmeans", plan=_plan(), key=7, k=3, group="g",
+                          algorithm="minibatch")
+        svc.ingest("g", x).result()
+        st = svc.query("p", "stats").unwrap()
+        assert st["n_sketches"] == st["chunks"] == 4      # 256 rows / bs=64
+        comps = svc.query("p", "components").unwrap()["components"]
+        centers = svc.query("k", "centers").unwrap()
+    pca = SparsifiedPCA(3, plan, key=7)
+    km = SparsifiedKMeans(3, _plan(), key=7, algorithm="minibatch")
+    fit_many(plan, [pca, km], x)
+    np.testing.assert_array_equal(comps, np.asarray(pca.components_))
+    np.testing.assert_array_equal(centers, np.asarray(km.centers_))
+
+
+def test_group_geometry_and_key_checks():
+    plan = _plan()
+    with SketchService() as svc:
+        svc.create_tenant("a", "mean", plan=plan, key=1, group="g")
+        # sketch geometry must agree across the shared pass
+        with pytest.raises(RuntimeError, match="gamma"):
+            svc.create_tenant("b", "mean", plan=_plan(gamma=0.25), key=1,
+                              group="g")
+        # shared sketch ⇒ shared randomness
+        with pytest.raises(RuntimeError, match="key"):
+            svc.create_tenant("c", "mean", plan=plan, key=2, group="g")
+        # late joiners would silently miss folded rows — refused
+        svc.ingest("g", _x(BS)).result()
+        with pytest.raises(RuntimeError, match="already ingested"):
+            svc.create_tenant("d", "mean", plan=plan, key=1, group="g")
+        # duplicate ids, unknown kinds
+        with pytest.raises(RuntimeError, match="exists"):
+            svc.create_tenant("a", "mean", plan=plan, key=1)
+        with pytest.raises(RuntimeError, match="kind"):
+            svc.create_tenant("e", "median", plan=plan, key=1)
+
+
+# ---------------------------------------------------------- micro-batching --
+
+
+def _drain(svc):
+    """Pull everything submit() queued and serve it through one worker sweep
+    (the un-started-service idiom: deterministic micro-batch contents)."""
+    items = []
+    while True:
+        try:
+            items.append(svc._queue.get_nowait())
+        except queue.Empty:
+            break
+    svc._process(items)
+
+
+def test_contiguous_ingest_coalesces_into_one_fold():
+    svc = SketchService()          # not started: we drive the drain by hand
+    plan = _plan()
+    svc.create_tenant("t", "mean", plan=plan, key=1)
+    futs = [svc.ingest("t", _x(BS, seed=i)) for i in range(3)]
+    _drain(svc)
+    acks = [f.result(0) for f in futs]
+    assert all(a.ok and a.info["coalesced"] == 3 for a in acks)
+    assert svc.stats["ingest_folds"] == 1          # ONE sketch+fold sweep
+    assert svc.stats["ingest_requests"] == 3
+    # a query splits the run: ingest-query-ingest = two folds, ordered
+    f1 = svc.ingest("t", _x(BS))
+    q = svc.submit(QueryRequest("t", "stats"))
+    f2 = svc.ingest("t", _x(BS))
+    _drain(svc)
+    assert f1.result(0).ok and f2.result(0).ok
+    assert q.result(0).unwrap()["rows"] == 4 * BS   # saw f1, not f2
+    assert svc.stats["ingest_folds"] == 3
+
+
+def test_coalesced_fold_is_a_valid_estimate():
+    """Coalescing moves chunk boundaries (different (step, shard) keys than
+    request-at-a-time folding) — the estimate stays unbiased. Ragged tiny
+    requests coalesce into one pass whose mean matches the data's."""
+    rng = np.random.default_rng(1)
+    mu = rng.normal(size=P).astype(np.float32)
+    blocks = [mu + 0.1 * rng.normal(size=(17, P)).astype(np.float32)
+              for _ in range(40)]
+    svc = SketchService()
+    svc.create_tenant("t", "mean", plan=_plan(gamma=0.5), key=1)
+    futs = [svc.ingest("t", b) for b in blocks]
+    _drain(svc)
+    assert all(f.result(0).ok for f in futs)
+    assert svc.stats["ingest_folds"] == 1
+    with svc:
+        got = svc.query("t", "mean").unwrap()
+        assert svc.query("t", "stats").unwrap()["rows"] == 40 * 17
+    np.testing.assert_allclose(got, np.concatenate(blocks).mean(0), atol=0.05)
+
+
+def test_scan_burst_path_matches_host_loop():
+    """A drained burst spanning full steps goes through the jitted lax.scan
+    ingest; results match the host loop to float-summation reordering."""
+    x = _x(4 * BS)
+    outs = {}
+    for mode in ("auto", "never"):
+        with SketchService(scan=mode) as svc:
+            svc.create_tenant("t", "pca", plan=_plan(cov_path="lowrank",
+                                                     rank=12),
+                              key=3, n_components=3)
+            svc.ingest("t", x).result()
+            outs[mode] = svc.query("t", "components").unwrap()["components"]
+            assert svc._groups["t"].cursor.scan is False   # reset after burst
+    np.testing.assert_allclose(outs["auto"], outs["never"], atol=1e-5)
+
+
+# ------------------------------------------------------- admission control --
+
+
+def test_admission_rejects_with_backpressure():
+    svc = SketchService(max_pending_rows=2 * BS, max_queue=3)
+    svc.create_tenant("t", "mean", plan=_plan(), key=1)
+    a = svc.ingest("t", _x(2 * BS))                 # admitted: hits the cap
+    b = svc.ingest("t", _x(BS))                     # over the row cap
+    assert b.result(0).status == "rejected" and "pending" in b.result(0).error
+    c = svc.ingest("unknown", _x(1))                # unknown target: error
+    assert c.result(0).status == "error"
+    _drain(svc)
+    assert a.result(0).ok
+    d = svc.ingest("t", _x(BS))                     # backlog folded: admitted
+    assert not d.done()
+    # queue-depth cap: fill the (tiny) queue, next submit bounces
+    e = [svc.ingest("t", _x(1)) for _ in range(3)]
+    assert e[-1].result(0).status == "rejected"
+    assert "queue full" in e[-1].result(0).error
+    assert svc.stats["rejected"] >= 2
+
+
+def test_lazy_finalization_only_on_stale_reads():
+    with SketchService() as svc:
+        svc.create_tenant("t", "pca", plan=_plan(cov_path="lowrank", rank=12),
+                          key=3, n_components=3)
+        # reads before any ingest are an error, not a crash
+        assert "no ingested rows" in svc.query("t", "components").error
+        svc.ingest("t", _x(2 * BS)).result()
+        svc.query("t", "components").unwrap()
+        svc.query("t", "transform", _x(8)).unwrap()
+        assert svc.query("t", "stats").unwrap()["finalize_count"] == 1  # reused
+        svc.ingest("t", _x(2 * BS)).result()
+        svc.query("t", "components").unwrap()       # state moved: refinalize
+        assert svc.query("t", "stats").unwrap()["finalize_count"] == 2
+        # op/kind mismatch answers an error response
+        assert svc.query("t", "centers").status == "error"
+        assert svc.query("t", "nope").status == "error"
+
+
+# ------------------------------------------------------- snapshot/restore ---
+
+
+def test_snapshot_restore_bit_identical_and_resumable(tmp_path):
+    x, more = _x(4 * BS), _x(2 * BS, seed=9)
+    plan = _plan(cov_path="lowrank", rank=12)
+    with SketchService() as svc:
+        svc.create_tenant("p", "pca", plan=plan, key=7, n_components=3,
+                          group="g", retain_ingest=True)
+        svc.create_tenant("k", "kmeans", plan=_plan(), key=7, k=3, group="g",
+                          algorithm="minibatch")
+        svc.create_tenant("solo", "cov", plan=_plan(gamma=0.25), key=5)
+        svc.ingest("g", x).result()
+        svc.ingest("solo", x).result()
+        comps = svc.query("p", "components").unwrap()
+        assert svc.snapshot(str(tmp_path)) == 1
+        svc.ingest("g", more).result()
+        cont = svc.query("p", "components").unwrap()
+
+    svc2 = restore_service(str(tmp_path))
+    with svc2:
+        # identical reads...
+        comps2 = svc2.query("p", "components").unwrap()
+        np.testing.assert_array_equal(comps["components"], comps2["components"])
+        st = svc2.query("solo", "stats").unwrap()
+        assert st["rows"] == 4 * BS and st["chunks"] == 4
+        # ...and identical continuation: same rows → same (step, shard) keys
+        svc2.ingest("g", more).result()
+        cont2 = svc2.query("p", "components").unwrap()
+        np.testing.assert_array_equal(cont["components"], cont2["components"])
+        # the retained ingest buffer survives too (refine replay after restore)
+        r = svc2.refine("p", passes=1)
+        assert r.ok and r.result["passes"] == 1
+    # an empty (never-ingested) tenant snapshots and restores as empty
+    with SketchService() as s3:
+        s3.create_tenant("fresh", "mean", plan=_plan(), key=0)
+        s3.snapshot(str(tmp_path / "empty"))
+    with restore_service(str(tmp_path / "empty")) as s4:
+        assert "no ingested rows" in s4.query("fresh", "mean").error
+
+
+def test_snapshot_rejects_unserializable_plans(tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    with SketchService() as svc:
+        svc.create_tenant("t", "mean", plan=_plan(backend="sharded", mesh=mesh),
+                          key=1)
+        with pytest.raises(RuntimeError, match="mesh"):
+            svc.snapshot(str(tmp_path))
+
+
+# ------------------------------------------------------------ QueueSource ---
+
+
+def test_queue_source_feeds_fit_stream():
+    """QueueSource bridges pushed chunks to the (seed, step, shard) contract:
+    fit_stream over the queue == fit over the concatenation."""
+    x = _x(4 * BS)
+    qs = QueueSource()
+    for i in range(0, 4 * BS, BS):
+        qs.push(x[i:i + BS])
+    qs.close()
+    plan = _plan()
+    est = SparsifiedMean(plan, key=3).fit_stream(qs, steps=qs.steps())
+    ref = SparsifiedMean(plan, key=3).fit(x)
+    np.testing.assert_array_equal(np.asarray(est.mean_), np.asarray(ref.mean_))
+    # retained chunks replay (a second pass re-reads the buffer)
+    est2 = SparsifiedMean(plan, key=3).fit_stream(qs, steps=qs.steps())
+    np.testing.assert_array_equal(np.asarray(est2.mean_), np.asarray(est.mean_))
+
+
+def test_queue_source_contract_errors():
+    qs = QueueSource(retain=False, timeout=0.05)
+    qs.push(np.zeros((4, P), np.float32))
+    qs.batch_at(0, 0)
+    with pytest.raises(RuntimeError, match="dropped"):
+        qs.batch_at(0, 0)                      # retain=False: served once
+    with pytest.raises(TimeoutError, match="stalled"):
+        qs.batch_at(1, 0)                      # producer never caught up
+    qs.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        qs.batch_at(1, 0)                      # past the end fails fast now
+    with pytest.raises(RuntimeError, match="close"):
+        qs.push(np.zeros((4, P), np.float32))
+    with pytest.raises(ValueError, match="shape"):
+        QueueSource().push(np.zeros(4, np.float32))
+
+
+# ------------------------------------- concurrent producers (the contract) --
+
+
+def test_concurrent_partial_fit_serializes_correctly():
+    """The SketchCursor thread-safety contract: N producer threads hammering
+    one SharedSketchRun serialize whole-call — no lost chunks, exact counts,
+    and the mean is a valid estimate no matter the interleaving."""
+    rng = np.random.default_rng(2)
+    mu = rng.normal(size=P).astype(np.float32)
+    n_threads, per_thread = 4, 6
+    blocks = [[mu + 0.1 * rng.normal(size=(BS, P)).astype(np.float32)
+               for _ in range(per_thread)] for _ in range(n_threads)]
+    plan = _plan(gamma=0.5)
+    run = fit_many(plan, [SparsifiedMean(plan, key=1),
+                          SparsifiedCov(plan, key=1)],
+                   np.zeros((0, P), np.float32), finalize=False)
+    start = threading.Barrier(n_threads)
+    errs = []
+
+    def producer(i):
+        try:
+            start.wait()
+            for b in blocks[i]:
+                run.partial_fit(b)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=producer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    total = n_threads * per_thread
+    assert run.count == total * BS
+    assert run.n_sketches == total                 # every chunk folded once
+    assert run.cursor.chunk_rows == [BS] * total
+    run.finalize()
+    assert all(c.count_ == total * BS for c in run)
+    np.testing.assert_allclose(np.asarray(run[0].mean_), mu, atol=0.05)

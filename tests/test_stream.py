@@ -193,12 +193,13 @@ def test_sharded_streaming_matches_single_device():
 
         # one-shot shard_map reductions handle row counts that don't divide the
         # mesh (zero-pad rows contribute nothing; count stays the true n)
-        from repro.core import distributed as dist, estimators
+        from repro.core import estimators
+        from repro.stream import sharded as dist
         x = jax.random.normal(jax.random.PRNGKey(2), (100, p))
         s = sketch.sketch(x, spec)
-        np.testing.assert_allclose(np.asarray(dist.distributed_mean(s, mesh)),
+        np.testing.assert_allclose(np.asarray(dist.sharded_mean(s, mesh)),
                                    np.asarray(estimators.mean_estimator(s)), atol=1e-5)
-        np.testing.assert_allclose(np.asarray(dist.distributed_cov(s, mesh)),
+        np.testing.assert_allclose(np.asarray(dist.sharded_cov(s, mesh)),
                                    np.asarray(estimators.cov_estimator(s)), atol=1e-4)
         print("sharded-streaming OK")
     """)
