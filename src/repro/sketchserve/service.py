@@ -31,6 +31,13 @@ Response instead of unbounded buffering: the queue itself
 rows admitted but not yet folded (``max_pending_rows``). Rejected ingest is
 the backpressure signal — the producer resubmits later.
 
+Liveness. The worker thread never dies on a bad request: per-run fold
+failures answer error responses, and anything that still escapes a sweep is
+caught in the loop, failing the batch's unresolved futures instead of
+hanging every caller. ``stop()`` resolves every already-submitted request,
+then fails stragglers and all later submissions with an error response —
+no Future ever dangles.
+
 Lazy finalization. Ingest only folds; ``finalize()`` (eigendecompositions,
 Lloyd iterations) runs when a query arrives for a tenant whose folded row
 count moved since it last finalized. A tenant that is written often and read
@@ -79,6 +86,26 @@ def _err(msg: str) -> Response:
 
 def _rejected(msg: str) -> Response:
     return Response("rejected", error=msg)
+
+
+def _resolve(fut: Future, resp: Response) -> None:
+    """Deliver a response unless the caller already cancelled the Future —
+    set_result on a cancelled future raises, and nothing raised on the worker
+    thread may kill the loop."""
+    if fut.set_running_or_notify_cancel():
+        fut.set_result(resp)
+
+
+class _Ingest:
+    """Internal queue record for an admitted ingest. The caller's
+    :class:`IngestRequest` is never mutated: rows are coerced and the target
+    is normalized to the group id here instead, so a retained request object
+    can be logged or resubmitted unchanged."""
+
+    __slots__ = ("gid", "rows")
+
+    def __init__(self, gid: str, rows: np.ndarray):
+        self.gid, self.rows = gid, rows
 
 
 class _Tenant:
@@ -167,8 +194,12 @@ class SketchService:
         self._queue: queue.Queue = queue.Queue(maxsize=int(max_queue))
         self._groups: dict[str, _Group] = {}
         self._tenants: dict[str, _Tenant] = {}
-        self._reg_lock = threading.Lock()   # registry reads from submit threads
+        # Guards registry reads, admission accounting, the stopped flag, and
+        # every stats key submit threads touch ("rejected"); the remaining
+        # stats keys are worker-thread-only.
+        self._reg_lock = threading.Lock()
         self._thread: threading.Thread | None = None
+        self._stopped = False
         self._snap_step = 0
         self.stats = {"requests": 0, "ingest_requests": 0, "ingest_folds": 0,
                       "ingest_rows": 0, "rejected": 0, "queries": 0,
@@ -177,6 +208,8 @@ class SketchService:
     # ------------------------------------------------------------ lifecycle --
 
     def start(self) -> "SketchService":
+        if self._stopped:
+            raise RuntimeError("service already stopped")
         if self._thread is not None:
             raise RuntimeError("service already started")
         self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -185,12 +218,20 @@ class SketchService:
         return self
 
     def stop(self) -> None:
-        """Drain every already-submitted request, then stop the worker."""
-        if self._thread is None:
-            return
-        self._queue.put((_STOP, None))
-        self._thread.join()
-        self._thread = None
+        """Resolve every already-submitted request, then stop the worker.
+        Requests racing with (or arriving after) stop() resolve to an error
+        response instead of hanging on a dead queue; a stopped service cannot
+        be restarted."""
+        with self._reg_lock:
+            self._stopped = True
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            self._queue.put((_STOP, None))
+            thread.join()
+        # Safety net: anything still queued (enqueued before _stopped was
+        # observable, or never drained because the service was not started)
+        # must not leave its Future unresolved forever.
+        self._fail_queued("service stopped")
 
     def __enter__(self) -> "SketchService":
         return self.start()
@@ -201,24 +242,31 @@ class SketchService:
     # --------------------------------------------------------------- submit --
 
     def submit(self, req) -> Future:
-        """Enqueue one request; never blocks. The Future resolves to a
-        :class:`Response` — including ``status="rejected"`` when admission
-        control (full queue / per-group pending-row cap) turns it away."""
+        """Enqueue one request; never blocks and never mutates ``req``. The
+        Future resolves to a :class:`Response` — ``status="rejected"`` when
+        admission control (full queue / per-group pending-row cap) turns it
+        away, ``status="error"`` once the service has stopped."""
         fut: Future = Future()
-        group = None
-        n = 0
         if isinstance(req, IngestRequest):
             rows = np.asarray(req.rows)
             if rows.ndim != 2:
                 fut.set_result(_err(f"ingest rows must be (b, p), got shape "
                                     f"{rows.shape}"))
                 return fut
-            req.rows = rows
             n = int(rows.shape[0])
             with self._reg_lock:
+                if self._stopped:
+                    fut.set_result(_err("service stopped"))
+                    return fut
                 group = self._resolve_group(req.target)
                 if group is None:
                     fut.set_result(_err(f"unknown tenant/group {req.target!r}"))
+                    return fut
+                spec = group.cursor.spec
+                if spec is not None and rows.shape[1] != spec.p:
+                    fut.set_result(_err(
+                        f"group {group.gid!r} ingests p={spec.p} columns, "
+                        f"got {rows.shape[1]}"))
                     return fut
                 if group.pending_rows + n > self.max_pending_rows:
                     self.stats["rejected"] += 1
@@ -228,23 +276,39 @@ class SketchService:
                         "the backlog folds"))
                     return fut
                 group.pending_rows += n
-                req.target = group.gid   # normalize: maximal worker coalescing
-        elif isinstance(req, AdminRequest):
-            if self._thread is None:   # setup phase: no worker to serialize on
+                try:
+                    # target normalized to the gid on the internal record (not
+                    # on req): maximal worker coalescing
+                    self._queue.put_nowait((_Ingest(group.gid, rows), fut))
+                except queue.Full:
+                    group.pending_rows -= n
+                    self.stats["rejected"] += 1
+                    fut.set_result(_rejected(
+                        f"request queue full ({self._queue.maxsize}); "
+                        "retry later"))
+            return fut
+        if isinstance(req, AdminRequest):
+            with self._reg_lock:
+                stopped, setup = self._stopped, self._thread is None
+            if stopped:
+                fut.set_result(_err("service stopped"))
+                return fut
+            if setup:   # setup phase: no worker to serialize on
                 fut.set_result(self._handle_admin(req))
                 return fut
         elif not isinstance(req, QueryRequest):
             fut.set_result(_err(f"unknown request type {type(req).__name__}"))
             return fut
-        try:
-            self._queue.put_nowait((req, fut))
-        except queue.Full:
-            if group is not None:
-                with self._reg_lock:
-                    group.pending_rows -= n
-            self.stats["rejected"] += 1
-            fut.set_result(_rejected(
-                f"request queue full ({self._queue.maxsize}); retry later"))
+        with self._reg_lock:
+            if self._stopped:
+                fut.set_result(_err("service stopped"))
+                return fut
+            try:
+                self._queue.put_nowait((req, fut))
+            except queue.Full:
+                self.stats["rejected"] += 1
+                fut.set_result(_rejected(
+                    f"request queue full ({self._queue.maxsize}); retry later"))
         return fut
 
     def call(self, req, timeout: float | None = 60.0) -> Response:
@@ -307,13 +371,48 @@ class SketchService:
                 if req is _STOP:
                     stop = True       # drain this batch, fail later arrivals
                 elif stop:
-                    fut.set_result(_err("service stopped"))
+                    _resolve(fut, _err("service stopped"))
                 else:
                     batch.append((req, fut))
             if batch:
-                self._process(batch)
+                try:
+                    self._process(batch)
+                except Exception as e:  # noqa: BLE001 — the worker must live
+                    self._fail_batch(batch, e)
             for _ in items:
                 self._queue.task_done()
+
+    def _fail_batch(self, batch, exc: Exception) -> None:
+        """Last-resort guard around one _process sweep: resolve whatever the
+        crashed sweep left unresolved (releasing its ingest reservations) so
+        one bad batch can never hang every in-flight and future caller."""
+        for req, fut in batch:
+            if fut.done():
+                continue
+            if isinstance(req, _Ingest):
+                # an unresolved ingest never reached _flush_ingest's
+                # accounting, so its reservation is still held
+                with self._reg_lock:
+                    g = self._groups.get(req.gid)
+                    if g is not None:
+                        g.pending_rows -= int(req.rows.shape[0])
+            _resolve(fut, _err(f"internal service error: {exc!r}"))
+
+    def _fail_queued(self, msg: str) -> None:
+        """Fail everything still sitting in the (dead) queue — stop() path."""
+        while True:
+            try:
+                req, fut = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if isinstance(req, _Ingest):
+                with self._reg_lock:
+                    g = self._groups.get(req.gid)
+                    if g is not None:
+                        g.pending_rows -= int(req.rows.shape[0])
+            if fut is not None and not fut.done():
+                _resolve(fut, _err(msg))
+            self._queue.task_done()
 
     def _process(self, batch) -> None:
         """Serve one drained micro-batch in queue order, coalescing each
@@ -321,32 +420,34 @@ class SketchService:
         tests: drives the same path the worker thread runs.)"""
         pending: dict[str, list] = {}
         for req, fut in batch:
-            if isinstance(req, IngestRequest):
-                pending.setdefault(req.target, []).append((req, fut))
+            if isinstance(req, _Ingest):
+                pending.setdefault(req.gid, []).append((req, fut))
                 continue
             self._flush_ingest(pending)   # queries/admin see all prior ingest
             pending = {}
             self.stats["requests"] += 1
             if isinstance(req, QueryRequest):
-                fut.set_result(self._handle_query(req))
+                _resolve(fut, self._handle_query(req))
             else:
-                fut.set_result(self._handle_admin(req))
+                _resolve(fut, self._handle_admin(req))
         self._flush_ingest(pending)
 
     def _flush_ingest(self, pending: dict[str, list]) -> None:
-        for target, items in pending.items():
+        for gid, items in pending.items():
             self.stats["requests"] += len(items)
             self.stats["ingest_requests"] += len(items)
+            blocks = [req.rows for req, _ in items]
+            n = sum(int(b.shape[0]) for b in blocks)
             with self._reg_lock:
-                group = self._resolve_group(target)
+                group = self._groups.get(gid)
             if group is None:   # deleted between submit and drain
                 for _, fut in items:
-                    fut.set_result(_err(f"unknown tenant/group {target!r}"))
+                    _resolve(fut, _err(f"unknown tenant/group {gid!r}"))
                 continue
-            blocks = [req.rows for req, _ in items]
-            rows = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
-            n = int(rows.shape[0])
             try:
+                # concatenate inside the try: column counts mismatched across
+                # a coalesced run must answer error responses, not raise
+                rows = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
                 group.fold(rows, self.scan)
                 self.stats["ingest_folds"] += 1
                 self.stats["ingest_rows"] += n
@@ -359,7 +460,7 @@ class SketchService:
                 with self._reg_lock:
                     group.pending_rows -= n
             for (_, fut), r in zip(items, resp):
-                fut.set_result(r)
+                _resolve(fut, r)
 
     # -------------------------------------------------------------- queries --
 

@@ -11,8 +11,8 @@ import pytest
 
 from repro.api import (Plan, SparsifiedCov, SparsifiedKMeans, SparsifiedMean,
                        SparsifiedPCA, fit_many)
-from repro.sketchserve import (IngestRequest, QueryRequest, SketchService,
-                               restore_service)
+from repro.sketchserve import (AdminRequest, IngestRequest, QueryRequest,
+                               SketchService, restore_service)
 from repro.stream import QueueSource
 from tests.conftest import make_clusters, spiked
 
@@ -200,6 +200,77 @@ def test_admission_rejects_with_backpressure():
     assert e[-1].result(0).status == "rejected"
     assert "queue full" in e[-1].result(0).error
     assert svc.stats["rejected"] >= 2
+
+
+def test_mismatched_width_coalesced_run_answers_errors_and_survives():
+    """Two same-group ingests with different column counts coalesce into one
+    run whose concatenate fails: every request in the run gets an error
+    response, the pending-row reservation is released, and the fold path
+    keeps serving — the failure must never escape and kill the worker."""
+    svc = SketchService()
+    svc.create_tenant("t", "mean", plan=_plan(), key=1)
+    a = svc.ingest("t", _x(BS))
+    bad = svc.ingest("t", np.zeros((4, P + 1), np.float32))
+    _drain(svc)
+    assert a.result(0).status == "error"
+    assert "ingest failed" in bad.result(0).error
+    assert svc._groups["t"].pending_rows == 0
+    ok = svc.ingest("t", _x(BS))               # the next fold succeeds
+    _drain(svc)
+    assert ok.result(0).ok
+    # once the group's width is pinned by a fold, mismatches bounce at submit
+    # (per-request error, no longer able to poison a coalesced run)
+    bad2 = svc.ingest("t", np.zeros((4, P + 1), np.float32))
+    assert bad2.done() and "columns" in bad2.result(0).error
+    assert svc._groups["t"].pending_rows == 0
+
+
+def test_worker_survives_internal_errors(monkeypatch):
+    """An exception escaping a _process sweep fails that batch's futures with
+    an error response instead of silently killing the single worker thread."""
+    with SketchService() as svc:
+        svc.create_tenant("t", "mean", plan=_plan(), key=1)
+
+        def boom(req):
+            raise RuntimeError("boom")
+
+        monkeypatch.setattr(svc, "_handle_query", boom)
+        r = svc.query("t", "stats", timeout=5)
+        assert r.status == "error" and "boom" in r.error
+        monkeypatch.undo()
+        assert svc._thread.is_alive()          # worker lived through it
+        assert svc.ingest("t", _x(BS)).result(5).ok
+        assert svc.query("t", "mean", timeout=5).ok
+
+
+def test_stop_fails_late_submissions_instead_of_hanging():
+    """After stop(), every request family resolves immediately with an error
+    response — nothing enqueues into the dead queue and hangs forever — and
+    rejected ingest never leaks a pending-row reservation."""
+    svc = SketchService()
+    svc.create_tenant("t", "mean", plan=_plan(), key=1)
+    with svc:
+        assert svc.ingest("t", _x(BS)).result(5).ok
+    for f in (svc.ingest("t", _x(BS)),
+              svc.submit(QueryRequest("t", "stats")),
+              svc.submit(AdminRequest("delete_tenant", dict(tid="t")))):
+        assert f.done() and "stopped" in f.result(0).error
+    assert svc._groups["t"].pending_rows == 0
+    with pytest.raises(RuntimeError, match="stopped"):
+        svc.start()                            # no restart onto dead state
+
+
+def test_submit_never_mutates_caller_request():
+    """A retained IngestRequest keeps its original target and rows payload —
+    coercion and group-id normalization happen on the internal queue record."""
+    svc = SketchService()
+    svc.create_tenant("t", "mean", plan=_plan(), key=1, group="g")
+    rows = [[1.0] * P]
+    req = IngestRequest("t", rows)
+    fut = svc.submit(req)
+    assert req.target == "t" and req.rows is rows
+    _drain(svc)
+    assert fut.result(0).ok and fut.result(0).info["group"] == "g"
 
 
 def test_lazy_finalization_only_on_stale_reads():
