@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks import (
         api_bench,
         bigdata_kmeans,
+        cluster_bench,
         fig1_explained_variance,
         fig2_mean_bound,
         fig3_cov_bound,
@@ -49,6 +50,7 @@ def main() -> None:
         ("lowrank_bench", lowrank_bench.run),
         ("refine_bench", refine_bench.run),
         ("serve_bench", serve_bench.run),
+        ("cluster_bench", cluster_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

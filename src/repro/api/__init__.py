@@ -52,7 +52,7 @@ from repro.api.estimators import (  # noqa: F401
     SparsifiedPCA,
     as_key,
 )
-from repro.api.fused import SharedSketchRun, fit_many  # noqa: F401
+from repro.api.fused import SharedSketchRun, fit_many, restore_run  # noqa: F401
 from repro.api.plan import BACKENDS, Plan  # noqa: F401
 
 
@@ -64,6 +64,7 @@ def make_engine(plan: Plan, p: int, key, source, *, track_cov: bool = True,
     one sketch of each batch); backends "stream" (no mesh, shards folded
     sequentially) and "sharded" (shard_map over ``plan.resolve_mesh()``) apply.
     """
+    from repro import cluster
     from repro.stream import StreamEngine
 
     if plan.backend not in ("stream", "sharded"):
@@ -76,7 +77,12 @@ def make_engine(plan: Plan, p: int, key, source, *, track_cov: bool = True,
             "lowrank_method='fd' (order-dependent shrink) is estimator-layer "
             "only — use the SparsifiedPCA classes, or lowrank_method='range'")
     spec = plan.spec(p, as_key(key))
-    mesh = plan.resolve_mesh() if plan.backend == "sharded" else None
+    mesh = None
+    if plan.backend == "sharded":
+        # multi-process runs need the process-contiguous mesh, whatever the
+        # Plan's auto-mesh would build locally (same rule as the estimators)
+        mesh = (cluster.process_mesh(plan.n_shards, plan.axis)
+                if cluster.is_multiprocess() else plan.resolve_mesh())
     return StreamEngine(spec, source, n_shards=plan.n_shards, mesh=mesh,
                         axis=plan.axis, track_cov=track_cov, kmeans=kmeans,
                         impl=plan.impl, cov_path=plan.cov_path, rank=plan.rank)

@@ -46,6 +46,8 @@ from repro import lowrank as lowrank_mod
 from repro import refine as refine_mod
 from repro.stream import accumulators as acc
 from repro.stream import sharded as sharded_mod
+from repro.stream import state as state_mod
+from repro.train import checkpoint as checkpoint_mod
 from repro.utils.prng import fold_in_str
 
 
@@ -63,6 +65,26 @@ def as_key(key: jax.Array | int) -> jax.Array:
 # stream accumulators, or the stream.sharded shard_map collectives.
 
 MOMENT_BACKENDS: dict[str, "callable"] = {}
+
+
+def _is_multiprocess() -> bool:
+    """True under a live multi-process jax.distributed runtime (lazy import —
+    repro.cluster is only touched when a cluster actually exists)."""
+    if jax.process_count() <= 1:
+        return False
+    return True
+
+
+def _sharded_mesh(plan: Plan):
+    """The mesh the sharded backend reduces over: plan.resolve_mesh() on a
+    single host; under a multi-process runtime the process-contiguous
+    repro.cluster mesh (each process's devices own a contiguous block of
+    shard positions — what per-host global-array assembly requires)."""
+    if _is_multiprocess():
+        from repro import cluster
+
+        return cluster.process_mesh(plan.n_shards, plan.axis)
+    return plan.resolve_mesh()
 
 
 def _moment_backend(name: str):
@@ -178,12 +200,19 @@ class _MomentReducer:
             self.parts.append(s)
 
     def flush_step(self) -> None:
-        """Sharded: reduce the buffered step with one psum'd delta, then drop it."""
+        """Sharded: reduce the buffered step with one psum'd delta, then drop it.
+
+        Multi-process: each process buffered only ITS shards' sketches; they
+        enter the same shard_map as this process's contiguous block of ONE
+        global row-sharded array (repro.cluster.global_rows), and the psum
+        reduces across hosts — every process must reach this flush once per
+        step, in step order (the multiprocess fold_source loop guarantees it).
+        """
         if not self._step_parts:
             return
         if self._mesh is None:
-            self._mesh = self.plan.resolve_mesh()
-        step_sketch = _concat_sparse(self._step_parts, self.spec.p_pad)
+            self._mesh = _sharded_mesh(self.plan)
+        step_sketch = self._assemble_step()
         if self.lowrank:
             delta = sharded_mod.sharded_lowrank(step_sketch, self._omega,
                                                 self._mesh, (self.plan.axis,),
@@ -195,6 +224,20 @@ class _MomentReducer:
                 track_cov=self.track_cov, cov_path=self._moment_cov_path)
             self.state = acc.moment_apply(self.state, delta)
         self._step_parts = []
+
+    def _assemble_step(self) -> SparseRows:
+        """The buffered step as one SparseRows: a plain host concat on a
+        single host; under multi-process, the local shards' rows become this
+        process's addressable block of a global row-sharded array."""
+        if not _is_multiprocess():
+            return _concat_sparse(self._step_parts, self.spec.p_pad)
+        from repro import cluster
+
+        vals = np.concatenate([np.asarray(s.values) for s in self._step_parts])
+        idxs = np.concatenate([np.asarray(s.indices) for s in self._step_parts])
+        return SparseRows(cluster.global_rows(vals, self._mesh, self.plan.axis),
+                          cluster.global_rows(idxs, self._mesh, self.plan.axis),
+                          self.spec.p_pad)
 
     def concat(self) -> SparseRows:
         if not self.parts:
@@ -483,13 +526,70 @@ class SketchCursor:
     def fold_source(self, source, steps: int, seed: int | None = None) -> None:
         """One pass over a normalized ``(seed, step, shard) → (b, p)`` source
         (the StreamEngine contract): each (step, shard) batch is folded under
-        exactly that (step, shard) mask key."""
+        exactly that (step, shard) mask key.
+
+        Under a multi-process runtime with the sharded backend, each process
+        generates and sketches ONLY the shards it owns (the regenerable-source
+        contract makes "distribute the stream" exactly that); the per-step
+        shard_map reduction then psums across hosts.
+        """
         with self._lock:  # concurrent producers serialize whole-call (see class doc)
+            if _is_multiprocess() and self.plan.backend == "sharded":
+                self._fold_source_multiprocess(source, steps, seed)
+                return
             for step in range(steps):
                 for shard in range(self.plan.n_shards):
                     rows = jnp.asarray(source(seed, step, shard)).astype(self.plan.dtype)
                     self.ensure_spec(rows.shape[1])
                     self.fold_rows(rows)
+
+    def _fold_source_multiprocess(self, source, steps: int,
+                                  seed: int | None) -> None:
+        """The per-host slice of the shared (step, shard) grid: fold the
+        shards this process owns, skip the rest (their chunk indices still
+        advance — the mask-key discipline is global), and drive every
+        consumer's step flush so all processes enter each step's collective
+        reduction exactly once, in step order."""
+        from repro import cluster
+
+        for i, c in enumerate(self.consumers):
+            why = c._multiprocess_unsupported()
+            if why:
+                raise ValueError(
+                    f"consumers[{i}] ({type(c).__name__}) cannot fold under a "
+                    f"multi-process runtime: {why}")
+        mesh = _sharded_mesh(self.plan)
+        mine = set(cluster.local_shards(mesh, self.plan.axis))
+        if not mine:
+            raise ValueError(f"process {jax.process_index()} owns no shards — "
+                             "shrink n_shards or the process count")
+        # data-dependent inits (minibatch K-means' K-means++ seeding) must be
+        # bit-identical on every process: all of them sketch chunk (0, 0)
+        # (replicated host compute) before any per-host folding starts.
+        rows0 = None
+        for c in self.consumers:
+            if c._needs_first_sketch():
+                if rows0 is None:
+                    rows0 = jnp.asarray(source(seed, 0, 0)).astype(self.plan.dtype)
+                    self.ensure_spec(rows0.shape[1])
+                    s0 = sketch_mod.sketch(
+                        rows0, self.spec, batch_key=batch_key(self.spec, 0, 0),
+                        impl=self.plan.impl)
+                c._seed_first_sketch(s0)
+        for step in range(steps):
+            for shard in range(self.plan.n_shards):
+                if shard in mine:
+                    rows = jnp.asarray(source(seed, step, shard)).astype(self.plan.dtype)
+                    self.ensure_spec(rows.shape[1])
+                    self.fold_rows(rows)
+                else:
+                    # the chunk happened — on another host. Mask keys are a
+                    # pure function of the chunk index, so it must advance;
+                    # rows-per-chunk is unknown here (0 = not locally held).
+                    self.chunk += 1
+                    self.chunk_rows.append(0)
+            for c in self.consumers:
+                c._step_flush()
 
 
 # -------------------------------------------------------------- base class --
@@ -568,6 +668,42 @@ class SketchedEstimator:
 
     def _fold_sketch(self, s: SparseRows, step: int, shard: int) -> None:
         self._reducer.fold(s, step, shard)
+
+    # --------------------------------------------------- multi-process fold --
+    # Hooks for SketchCursor._fold_source_multiprocess: each process folds
+    # only its own shards, so consumers must (a) reduce through per-step
+    # collectives (sharded backend), (b) flush when the CURSOR says the step
+    # ended (this process's last local shard is usually not shard
+    # n_shards-1), and (c) run data-dependent inits from a sketch every
+    # process regenerated identically.
+
+    def _multiprocess_unsupported(self) -> str | None:
+        """None when this consumer can fold under a multi-process runtime,
+        else the reason it cannot."""
+        if self.plan.backend != "sharded":
+            return (f"backend={self.plan.backend!r} folds on the host — only "
+                    "the sharded backend reduces across processes")
+        if self._keep_sketch:
+            return ("it retains its sketches (batch moments / Lloyd K-means); "
+                    "a per-process buffer would hold only this host's shards")
+        if (self.plan.cov_path == "lowrank" and self._track_cov
+                and self._needs_moments and self.plan.lowrank_method == "fd"):
+            return ("Frequent Directions is an order-dependent sequential "
+                    "fold — its shrink cannot psum across processes")
+        return None
+
+    def _needs_first_sketch(self) -> bool:
+        return False
+
+    def _seed_first_sketch(self, s0: SparseRows) -> None:
+        """Run a data-dependent init from chunk (0, 0)'s sketch (regenerated
+        identically on every process)."""
+
+    def _step_flush(self) -> None:
+        """Cursor-driven step boundary: enter this step's collective
+        reduction (exactly once per process per step)."""
+        if self._reducer is not None:
+            self._reducer.flush_step()
 
     # ------------------------------------------------------- scanned ingest --
     # Hooks for the cursor's opt-in lax.scan hot loop (cursor.scan = True /
@@ -792,15 +928,17 @@ class SketchedEstimator:
         return sketch_mod.unmix_dense(v_pre[None, :], self.spec_)[0]
 
     # ------------------------------------------------------------ snapshot --
-    # State export/import for repro.sketchserve snapshot/restore: everything a
-    # restarted process needs to continue THIS estimator's ingest
-    # bit-identically, as a flat {name: array} dict. The spec is NOT exported
-    # — it re-derives deterministically from (plan, key, p); derived fitted
-    # attributes aren't either — finalize() recomputes them from the fold
-    # state. Import targets a freshly constructed estimator whose spec is
-    # already bound (the importer calls cursor.ensure_spec first).
+    # State export/import for checkpoints and repro.sketchserve snapshots:
+    # everything a restarted process needs to continue THIS estimator's ingest
+    # bit-identically, as a flat {name: array} dict in the EngineState
+    # protocol's wire format (repro.stream.state.to_arrays — the same keys the
+    # StreamEngine checkpoints). The spec is NOT exported — it re-derives
+    # deterministically from (plan, key, p); derived fitted attributes aren't
+    # either — finalize() recomputes them from the fold state. Import targets
+    # a freshly constructed estimator whose spec is already bound (the
+    # importer calls cursor.ensure_spec first).
 
-    def _export_state(self) -> dict:
+    def state_arrays(self) -> dict:
         r = self._reducer
         if r is None:
             raise RuntimeError("nothing folded yet — nothing to export")
@@ -809,43 +947,25 @@ class SketchedEstimator:
                 "a sharded reducer is mid-step (buffered shard sketches not "
                 "yet psum'd); ingest to a step boundary before snapshotting")
         out: dict = {"count": np.int64(self.count_)}
-        st = r.state
-        if isinstance(st, lowrank_mod.RangeState):
-            out.update({"range.y": st.y, "range.diag": st.diag,
-                        "range.sum_w": st.sum_w, "range.count": st.count})
-        elif isinstance(st, lowrank_mod.FDState):
-            out.update({"fd.sketch": st.sketch, "fd.diag": st.diag,
-                        "fd.sum_w": st.sum_w, "fd.count": st.count})
-        elif st is not None:   # MomentState; sum_wwt present iff track_cov
-            out.update({"moment.sum_w": st.sum_w, "moment.count": st.count})
-            if st.sum_wwt is not None:
-                out["moment.sum_wwt"] = st.sum_wwt
+        if r.state is not None:
+            out.update(state_mod.to_arrays(r.state))
         if r.parts:            # retained sketches (batch moments / Lloyd)
             out["parts.values"] = jnp.concatenate([s.values for s in r.parts])
             out["parts.indices"] = jnp.concatenate([s.indices for s in r.parts])
             out["parts.rows"] = np.array([s.n for s in r.parts], np.int64)
         return out
 
-    def _import_state(self, arrs: dict) -> None:
+    def load_state_arrays(self, arrs: dict) -> None:
         if self.spec_ is None:
             raise RuntimeError("bind the spec (cursor.ensure_spec) before "
                                "importing snapshot state")
         r = self._reducer
         self.count_ = int(arrs["count"])
-        if "range.y" in arrs:
-            r.state = lowrank_mod.RangeState(
-                jnp.asarray(arrs["range.y"]), jnp.asarray(arrs["range.diag"]),
-                jnp.asarray(arrs["range.sum_w"]), jnp.asarray(arrs["range.count"]))
-        elif "fd.sketch" in arrs:
-            r.state = lowrank_mod.FDState(
-                jnp.asarray(arrs["fd.sketch"]), jnp.asarray(arrs["fd.diag"]),
-                jnp.asarray(arrs["fd.sum_w"]), jnp.asarray(arrs["fd.count"]))
-        elif "moment.sum_w" in arrs:
-            wwt = arrs.get("moment.sum_wwt")
-            r.state = acc.MomentState(
-                jnp.asarray(arrs["moment.sum_w"]),
-                None if wwt is None else jnp.asarray(wwt),
-                jnp.asarray(arrs["moment.count"]))
+        # the reducer only ever holds a moment/range/fd state — the km kind
+        # belongs to SparsifiedKMeans' own slot (its override loads it)
+        st = state_mod.from_arrays(arrs, kinds=("moment", "range", "fd"))
+        if st is not None:
+            r.state = st
         if "parts.values" in arrs:
             values = jnp.asarray(arrs["parts.values"])
             indices = jnp.asarray(arrs["parts.indices"])
@@ -855,6 +975,38 @@ class SketchedEstimator:
                 r.parts.append(SparseRows(values[i:i + n], indices[i:i + n],
                                           self.spec_.p_pad))
                 i += n
+
+    # Estimator-level checkpoint/restore — the fold state plus the cursor
+    # counters, through the train.checkpoint atomic-rename protocol. restore()
+    # rebinds the spec from (plan, key, p) and resumes the chunk cursor, so
+    # partial_fit after restore() continues the interrupted pass
+    # bit-identically (tests/test_engine_state.py).
+
+    def checkpoint(self, ckpt_dir: str, *, keep_last: int = 3) -> "SketchedEstimator":
+        """Write the fold state + ingest cursor to ``ckpt_dir`` (atomic)."""
+        if self.spec_ is None:
+            raise RuntimeError("nothing folded yet — nothing to checkpoint")
+        cur = self._cursor
+        extra = {"p": int(self.spec_.p), "chunk": cur.chunk, "count": cur.count,
+                 "n_sketches": cur.n_sketches,
+                 "chunk_rows": list(cur.chunk_rows)}
+        checkpoint_mod.save_arrays(ckpt_dir, cur.chunk, self.state_arrays(),
+                                   extra=extra, keep_last=keep_last)
+        return self
+
+    def restore(self, ckpt_dir: str) -> "SketchedEstimator":
+        """Reset, rebind the spec, and load the latest checkpoint under
+        ``ckpt_dir`` — the estimator continues ingest where it stopped."""
+        arrs, extra = checkpoint_mod.load_arrays(ckpt_dir)
+        self.reset()
+        cur = self._cursor
+        cur.ensure_spec(int(extra["p"]))
+        self.load_state_arrays(arrs)
+        cur.chunk = int(extra["chunk"])
+        cur.count = int(extra["count"])
+        cur.n_sketches = int(extra["n_sketches"])
+        cur.chunk_rows = [int(r) for r in extra["chunk_rows"]]
+        return self
 
 
 # ----------------------------------------------------------- the estimators --
@@ -1108,6 +1260,9 @@ class SparsifiedKMeans(SketchedEstimator):
         # (sketch, pre-update labels) pairs of the in-flight step, for the
         # reassignment counts — dropped at every flush
         self._km_step_sketches: list[tuple[SparseRows, jax.Array]] = []
+        # sharded backend: the in-flight step's raw shard sketches, reduced
+        # in-mesh by sharded_kmeans_step at each flush
+        self._km_step_parts: list[SparseRows] = []
         self._reassign_history: list[tuple[np.ndarray, int]] = []
         return self
 
@@ -1121,6 +1276,14 @@ class SparsifiedKMeans(SketchedEstimator):
             self._km_state = acc.kmeans_init(
                 fold_in_str(self.spec_.key, "api-kmeans"), s, self.k, self.n_init,
                 decay=self.decay)
+        if self.plan.backend == "sharded":
+            # mesh-resident fold: buffer the step's shard sketches and reduce
+            # them in-mesh at the flush — assignment stays on-device per
+            # shard, one psum of the fixed-size delta per step.
+            self._km_step_parts.append(s)
+            if shard == self.plan.n_shards - 1:
+                self._flush_step()
+            return
         # engine semantics: every shard's delta is taken against the step-start
         # state, summed, and applied once per step — backend-independent.
         if self.track_reassignments:
@@ -1135,6 +1298,33 @@ class SparsifiedKMeans(SketchedEstimator):
             self._flush_step()
 
     def _flush_step(self) -> None:
+        if self._km_step_parts:
+            old_count = int(self._km_state.count)
+            mesh = _sharded_mesh(self.plan)
+            parts, self._km_step_parts = self._km_step_parts, []
+            mask = None
+            if _is_multiprocess():
+                from repro import cluster
+
+                vals = np.concatenate([np.asarray(s.values) for s in parts])
+                idxs = np.concatenate([np.asarray(s.indices) for s in parts])
+                s_cat = SparseRows(
+                    cluster.global_rows(vals, mesh, self.plan.axis),
+                    cluster.global_rows(idxs, mesh, self.plan.axis),
+                    parts[0].p)
+                mask = cluster.global_rows(
+                    np.ones(vals.shape[0], np.int32), mesh, self.plan.axis)
+            else:
+                s_cat = _concat_sparse(parts, parts[0].p)
+            new, cnt = sharded_mod.sharded_kmeans_step(
+                self._km_state, s_cat, mesh, axis=self.plan.axis,
+                decay=self.decay,
+                track_reassignments=self.track_reassignments, mask=mask)
+            self._km_state = new
+            if self.track_reassignments:
+                rows = int(new.count) - old_count
+                self._reassign_history.append((np.asarray(cnt), rows))
+            return
         if self._km_pending is None:
             return
         self._km_state = acc.kmeans_apply(self._km_state, self._km_pending,
@@ -1149,13 +1339,29 @@ class SparsifiedKMeans(SketchedEstimator):
             self._reassign_history.append((np.asarray(counts), rows))
         self._km_step_sketches = []
 
+    # --------------------------------------------------- multi-process fold --
+
+    def _needs_first_sketch(self) -> bool:
+        return self.algorithm == "minibatch" and self._km_state is None
+
+    def _seed_first_sketch(self, s0: SparseRows) -> None:
+        self._km_state = acc.kmeans_init(
+            fold_in_str(self.spec_.key, "api-kmeans"), s0, self.k, self.n_init,
+            decay=self.decay)
+
+    def _step_flush(self) -> None:
+        super()._step_flush()
+        self._flush_step()
+
     # ------------------------------------------------------- scanned ingest --
 
     def _scan_desc(self) -> tuple | None:
         if self.algorithm != "minibatch":
             return None  # lloyd retains the sketch — host loop only
-        # the minibatch fold is backend-independent (per-step deltas against
-        # the step-start state), so every backend scans
+        if self.plan.backend == "sharded":
+            return None  # mesh-resident shard_map fold — host loop only
+        # the host-delta minibatch fold is backend-independent (per-step
+        # deltas against the step-start state), so the rest scan
         return ("kmeans", self.track_reassignments, self.decay)
 
     def _scan_prepare(self, cursor: "SketchCursor", xs, step0: int) -> None:
@@ -1230,17 +1436,16 @@ class SparsifiedKMeans(SketchedEstimator):
 
     # ------------------------------------------------------------ snapshot --
 
-    def _export_state(self) -> dict:
-        out = super()._export_state()
+    def state_arrays(self) -> dict:
+        out = super().state_arrays()
         if self.algorithm == "minibatch":
-            if self._km_pending is not None or self._km_step_sketches:
+            if (self._km_pending is not None or self._km_step_sketches
+                    or self._km_step_parts):
                 raise RuntimeError(
                     "the minibatch fold is mid-step (pending shard deltas); "
                     "ingest to a step boundary before snapshotting")
             if self._km_state is not None:
-                st = self._km_state
-                out.update({"km.centers": st.centers, "km.counts": st.counts,
-                            "km.obj": st.obj, "km.count": st.count})
+                out.update(state_mod.to_arrays(self._km_state))
             if self._reassign_history:
                 out["km.reassign_counts"] = np.stack(
                     [c for c, _ in self._reassign_history])
@@ -1248,12 +1453,10 @@ class SparsifiedKMeans(SketchedEstimator):
                     [r for _, r in self._reassign_history], np.int64)
         return out
 
-    def _import_state(self, arrs: dict) -> None:
-        super()._import_state(arrs)
+    def load_state_arrays(self, arrs: dict) -> None:
+        super().load_state_arrays(arrs)
         if "km.centers" in arrs:
-            self._km_state = acc.KMeansState(
-                jnp.asarray(arrs["km.centers"]), jnp.asarray(arrs["km.counts"]),
-                jnp.asarray(arrs["km.obj"]), jnp.asarray(arrs["km.count"]))
+            self._km_state = state_mod.from_arrays(arrs, kinds=("km",))
         if "km.reassign_counts" in arrs:
             cnts = np.asarray(arrs["km.reassign_counts"])
             rows = np.asarray(arrs["km.reassign_rows"]).tolist()

@@ -36,6 +36,7 @@ from repro.api.estimators import SketchCursor, SketchedEstimator, as_key
 from repro.api.plan import Plan
 from repro.core import sketch as sketch_mod
 from repro import refine as refine_mod
+from repro.train import checkpoint
 
 # Plan fields that determine WHAT the shared sketch is (spec + chunk→key
 # mapping). Consumers must agree with the driving plan on these; the backend —
@@ -96,6 +97,66 @@ class SharedSketchRun:
             if c in self.cursor.consumers:  # skip consumers detached by reset()
                 c.finalize()
         return self
+
+    def checkpoint(self, ckpt_dir: str, *, keep_last: int = 3) -> "SharedSketchRun":
+        """Checkpoint the shared pass — every consumer's fold state (the
+        EngineState protocol wire format, ``SketchedEstimator.state_arrays``)
+        plus the ONE shared cursor, atomically via ``train.checkpoint``.
+        :func:`restore_run` resumes the pass bit-identically."""
+        cur = self.cursor
+        if cur.spec is None:
+            raise RuntimeError("nothing folded yet — nothing to checkpoint")
+        arrays: dict = {}
+        for i, c in enumerate(self.consumers):
+            for name, v in c.state_arrays().items():
+                arrays[f"c{i}/{name}"] = np.asarray(v)
+        extra = {"format": "fused-run-v1", "n_consumers": len(self.consumers),
+                 "p": int(cur.spec.p), "chunk": cur.chunk, "count": cur.count,
+                 "n_sketches": cur.n_sketches,
+                 "chunk_rows": list(cur.chunk_rows)}
+        checkpoint.save_arrays(ckpt_dir, cur.chunk, arrays, extra=extra,
+                               keep_last=keep_last)
+        return self
+
+
+def restore_run(ckpt_dir: str, plan: Plan,
+                consumers: Sequence[SketchedEstimator]) -> SharedSketchRun:
+    """Rebuild a :class:`SharedSketchRun` from its latest checkpoint.
+
+    ``consumers`` are freshly constructed estimators in the same order (and
+    with the same plans/keys) as the checkpointed run's — the checkpoint holds
+    fold STATE, not constructors. The restored run continues the interrupted
+    pass bit-identically: the shared cursor resumes at the saved chunk index,
+    so the next ``partial_fit`` folds under the very (step, shard) mask keys
+    the uninterrupted pass would have used.
+    """
+    arrays, extra = checkpoint.load_arrays(ckpt_dir)
+    if extra.get("format") != "fused-run-v1":
+        raise ValueError(f"{ckpt_dir} is not a fused-run checkpoint "
+                         f"(format={extra.get('format')!r})")
+    consumers = tuple(consumers)
+    if len(consumers) != int(extra["n_consumers"]):
+        raise ValueError(f"checkpoint holds {extra['n_consumers']} consumers, "
+                         f"got {len(consumers)}")
+    key0 = as_key(consumers[0].key)
+    for i, c in enumerate(consumers):
+        _check_consumer(plan, c, i, key0)
+    cursor = SketchCursor(plan, key0)
+    for c in consumers:
+        c.reset()
+        c._cursor = cursor
+        cursor.register(c)
+    cursor.ensure_spec(int(extra["p"]))
+    for i, c in enumerate(consumers):
+        prefix = f"c{i}/"
+        sub = {k[len(prefix):]: v for k, v in arrays.items()
+               if k.startswith(prefix)}
+        c.load_state_arrays(sub)
+    cursor.chunk = int(extra["chunk"])
+    cursor.count = int(extra["count"])
+    cursor.n_sketches = int(extra["n_sketches"])
+    cursor.chunk_rows = [int(r) for r in extra["chunk_rows"]]
+    return SharedSketchRun(consumers, cursor)
 
 
 def _check_consumer(plan: Plan, c: SketchedEstimator, i: int, key0) -> None:

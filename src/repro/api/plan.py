@@ -145,3 +145,27 @@ class Plan:
 @functools.lru_cache(maxsize=None)
 def _auto_mesh(n_shards: int, axis: str):
     return jax.make_mesh((n_shards,), (axis,))
+
+
+# ----------------------------------------------------------- mesh (de)spec --
+# A Mesh object is process-local (it holds live Device handles), but its
+# GEOMETRY is not: (axis names, axis sizes) fully determine an equivalent
+# mesh on any host with enough devices. Snapshots (repro.sketchserve) and
+# checkpoints serialize the spec and rebuild the mesh on restore.
+
+
+def mesh_spec(mesh) -> dict | None:
+    """The JSON-safe geometry of a mesh: ``{"axis_names", "shape"}``.
+    None stays None (auto-built meshes need no spec)."""
+    if mesh is None:
+        return None
+    return {"axis_names": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names]}
+
+
+def mesh_from_spec(spec: dict | None):
+    """Rebuild a mesh with the same geometry on THIS host's devices (raises
+    if the host has too few)."""
+    if spec is None:
+        return None
+    return jax.make_mesh(tuple(spec["shape"]), tuple(spec["axis_names"]))

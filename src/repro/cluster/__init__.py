@@ -1,0 +1,25 @@
+"""Multi-host bootstrap + elastic re-sharding for the (seed, step, shard) grid.
+
+- bootstrap: ``jax.distributed`` init (gloo collectives on CPU), the
+  process-ordered mesh, shard→process ownership, and per-host global-batch
+  assembly via ``jax.make_array_from_process_local_data``.
+- elastic:   worker-count changes as a pure remap of the logical (step, shard)
+  grid — each worker replays only the shards its new layout owns; deltas are
+  merged and applied once per step, so the continued run matches the original
+  layout to float-summation reordering.
+"""
+from repro.cluster.bootstrap import (  # noqa: F401
+    global_rows,
+    global_shard_batch,
+    initialize,
+    is_multiprocess,
+    local_shards,
+    process_mesh,
+)
+from repro.cluster.elastic import (  # noqa: F401
+    apply_step,
+    continue_elastic,
+    merge_deltas,
+    partial_step_delta,
+    worker_shards,
+)

@@ -1,0 +1,126 @@
+"""Process bootstrap for true multi-host ingest under the (seed, step, shard) grid.
+
+The paper's sampling contract makes multi-host trivial IN PRINCIPLE — every
+batch is a pure function of (seed, step, shard), so "distribute the stream"
+just means "each process generates the shards it owns". This module supplies
+the three pieces jax needs to make that real:
+
+1. :func:`initialize` — ``jax.distributed`` bring-up. On CPU the collectives
+   implementation must be switched to gloo BEFORE initialize (the default CPU
+   backend cannot run multi-process computations at all), which is exactly the
+   kind of footgun a bootstrap module exists to hide.
+2. :func:`process_mesh` — a 1-D mesh whose devices are sorted by
+   (process_index, id), so each process owns a CONTIGUOUS block of shard
+   positions. Contiguity is what lets per-host data enter as the addressable
+   block of one global array (step 3) without any permutation.
+3. :func:`global_shard_batch` / :func:`global_rows` —
+   ``jax.make_array_from_process_local_data``: each process materializes only
+   its own shards' rows; jit then runs the SAME per-step psum the single-host
+   engine runs, so results match single-process to float-summation
+   reordering (asserted at 1e-5 by the CI smoke lane, tests/test_cluster.py).
+
+Single-process calls are no-ops / identities, so code written against this
+module runs unchanged on one host.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def initialize(coordinator_address: str | None = None,
+               num_processes: int | None = None,
+               process_id: int | None = None, *,
+               platform: str | None = None) -> bool:
+    """Bring up ``jax.distributed`` for a multi-process run; returns whether a
+    multi-process runtime is (now) active.
+
+    ``num_processes in (None, 1)`` is the single-process no-op path. On CPU
+    (``platform="cpu"``, the default unless JAX_PLATFORMS says otherwise) the
+    collectives implementation is switched to gloo first — the default CPU
+    backend refuses multi-process computations outright. Must be called
+    before any JAX computation touches the backend (a jax constraint).
+    """
+    if num_processes in (None, 1):
+        return jax.process_count() > 1
+    dist_state = getattr(getattr(jax, "_src", None), "distributed", None)
+    client = getattr(getattr(dist_state, "global_state", None), "client", None)
+    if client is not None:  # already brought up (idempotent re-entry)
+        return jax.process_count() > 1
+    plat = platform or os.environ.get("JAX_PLATFORMS") or "cpu"
+    if "cpu" in plat:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def is_multiprocess() -> bool:
+    return jax.process_count() > 1
+
+
+def process_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
+    """A 1-D ``(n_shards,)`` mesh over devices sorted by (process_index, id).
+
+    The sort guarantees each process's devices sit at CONTIGUOUS positions
+    along the shard axis — the layout :func:`global_shard_batch` assumes.
+    ``n_shards=None`` uses every device. Cached per (n_shards, axis) so
+    compiled shard_maps keyed on the mesh object stay cached too.
+    """
+    n = None if n_shards is None else int(n_shards)
+    return _process_mesh_cached(n, axis)
+
+
+@functools.lru_cache(maxsize=None)
+def _process_mesh_cached(n_shards: int | None, axis: str) -> Mesh:
+    devs = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    n = len(devs) if n_shards is None else n_shards
+    if len(devs) < n:
+        raise ValueError(f"process_mesh needs {n} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:n]), (axis,))
+
+
+def local_shards(mesh: Mesh, axis: str = "data") -> list[int]:
+    """The shard positions along ``axis`` THIS process owns (shard s lives on
+    the mesh's s-th device). Single-process: every shard."""
+    devices = mesh.devices
+    if devices.ndim != 1:
+        raise ValueError(f"local_shards expects a 1-D mesh, got shape "
+                         f"{devices.shape} (axes {mesh.axis_names})")
+    pid = jax.process_index()
+    return [i for i, d in enumerate(devices.flat) if d.process_index == pid]
+
+
+def global_shard_batch(source, seed, step: int, mesh: Mesh,
+                       axis: str = "data"):
+    """One step's global (n_shards, b, p) batch, assembled from per-host data:
+    this process generates ONLY its own shards via the (seed, step, shard)
+    contract and contributes them as the addressable block of a global array
+    row-sharded over ``axis``. All shards must return equal-shaped batches
+    (the engine's contract)."""
+    mine = local_shards(mesh, axis)
+    if not mine:
+        raise ValueError(f"process {jax.process_index()} owns no shards of "
+                         f"mesh axis {axis!r} — shrink n_shards or the mesh")
+    local = np.stack([np.asarray(source(seed, step, s)) for s in mine])
+    sharding = NamedSharding(mesh, P(axis))
+    if not is_multiprocess():
+        return jax.device_put(local, sharding)
+    return jax.make_array_from_process_local_data(sharding, local)
+
+
+def global_rows(arr, mesh: Mesh, axis: str = "data"):
+    """A (rows, …) array row-sharded over ``axis``, from each process's local
+    block (this process's rows must be the contiguous block its mesh
+    positions own — row counts must divide evenly across shards)."""
+    local = np.asarray(arr)
+    sharding = NamedSharding(mesh, P(axis))
+    if not is_multiprocess():
+        return jax.device_put(local, sharding)
+    return jax.make_array_from_process_local_data(sharding, local)

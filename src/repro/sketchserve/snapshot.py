@@ -6,15 +6,17 @@ pointer), so a serving snapshot is crash-safe the same way a training
 checkpoint is. What is written is exactly what a restarted process cannot
 re-derive:
 
-- per group: the Plan (as JSON; the ``mesh`` field must be None — an explicit
-  device mesh is a process-local object), the shared PRNG key, the cursor's
-  replay counters (``chunk`` / ``count`` / ``chunk_rows`` / ``n_sketches``)
-  and dimensionality ``p``, plus the retained ingest buffer when the group
-  keeps one for refine replay;
+- per group: the Plan (as JSON; an explicit device mesh serializes as its
+  GEOMETRY — axis names + shape, via ``repro.api.plan.mesh_spec`` — and is
+  rebuilt over the restoring host's devices), the shared PRNG key, the
+  cursor's replay counters (``chunk`` / ``count`` / ``chunk_rows`` /
+  ``n_sketches``) and dimensionality ``p``, plus the retained ingest buffer
+  when the group keeps one for refine replay;
 - per tenant: kind, constructor params, its own Plan when it differs from the
   group's (co-registered tenants may fold differently — only the sketch
   geometry is shared), and the estimator's fold state via
-  ``SketchedEstimator._export_state``.
+  ``SketchedEstimator.state_arrays`` (the EngineState protocol wire format of
+  ``repro.stream.state``).
 
 NOT written: the SketchSpec (re-derived deterministically from
 (plan, key, p) by ``cursor.ensure_spec``) and every finalized attribute
@@ -36,23 +38,25 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.plan import Plan
+from repro.api.plan import Plan, mesh_from_spec, mesh_spec
 from repro.train import checkpoint
 
 
 def plan_to_json(plan: Plan) -> dict:
-    """Plan → JSON-safe dict. Round-trips through :func:`plan_from_json`."""
-    if plan.mesh is not None:
-        raise ValueError(
-            "a Plan holding an explicit mesh cannot snapshot (device meshes "
-            "are process-local); build the plan with mesh=None — the sharded "
-            "backend auto-builds its mesh at first use")
-    d = dataclasses.asdict(plan)
+    """Plan → JSON-safe dict. Round-trips through :func:`plan_from_json`.
+
+    An explicit mesh serializes as its geometry (axis names + shape); the
+    restoring process rebuilds an equivalent mesh over ITS devices — the live
+    Device handles are process-local, the geometry is not."""
+    d = {f.name: getattr(plan, f.name) for f in dataclasses.fields(plan)}
+    d["mesh"] = mesh_spec(plan.mesh)
     d["dtype"] = str(np.dtype(plan.dtype))
     return d
 
 
 def plan_from_json(d: dict) -> Plan:
+    d = dict(d)
+    d["mesh"] = mesh_from_spec(d.get("mesh"))
     return Plan(**d)
 
 
@@ -87,7 +91,7 @@ def save_service(svc, path: str, step: int = 1) -> None:
                 "plan": None if tplan == gplan else tplan,
             }
             if g.cursor.spec is not None:
-                for name, v in t.est._export_state().items():
+                for name, v in t.est.state_arrays().items():
                     arrays[f"{gid}/{tid}/{name}"] = np.asarray(v)
         groups[gid] = ginfo
     checkpoint.save_arrays(path, step, arrays,
@@ -134,5 +138,5 @@ def restore_service(path: str, **service_kwargs):
                 prefix = f"{gid}/{tid}/"
                 sub = {k[len(prefix):]: v for k, v in arrays.items()
                        if k.startswith(prefix)}
-                t.est._import_state(sub)
+                t.est.load_state_arrays(sub)
     return svc

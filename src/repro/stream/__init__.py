@@ -6,6 +6,10 @@
                 mini-batch streaming sparsified K-means).
 - sharded:      one-shot shard_map reductions + the distributed-data entry
                 points (shard_rows / sketch_sharded / sharded_kmeans).
+- state:        the EngineState lifecycle protocol — merge algebra and
+                to_arrays/from_arrays serialization shared by the engine,
+                the api estimators, sketchserve snapshots, and elastic
+                re-sharding (repro.cluster).
 - queued:       QueueSource — live pushed chunks adapted to the
                 (seed, step, shard) source contract.
 """
@@ -28,10 +32,21 @@ from repro.stream.engine import (  # noqa: F401
     normalize_source,
 )
 from repro.stream.queued import QueueSource  # noqa: F401
+from repro.stream.state import (  # noqa: F401
+    engine_from_arrays,
+    engine_merge,
+    engine_to_arrays,
+    from_arrays,
+    load_engine,
+    merge,
+    save_engine,
+    to_arrays,
+)
 from repro.stream.sharded import (  # noqa: F401
     shard_rows,
     sharded_cov,
     sharded_kmeans,
+    sharded_kmeans_step,
     sharded_mean,
     sharded_moments,
     sketch_sharded,

@@ -65,6 +65,7 @@ class StreamKMeansConfig:
     k: int
     n_init: int = 3
     decay: float = 1.0
+    track_reassignments: bool = False
 
     def __post_init__(self):
         if not 0.0 < self.decay <= 1.0:
@@ -79,14 +80,25 @@ class EngineState:
     Exactly one of ``moments`` / ``lowrank`` accumulates the second moment AND
     the Thm-4 mean (RangeState carries sum_w/count itself, so the lowrank path
     runs no moment accumulator — one (p,) scatter and psum per step, not two).
+
+    ``reassign`` is the engine-level K-means convergence signal (present iff
+    ``StreamKMeansConfig.track_reassignments``): a ``(total, last)`` pair of
+    (r,) int32 counters — rows whose nearest center changed across an apply,
+    cumulative and for the last folded step — computed INSIDE the jitted
+    update (one extra assignment pass per shard, psum'd with the deltas'
+    step), so the drift signal exists without the estimator layer.
+
+    Serialization/merge go through the :mod:`repro.stream.state` protocol:
+    ``state.engine_to_arrays`` / ``engine_from_arrays`` / ``engine_merge``.
     """
 
     moments: acc.MomentState | None
     kmeans: acc.KMeansState | None
     lowrank: lowrank_mod.RangeState | None = None
+    reassign: tuple | None = None  # ((r,) int32 total, (r,) int32 last step)
 
     def tree_flatten(self):
-        return (self.moments, self.kmeans, self.lowrank), None
+        return (self.moments, self.kmeans, self.lowrank, self.reassign), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -107,6 +119,10 @@ class StreamResult:
     cov_lowrank: "lowrank_mod.LowRankCov | None" = None  # cov_path="lowrank"
     refine_passes: int = 0                  # replay() passes folded into this
     refine_reassigned: tuple | None = None  # rows reassigned by rebuilds 1..q-1
+    # engine-level K-means drift signal (StreamKMeansConfig.track_reassignments):
+    reassign_total: np.ndarray | None = None   # (r,) cumulative over the run
+    reassign_last: np.ndarray | None = None    # (r,) of the last folded step
+    reassign_counts: np.ndarray | None = None  # (steps, r) per-step (run() only)
 
 
 def _normalize_source(source) -> Source:
@@ -183,6 +199,12 @@ class StreamEngine:
         if mesh is not None and mesh.shape[axis] != self.n_shards:
             raise ValueError(
                 f"mesh axis {axis!r} has size {mesh.shape[axis]}, need n_shards={n_shards}")
+        # a mesh spanning >1 process runs true multi-host ingest: each process
+        # generates ONLY its own shards' batches (repro.cluster assembles the
+        # global array from process-local data); state stays replicated and
+        # the per-step psum is unchanged.
+        self._multiprocess = (mesh is not None and len(
+            {d.process_index for d in mesh.devices.flat}) > 1)
         if track_cov and spec.m < 2:
             # fail before streaming, not at finalize (Thm B4 needs m ≥ 2)
             raise ValueError(f"track_cov needs m >= 2, got m={spec.m}; "
@@ -226,33 +248,78 @@ class StreamEngine:
                     if kd is not None else state.kmeans),
             lowrank=(lowrank_mod.range_apply(state.lowrank, ld)
                      if ld is not None else state.lowrank),
+            reassign=state.reassign,
         )
 
     def _build_update(self):
         """update(state, x (n_shards, b, p), step) → state, single-device or
-        shard_map'd; both fold the same per-(step, shard) sketches."""
+        shard_map'd; both fold the same per-(step, shard) sketches.
+
+        With ``track_reassignments`` the update ALSO re-assigns each shard's
+        rows under the post-apply centers and compares to the pre-apply labels
+        (already computed inside the K-means delta) — the (r,) counts travel
+        in ``state.reassign`` and, under a mesh, ride one extra int psum."""
+        track = self.kmeans is not None and self.kmeans.track_reassignments
 
         def local_deltas(state, x, step, shard):
             return self._deltas(state, self._sketch_local(x, step, shard))
 
+        def local_deltas_tracked(state, x, step, shard):
+            s = self._sketch_local(x, step, shard)
+            md = (None if self.lowrank
+                  else acc.moment_delta(s, track_cov=self.track_cov,
+                                        cov_path=self.cov_path))
+            kd, a0 = acc.kmeans_delta_with_assign(state.kmeans, s)
+            ld = (lowrank_mod.range_delta(s, self._omega, impl=self.impl)
+                  if self.lowrank else None)
+            return (md, kd, ld), (s, a0)
+
+        def with_counts(state: EngineState, cnt) -> EngineState:
+            return dataclasses.replace(state,
+                                       reassign=(state.reassign[0] + cnt, cnt))
+
         if self.mesh is None:
+            if not track:
+                def update(state, x, step):
+                    # same semantics as the psum path: every shard's delta is
+                    # taken against the step-start state, summed, applied once.
+                    deltas = local_deltas(state, x[0], step, 0)
+                    for shard in range(1, self.n_shards):
+                        d = local_deltas(state, x[shard], step, shard)
+                        deltas = jax.tree.map(jnp.add, deltas, d)
+                    return self._apply(state, deltas)
+                return update
+
             def update(state, x, step):
-                # same semantics as the psum path: every shard's delta is taken
-                # against the step-start state, summed, then applied once.
-                deltas = local_deltas(state, x[0], step, 0)
-                for shard in range(1, self.n_shards):
-                    d = local_deltas(state, x[shard], step, shard)
-                    deltas = jax.tree.map(jnp.add, deltas, d)
-                return self._apply(state, deltas)
+                deltas = None
+                pairs = []
+                for shard in range(self.n_shards):
+                    d, pair = local_deltas_tracked(state, x[shard], step, shard)
+                    deltas = d if deltas is None else jax.tree.map(jnp.add, deltas, d)
+                    pairs.append(pair)
+                new = self._apply(state, deltas)
+                cnt = jnp.zeros_like(state.reassign[1])
+                for s, a0 in pairs:
+                    cnt = cnt + acc.kmeans_reassigned(new.kmeans, s, a0)
+                return with_counts(new, cnt)
             return update
 
         axis = self.axis
         state_spec = P()  # replicated accumulators; deltas psum'd each step
 
-        def sharded_update(state, x, step):
-            deltas = local_deltas(state, x[0], step, jax.lax.axis_index(axis))
-            deltas = jax.lax.psum(deltas, axis)  # the only cross-shard traffic
-            return self._apply(state, deltas)
+        if not track:
+            def sharded_update(state, x, step):
+                deltas = local_deltas(state, x[0], step, jax.lax.axis_index(axis))
+                deltas = jax.lax.psum(deltas, axis)  # the only cross-shard traffic
+                return self._apply(state, deltas)
+        else:
+            def sharded_update(state, x, step):
+                deltas, (s, a0) = local_deltas_tracked(
+                    state, x[0], step, jax.lax.axis_index(axis))
+                deltas = jax.lax.psum(deltas, axis)
+                new = self._apply(state, deltas)
+                cnt = jax.lax.psum(acc.kmeans_reassigned(new.kmeans, s, a0), axis)
+                return with_counts(new, cnt)
 
         return shard_map(
             sharded_update, mesh=self.mesh,
@@ -276,15 +343,27 @@ class StreamEngine:
         return self._fresh_state(km)
 
     def _fresh_state(self, km) -> EngineState:
+        reassign = None
+        if self.kmeans is not None and self.kmeans.track_reassignments:
+            z = jnp.zeros((self.kmeans.n_init,), jnp.int32)
+            reassign = (z, z)
         return EngineState(
             moments=(None if self.lowrank
                      else acc.moment_init(self.spec.p_pad, track_cov=self.track_cov)),
             kmeans=km,
             lowrank=(lowrank_mod.range_init(self.spec.p_pad, self.rank)
                      if self.lowrank else None),
+            reassign=reassign,
         )
 
     def _host_global_batch(self, seed, step, device_put: bool = True):
+        if device_put and self._multiprocess:
+            # multi-host: each process materializes ONLY its own shards' rows
+            # and contributes them as the addressable part of one global array
+            from repro import cluster
+
+            return cluster.global_shard_batch(self.source, seed, step,
+                                              self.mesh, self.axis)
         x = np.stack([np.asarray(self.source(seed, step, s)) for s in range(self.n_shards)])
         if device_put and self.mesh is not None:
             x = jax.device_put(x, NamedSharding(self.mesh, P(self.axis)))
@@ -296,16 +375,86 @@ class StreamEngine:
         return self._update(state, x, jnp.int32(step))
 
     def run(self, steps: int, seed: int | None = None,
-            state: EngineState | None = None) -> StreamResult:
-        """Pull ``steps`` global batches from the source and fold them.
+            state: EngineState | None = None, *, start_step: int = 0,
+            checkpoint_dir: str | None = None,
+            checkpoint_every: int = 0) -> StreamResult:
+        """Fold global batches ``start_step .. steps-1`` from the source.
 
         ``seed`` is forwarded to the source (None = the source's own default);
-        it only selects the data stream — sketch masks key off the spec."""
-        state = state if state is not None else self.init_state(seed)
-        for step in range(steps):
+        it only selects the data stream — sketch masks key off the spec.
+
+        The loop is an explicit-state fold, resumable from ANY step: a fresh
+        call starts at step 0 from :meth:`init_state`; passing ``state=`` and
+        ``start_step=`` (e.g. from :meth:`restore_state`) continues a prior
+        run bit-identically — the (seed, step, shard) contract regenerates
+        every remaining batch and mask, so nothing about the interrupted run
+        needs to have been stored beyond the fixed-size state.
+
+        ``checkpoint_every=t`` writes the EngineState to ``checkpoint_dir``
+        every t folded steps via ``train.checkpoint``'s atomic protocol
+        (multi-process runs: process 0 writes; the state is replicated)."""
+        if checkpoint_every and not checkpoint_dir:
+            raise ValueError("checkpoint_every needs checkpoint_dir=")
+        if state is None:
+            if start_step != 0:
+                raise ValueError("start_step > 0 needs the state that was "
+                                 "current at that step (restore_state)")
+            state = self.init_state(seed)
+        if self._multiprocess:
+            # host-ify so jit replicates identical per-process copies onto the
+            # multi-host mesh (init/restored states live on local devices)
+            state = jax.tree.map(np.asarray, state)
+        track = self.kmeans is not None and self.kmeans.track_reassignments
+        history: list[np.ndarray] = []
+        for step in range(start_step, steps):
             state = self.update(state, self._host_global_batch(seed, step), step)
+            if track:
+                # copy NOW — the buffer is donated back at the next update
+                history.append(np.asarray(state.reassign[1]))
+            if checkpoint_every and (step + 1 - start_step) % checkpoint_every == 0:
+                self.save_state(checkpoint_dir, step + 1, state, seed=seed)
         self.state = state
-        return self.finalize(state)
+        result = self.finalize(state)
+        if track and history:
+            result = dataclasses.replace(result,
+                                         reassign_counts=np.stack(history))
+        return result
+
+    # ---------------------------------------------------- checkpoint/restore --
+
+    def save_state(self, ckpt_dir: str, step: int,
+                   state: EngineState | None = None,
+                   seed: int | None = None) -> None:
+        """Checkpoint ``state`` (default: the engine's current one) as
+        step ``step`` — the number of steps already folded, i.e. the step a
+        restored run resumes at. One writer per cluster: only process 0
+        writes (the state is replicated across processes by construction)."""
+        state = state if state is not None else self.state
+        if state is None:
+            raise RuntimeError("no state to checkpoint — run() first or pass "
+                               "state=")
+        if jax.process_index() != 0:
+            return
+        from repro.stream import state as state_mod
+
+        state_mod.save_engine(ckpt_dir, step, state, extra={
+            "p_pad": int(self.spec.p_pad), "n_shards": self.n_shards,
+            "seed": seed})
+
+    def restore_state(self, ckpt_dir: str) -> tuple[EngineState, int]:
+        """(state, next_step) from the latest checkpoint under ``ckpt_dir`` —
+        feed straight into ``run(steps, state=state, start_step=next_step)``
+        to continue, or into ``replay(state=state)`` to refine the restored
+        stream without re-running it."""
+        from repro.stream import state as state_mod
+
+        state, next_step, extra = state_mod.load_engine(ckpt_dir)
+        p_pad = extra.get("p_pad")
+        if p_pad is not None and int(p_pad) != int(self.spec.p_pad):
+            raise ValueError(f"checkpoint was written at p_pad={p_pad}, this "
+                             f"engine has p_pad={self.spec.p_pad}")
+        self.state = state
+        return state, next_step
 
     def run_scanned(self, xs) -> StreamResult:
         """Fold a pre-staged stream ``xs (steps, n_shards, b, p)`` as ONE jitted
@@ -535,9 +684,14 @@ class StreamEngine:
         if state.kmeans is not None:
             centers_pre, obj = acc.kmeans_finalize(state.kmeans)
             centers = sketch_mod.unmix_dense(centers_pre, self.spec)
+        r_total = r_last = None
+        if state.reassign is not None:
+            r_total = np.asarray(state.reassign[0])
+            r_last = np.asarray(state.reassign[1])
         return StreamResult(mean=mean, cov=cov, count=count,
                             centers=centers, centers_pre=centers_pre, kmeans_obj=obj,
-                            cov_lowrank=cov_lowrank)
+                            cov_lowrank=cov_lowrank,
+                            reassign_total=r_total, reassign_last=r_last)
 
     def assign(self, batch: SparseRows, state: EngineState | None = None) -> jax.Array:
         """Labels for already-sketched rows under the best hypothesis' centers."""

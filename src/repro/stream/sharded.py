@@ -124,6 +124,88 @@ def sharded_cov(s: SparseRows, mesh, axes=("data",)) -> jax.Array:
     return acc.moment_finalize_cov(st, s.m)
 
 
+@functools.lru_cache(maxsize=None)
+def _kmeans_step_fn(mesh, axis, p, decay, track):
+    """Compiled mini-batch K-means step: local masked delta per shard, ONE psum
+    of the fixed-size (sums, cnts, obj, n) delta, apply on replicated state.
+    Cached per (mesh, axis, p, decay, track) so streaming callers compile once."""
+    from repro.core.kmeans import sparse_sq_dists
+
+    def local(state, values, indices, mask):
+        k = state.centers.shape[1]
+        maskf = mask.astype(jnp.float32)
+        maski = jnp.broadcast_to(mask.astype(jnp.int32)[:, None], indices.shape)
+
+        def one(centers):
+            d = sparse_sq_dists(values, indices, centers)        # (n, K)
+            a = jnp.argmin(d, axis=1)
+            rows = jnp.broadcast_to(a[:, None], indices.shape)
+            # Zero-pad rows are REAL points at the origin to the scatter adds
+            # (unlike the linear moment deltas) — the mask zeroes their
+            # values, counts, and objective contributions explicitly.
+            sums = jnp.zeros((k, p), jnp.float32).at[rows, indices].add(
+                values.astype(jnp.float32) * maskf[:, None])
+            cnts = jnp.zeros((k, p), jnp.int32).at[rows, indices].add(maski)
+            obj = jnp.sum(jnp.min(d, axis=1) * maskf).astype(jnp.float32)
+            return sums, cnts, obj, a.astype(jnp.int32)
+
+        sums, cnts, obj, assign = jax.vmap(one)(state.centers)
+        delta = jax.lax.psum(
+            (sums, cnts, obj, jnp.sum(mask).astype(jnp.int32)), axis)
+        new = acc.kmeans_apply(state, delta, decay)
+        if not track:
+            return new
+
+        def reassigned(c_new, a_prev):
+            a1 = jnp.argmin(sparse_sq_dists(values, indices, c_new), axis=1)
+            return jnp.sum((a1.astype(jnp.int32) != a_prev)
+                           * mask.astype(jnp.int32)).astype(jnp.int32)
+
+        cnt = jax.lax.psum(jax.vmap(reassigned)(new.centers, assign), axis)
+        return new, cnt
+
+    row_spec = P(axis, None)
+    out = (P(), P()) if track else P()
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(), row_spec, row_spec, P(axis)),
+                             out_specs=out))
+
+
+def sharded_kmeans_step(state: acc.KMeansState, s: SparseRows, mesh,
+                        axis: str = "data", *, decay: float = 1.0,
+                        track_reassignments: bool = False, mask=None):
+    """One streaming mini-batch K-means step over a row-sharded step sketch.
+
+    The mesh-resident analogue of ``kmeans_delta`` + ``kmeans_apply``:
+    assignment stays local to each shard, the only collective is one psum of
+    the fixed-size delta, and the Eq.-39 apply (with ``decay``) runs once on
+    the replicated state — so sharded streaming matches the host loop to
+    float-summation reordering. Returns ``(new_state, reassigned)`` where
+    ``reassigned`` is the psum'd (r,) int32 reassignment count when
+    ``track_reassignments`` (one extra assignment pass under the NEW centers),
+    else ``None``.
+
+    Rows are zero-padded to divide the mesh's shard count; because padded rows
+    would be real origin points to the scatter adds, an explicit row ``mask``
+    zeroes their contribution (multiprocess callers pass pre-assembled global
+    arrays plus their own mask; single-host callers may leave ``mask=None``).
+    """
+    n = s.values.shape[0]
+    n_shards = mesh.shape[axis]
+    values, indices = s.values, s.indices
+    if mask is None:
+        pad = -n % n_shards
+        mask = jnp.ones((n,), jnp.int32)
+        if pad:
+            values = jnp.pad(values, ((0, pad), (0, 0)))
+            indices = jnp.pad(indices, ((0, pad), (0, 0)))
+            mask = jnp.pad(mask, (0, pad))
+    fn = _kmeans_step_fn(mesh, axis, s.p, float(decay),
+                         bool(track_reassignments))
+    out = fn(state, values, indices, mask)
+    return out if track_reassignments else (out, None)
+
+
 # --------------------------------------------- distributed-data entry points --
 # Absorbed from the retired repro.core.distributed module (paper §I's
 # distributed setting): place rows on the mesh, sketch them in place, and run

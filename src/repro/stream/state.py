@@ -1,0 +1,271 @@
+"""The EngineState lifecycle protocol — ``init / fold / merge / finalize /
+to_arrays / from_arrays`` for every accumulator kind in the repo.
+
+The paper's one-pass estimators all reduce to the same state shape: a
+fixed-size accumulator folded per (step, shard) sketch, finalized once. This
+module makes that lifecycle EXPLICIT and uniform across the four state kinds —
+
+- ``moment``  (:class:`repro.stream.accumulators.MomentState`) — Thm-4/Thm-6;
+- ``km``      (:class:`repro.stream.accumulators.KMeansState`) — mini-batch
+              streaming K-means (Eq. 39 online means);
+- ``range``   (:class:`repro.lowrank.RangeState`) — randomized range-finder;
+- ``fd``      (:class:`repro.lowrank.FDState`) — Frequent Directions —
+
+so every layer (stream engine, api estimators, fused runs, sketchserve
+snapshots, cluster re-sharding) speaks ONE serialization and ONE merge
+algebra instead of per-layer bespoke export paths:
+
+- ``to_arrays(state)`` → flat ``{"<kind>.<field>": np.ndarray}`` dict (the
+  checkpoint wire format of ``repro.train.checkpoint.save_arrays``);
+- ``from_arrays(arrs)`` → the state back, kind detected from the key prefix;
+- ``merge(a, b)`` → the combined state, as if a's and b's folds had been one
+  stream. Moment/range states are linear (element-wise add — Thm-4/6 sums
+  commute); K-means merges per-coordinate running means by their counts
+  (count-weighted mean — exactly what folding both delta streams would have
+  accumulated); FD row-appends both sketches and SVD-shrinks back to l (the
+  associative coreset-tree merge of Barger & Feldman). Merge-ability is what
+  elastic re-sharding (repro.cluster.elastic) and the ROADMAP coreset trees
+  stand on: partial per-worker states combine into the global one.
+
+The composite :class:`repro.stream.engine.EngineState` (moments/kmeans/
+lowrank/reassign slots) serializes through the same functions via
+``engine_to_arrays`` / ``engine_from_arrays`` / ``engine_merge``, and
+``save_engine`` / ``load_engine`` put it on disk through the
+``train.checkpoint`` atomic-rename protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import lowrank as lowrank_mod
+from repro.lowrank import fd as _fd
+from repro.stream import accumulators as acc
+from repro.train import checkpoint
+
+
+# ----------------------------------------------------------------- registry --
+
+
+@dataclasses.dataclass(frozen=True)
+class StateKind:
+    """One accumulator kind's protocol entry.
+
+    ``fields`` are serialized in order as ``<name>.<field>``; ``optional``
+    fields may be None (skipped on save, restored as None when absent).
+    ``merge(a, b)`` combines two states folded from disjoint sub-streams.
+    """
+
+    name: str
+    cls: type
+    fields: tuple[str, ...]
+    merge: Callable[[Any, Any], Any]
+    optional: tuple[str, ...] = ()
+
+
+STATE_KINDS: dict[str, StateKind] = {}
+_CLS_TO_KIND: dict[type, StateKind] = {}
+
+
+def register_state(kind: StateKind) -> StateKind:
+    STATE_KINDS[kind.name] = kind
+    _CLS_TO_KIND[kind.cls] = kind
+    return kind
+
+
+def kind_of(state: Any) -> StateKind:
+    k = _CLS_TO_KIND.get(type(state))
+    if k is None:
+        raise TypeError(f"{type(state).__name__} is not a registered "
+                        f"EngineState kind (have: {sorted(STATE_KINDS)})")
+    return k
+
+
+# ------------------------------------------------------------ merge algebra --
+
+
+def _merge_linear(a, b):
+    """Element-wise add — the merge of any linear (delta-sum) accumulator.
+    None-aware for optional fields (e.g. MomentState.sum_wwt, mean-only)."""
+    cls = type(a)
+    vals = []
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if va is None or vb is None:
+            if (va is None) != (vb is None):
+                raise ValueError(f"cannot merge: field {f.name!r} is None on "
+                                 "one state only (track_cov mismatch?)")
+            vals.append(None)
+        else:
+            vals.append(va + vb)
+    return cls(*vals)
+
+
+def _merge_kmeans(a: acc.KMeansState, b: acc.KMeansState) -> acc.KMeansState:
+    """Count-weighted per-coordinate mean merge (the Eq.-39 running means of
+    the union stream): each center coordinate is Σ values / Σ counts over both
+    halves, which is exactly what folding both delta streams into one state
+    accumulates. Coordinates untouched by either half keep a's value (the
+    never-sampled-coordinate convention); obj and count add."""
+    ca, cb = a.counts.astype(jnp.float32), b.counts.astype(jnp.float32)
+    tot = ca + cb
+    centers = jnp.where(
+        tot > 0,
+        (a.centers * ca + b.centers * cb) / jnp.maximum(tot, 1.0),
+        a.centers)
+    return acc.KMeansState(centers, a.counts + b.counts, a.obj + b.obj,
+                           a.count + b.count)
+
+
+def _merge_fd(a: lowrank_mod.FDState, b: lowrank_mod.FDState) -> lowrank_mod.FDState:
+    """Row-append both sketches, SVD-shrink back to l (Frequent Directions'
+    associative merge — error bounds add, so a merge tree of segment sketches
+    is as good as one sequential pass up to the summed shrink error)."""
+    ell = a.sketch.shape[0]
+    if b.sketch.shape[0] != ell:
+        raise ValueError(f"cannot merge FD states of widths {ell} and "
+                         f"{b.sketch.shape[0]}")
+    stacked = jnp.concatenate([a.sketch, b.sketch], axis=0)
+    return lowrank_mod.FDState(_fd._shrink(stacked, ell), a.diag + b.diag,
+                               a.sum_w + b.sum_w, a.count + b.count)
+
+
+register_state(StateKind(
+    name="moment", cls=acc.MomentState,
+    fields=("sum_w", "sum_wwt", "count"), merge=_merge_linear,
+    optional=("sum_wwt",)))
+register_state(StateKind(
+    name="km", cls=acc.KMeansState,
+    fields=("centers", "counts", "obj", "count"), merge=_merge_kmeans))
+register_state(StateKind(
+    name="range", cls=lowrank_mod.RangeState,
+    fields=("y", "diag", "sum_w", "count"), merge=_merge_linear))
+register_state(StateKind(
+    name="fd", cls=lowrank_mod.FDState,
+    fields=("sketch", "diag", "sum_w", "count"), merge=_merge_fd))
+
+
+def merge(a: Any, b: Any) -> Any:
+    """Combine two same-kind states folded from disjoint sub-streams."""
+    ka, kb = kind_of(a), kind_of(b)
+    if ka.name != kb.name:
+        raise TypeError(f"cannot merge {ka.name!r} with {kb.name!r}")
+    return ka.merge(a, b)
+
+
+# ------------------------------------------------------------ serialization --
+
+
+def to_arrays(state: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    """State → flat ``{prefix<kind>.<field>: np.ndarray}`` (the checkpoint
+    wire format). None fields are skipped; :func:`from_arrays` restores them
+    as None."""
+    k = kind_of(state)
+    out: dict[str, np.ndarray] = {}
+    for f in k.fields:
+        v = getattr(state, f)
+        if v is None:
+            if f not in k.optional:
+                raise ValueError(f"{k.name}.{f} is None but not optional")
+            continue
+        out[f"{prefix}{k.name}.{f}"] = np.asarray(v)
+    return out
+
+
+def from_arrays(arrs: dict, prefix: str = "", kinds: tuple[str, ...] | None = None) -> Any:
+    """The :func:`to_arrays` inverse — kind detected from the key prefix.
+    Returns None when ``arrs`` holds no state under ``prefix``. ``kinds``
+    restricts detection (e.g. a dict holding both a moment and a km state
+    needs the caller to say which slot it is loading)."""
+    for k in STATE_KINDS.values():
+        if kinds is not None and k.name not in kinds:
+            continue
+        head = f"{prefix}{k.name}."
+        if any(key.startswith(head) for key in arrs):
+            vals = []
+            for f in k.fields:
+                v = arrs.get(f"{head}{f}")
+                if v is None and f not in k.optional:
+                    raise KeyError(f"state arrays missing {head}{f}")
+                vals.append(None if v is None else jnp.asarray(v))
+            return k.cls(*vals)
+    return None
+
+
+# ----------------------------------------------- the engine-state composite --
+# EngineState (repro.stream.engine) is a fixed composite of protocol states:
+# moments | lowrank (exactly one second-moment path), optional kmeans, and
+# the optional reassignment-count slot. Serializing it is just serializing
+# each occupied slot under its slot prefix.
+
+_ENGINE_SLOTS = ("moments", "kmeans", "lowrank")
+
+
+def engine_to_arrays(state) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    for slot in _ENGINE_SLOTS:
+        sub = getattr(state, slot)
+        if sub is not None:
+            out.update(to_arrays(sub, prefix=f"{slot}/"))
+    reassign = getattr(state, "reassign", None)
+    if reassign is not None:
+        out["reassign/total"] = np.asarray(reassign[0])
+        out["reassign/last"] = np.asarray(reassign[1])
+    return out
+
+
+def engine_from_arrays(arrs: dict):
+    from repro.stream.engine import EngineState
+
+    slots = {slot: from_arrays(arrs, prefix=f"{slot}/") for slot in _ENGINE_SLOTS}
+    reassign = None
+    if "reassign/total" in arrs:
+        reassign = (jnp.asarray(arrs["reassign/total"]),
+                    jnp.asarray(arrs["reassign/last"]))
+    return EngineState(**slots, reassign=reassign)
+
+
+def engine_merge(a, b):
+    """Merge two EngineStates folded from disjoint (step, shard) cells of the
+    same grid — the elastic re-sharding primitive. Reassignment counters add
+    (total) / add (last: both halves saw the same last step's disjoint rows)."""
+    from repro.stream.engine import EngineState
+
+    merged = {}
+    for slot in _ENGINE_SLOTS:
+        sa, sb = getattr(a, slot), getattr(b, slot)
+        if (sa is None) != (sb is None):
+            raise ValueError(f"cannot merge EngineStates: slot {slot!r} "
+                             "occupied on one side only")
+        merged[slot] = None if sa is None else merge(sa, sb)
+    ra, rb = a.reassign, b.reassign
+    if (ra is None) != (rb is None):
+        raise ValueError("cannot merge EngineStates: reassign tracked on one "
+                         "side only")
+    reassign = None if ra is None else (ra[0] + rb[0], ra[1] + rb[1])
+    return EngineState(**merged, reassign=reassign)
+
+
+# ------------------------------------------------------------- persistence --
+
+
+def save_engine(ckpt_dir: str, step: int, state, extra: dict | None = None,
+                keep_last: int = 3) -> None:
+    """Checkpoint an EngineState (+ JSON ``extra``, e.g. the stream cursor)
+    through the ``train.checkpoint`` atomic-rename protocol. ``step`` is the
+    number of steps already folded — the step the restored run resumes AT."""
+    meta = dict(extra or {})
+    meta["next_step"] = int(step)
+    checkpoint.save_arrays(ckpt_dir, step, engine_to_arrays(state), extra=meta,
+                           keep_last=keep_last)
+
+
+def load_engine(ckpt_dir: str):
+    """(state, next_step, extra) from the latest checkpoint under ``ckpt_dir``."""
+    arrs, extra = checkpoint.load_arrays(ckpt_dir)
+    state = engine_from_arrays(arrs)
+    return state, int(extra.get("next_step", 0)), extra

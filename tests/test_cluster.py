@@ -1,0 +1,161 @@
+"""repro.cluster bootstrap units + the 2-process jax.distributed smoke lane.
+
+The slow test is the CI acceptance gate for multi-host ingest: two REAL OS
+processes (gloo CPU collectives) run the same sharded fit — engine and
+estimator layer — and must match a single-process run to 1e-5. Everything the
+processes exchange is the per-step psum'd delta; the data itself regenerates
+per-host from the (seed, step, shard) contract.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.api.plan import mesh_from_spec, mesh_spec
+
+# --------------------------------------------------------- bootstrap units --
+
+
+def test_initialize_single_process_is_noop():
+    assert cluster.initialize() is False
+    assert cluster.initialize(num_processes=1) is False
+    assert cluster.is_multiprocess() is False
+
+
+def test_process_mesh_contiguous_and_cached():
+    m = cluster.process_mesh(1)
+    assert m.axis_names == ("data",)
+    assert m.devices.shape == (1,)
+    assert cluster.process_mesh(1) is m  # cached → shard_map caches stay warm
+    with pytest.raises(ValueError, match="devices"):
+        cluster.process_mesh(4096)
+
+
+def test_local_shards_single_process_owns_all():
+    m = cluster.process_mesh(1)
+    assert cluster.local_shards(m) == [0]
+    with pytest.raises(ValueError, match="1-D"):
+        cluster.local_shards(jax.sharding.Mesh(
+            np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b")))
+
+
+def test_global_rows_single_process():
+    m = cluster.process_mesh(1)
+    arr = np.arange(12, dtype=np.float32).reshape(4, 3)
+    out = cluster.global_rows(arr, m)
+    np.testing.assert_array_equal(np.asarray(out), arr)
+    assert out.sharding.mesh.axis_names == ("data",)
+
+
+def test_mesh_spec_roundtrip():
+    m = jax.make_mesh((1,), ("data",))
+    spec = mesh_spec(m)
+    assert spec == {"axis_names": ["data"], "shape": [1]}
+    m2 = mesh_from_spec(spec)
+    assert m2.axis_names == ("data",)
+    assert dict(m2.shape) == {"data": 1}
+    assert mesh_spec(None) is None
+    assert mesh_from_spec(None) is None
+
+
+# ------------------------------------------------- the 2-process smoke lane --
+
+_FIT = """
+import jax
+import numpy as np
+from repro.api import Plan, SparsifiedCov, SparsifiedKMeans, fit_many
+from repro.core import sketch as sketch_mod
+from repro.stream.engine import StreamEngine, StreamKMeansConfig
+
+B, P = 32, 24
+
+def source(seed, step, shard):
+    k = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed or 0), step), shard)
+    return jax.random.normal(k, (B, P))
+
+def run(mesh):
+    plan = Plan(backend="sharded", gamma=0.4, batch_size=B, n_shards=2)
+    cov = SparsifiedCov(plan, key=7)
+    km = SparsifiedKMeans(3, plan, key=7, algorithm="minibatch")
+    fit_many(plan, [cov, km], source=source, steps=5, seed=11)
+
+    spec = sketch_mod.make_spec(P, jax.random.PRNGKey(7), gamma=0.4)
+    eng = StreamEngine(spec, source, n_shards=2, mesh=mesh,
+                       kmeans=StreamKMeansConfig(3, n_init=2))
+    res = eng.run(5, seed=11)
+    return {
+        "mean": np.asarray(cov.mean_).tolist(),
+        "cov_tr": float(np.trace(np.asarray(cov.cov_))),
+        "count": int(cov.count_),
+        "centers": np.asarray(km.centers_).tolist(),
+        "reassign": np.asarray(km.reassign_counts_).tolist(),
+        "eng_mean": np.asarray(res.mean).tolist(),
+        "eng_cov_tr": float(np.trace(np.asarray(res.cov))),
+        "eng_centers": np.asarray(res.centers).tolist(),
+        "eng_count": int(res.count),
+    }
+"""
+
+_WORKER = _FIT + """
+import sys
+from repro import cluster
+
+pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+cluster.initialize(f"127.0.0.1:{port}", nproc, pid)
+out = run(cluster.process_mesh(2))
+if pid == 0:
+    import json
+    print("RESULT" + json.dumps(out))
+"""
+
+_REF = _FIT + """
+import json
+print("RESULT" + json.dumps(run(jax.make_mesh((2,), ("data",)))))
+"""
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.slow
+def test_two_process_sharded_matches_single_process(tmp_path):
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env.update(PYTHONPATH="src", JAX_PLATFORMS="cpu")
+
+    worker = tmp_path / "worker.py"
+    worker.write_text(textwrap.dedent(_WORKER))
+    port = _free_port()
+    procs = [subprocess.Popen(
+        [sys.executable, str(worker), str(pid), "2", str(port)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for pid in range(2)]
+    outs = [p.communicate(timeout=600) for p in procs]
+    for p, (o, e) in zip(procs, outs):
+        assert p.returncode == 0, f"worker failed:\n{e[-4000:]}"
+    got = json.loads(outs[0][0].split("RESULT", 1)[1])
+
+    ref_env = dict(env, XLA_FLAGS="--xla_force_host_platform_device_count=2")
+    ref_out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_REF)], env=ref_env,
+        capture_output=True, text=True, timeout=600)
+    assert ref_out.returncode == 0, ref_out.stderr[-4000:]
+    ref = json.loads(ref_out.stdout.split("RESULT", 1)[1])
+
+    for k in ("mean", "centers", "eng_mean", "eng_centers"):
+        np.testing.assert_allclose(got[k], ref[k], atol=1e-5)
+    for k in ("cov_tr", "eng_cov_tr"):
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-5)
+    assert got["count"] == ref["count"] == 5 * 2 * 32
+    assert got["eng_count"] == ref["eng_count"]
+    assert got["reassign"] == ref["reassign"]

@@ -332,13 +332,24 @@ def test_snapshot_restore_bit_identical_and_resumable(tmp_path):
         assert "no ingested rows" in s4.query("fresh", "mean").error
 
 
-def test_snapshot_rejects_unserializable_plans(tmp_path):
+def test_snapshot_mesh_plan_roundtrip(tmp_path):
+    """A Plan holding an explicit mesh snapshots as its GEOMETRY (axis names
+    + shape, repro.api.plan.mesh_spec) and restores as an equivalent mesh on
+    the restoring host's devices — bit-identical queries either side."""
     mesh = jax.make_mesh((1,), ("data",))
+    x = _x(2 * BS)
     with SketchService() as svc:
         svc.create_tenant("t", "mean", plan=_plan(backend="sharded", mesh=mesh),
                           key=1)
-        with pytest.raises(RuntimeError, match="mesh"):
-            svc.snapshot(str(tmp_path))
+        svc.ingest("t", x).result()
+        ref = svc.query("t", "mean").unwrap()
+        svc.snapshot(str(tmp_path))
+    with restore_service(str(tmp_path)) as s2:
+        got = s2.query("t", "mean").unwrap()
+        np.testing.assert_array_equal(ref, got)
+        restored = s2._groups["t"].plan.mesh
+        assert restored is not None
+        assert restored.axis_names == ("data",) and restored.shape["data"] == 1
 
 
 # ------------------------------------------------------------ QueueSource ---
