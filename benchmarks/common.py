@@ -2,10 +2,20 @@
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Iterable
 
 import jax
 import numpy as np
+
+from repro.obs import quantiles
+
+
+def latency_ms(lat_s: Iterable[float],
+               qs: tuple[float, ...] = (0.5, 0.99)) -> tuple[float, ...]:
+    """Latency quantiles in milliseconds from a sequence of seconds — thin
+    shim over :func:`repro.obs.quantiles`, the repo's ONE quantile
+    implementation (the launch drivers use it directly)."""
+    return quantiles((v * 1e3 for v in lat_s), qs)
 
 
 def spiked(key, n: int, p: int, k: int, noise: float = 1e-2,

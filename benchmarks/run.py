@@ -29,6 +29,7 @@ def main() -> None:
         grad_compress_bench,
         kernel_bench,
         lowrank_bench,
+        obs_bench,
         refine_bench,
         serve_bench,
         stream_bench,
@@ -51,6 +52,7 @@ def main() -> None:
         ("refine_bench", refine_bench.run),
         ("serve_bench", serve_bench.run),
         ("cluster_bench", cluster_bench.run),
+        ("obs_bench", obs_bench.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -29,7 +29,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, latency_ms
 from repro.api import Plan
 from repro.sketchserve import SketchService, restore_service
 
@@ -79,7 +79,7 @@ def tenant_sweep(n_tenants: int, rng) -> None:
             tq = time.perf_counter()
             svc.query(f"t{i}", "components").unwrap()
             lat.append(time.perf_counter() - tq)
-        p50, p99 = np.quantile(np.array(lat) * 1e3, [0.5, 0.99])
+        p50, p99 = latency_ms(lat)
 
         # per-tenant resident fold state: sketch-sized, NEVER the (p, p)
         # accumulator — and constant in rows ingested (sub-linear total memory)

@@ -7,6 +7,9 @@
   grid — each worker replays only the shards its new layout owns; deltas are
   merged and applied once per step, so the continued run matches the original
   layout to float-summation reordering.
+- heartbeat: per-host liveness stamps as a registered state kind ("hb") —
+  gathered/merged through the EngineState wire format and published as
+  ``cluster.*`` gauges (repro.obs).
 """
 from repro.cluster.bootstrap import (  # noqa: F401
     global_rows,
@@ -15,6 +18,13 @@ from repro.cluster.bootstrap import (  # noqa: F401
     is_multiprocess,
     local_shards,
     process_mesh,
+)
+from repro.cluster.heartbeat import (  # noqa: F401
+    Heartbeat,
+    beat,
+    gather,
+    publish,
+    publish_local,
 )
 from repro.cluster.elastic import (  # noqa: F401
     apply_step,

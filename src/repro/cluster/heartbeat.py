@@ -1,0 +1,115 @@
+"""Per-host liveness heartbeats on the EngineState wire format.
+
+A :class:`Heartbeat` is a tiny accumulator — (hosts, step, rows, newest /
+oldest stamp time) — registered as state kind ``"hb"`` in
+:mod:`repro.stream.state`. That buys the whole lifecycle for free: host
+stamps serialize through ``to_arrays``/``from_arrays`` (so they ride the
+``train.checkpoint`` protocol and any transport that moves checkpoint
+dicts), and the cluster-wide view is literally ``merge`` over stamps —
+hosts add, steps max, stamp times max/min — the same algebra every other
+accumulator kind speaks.
+
+The flow on each host::
+
+    hb = heartbeat.beat(step, rows)          # stamp local progress
+    heartbeat.publish_local(hb)              # per-host gauges (host=<pid>)
+    view = heartbeat.gather(hb)              # allgather+merge (no-op 1-host)
+    heartbeat.publish(view)                  # cluster.{hosts,step,rows,...}
+
+``publish`` exposes the merged view as registry gauges, including
+``cluster.heartbeat_age_s`` (now − newest stamp: is anyone alive?) and
+``cluster.straggler_lag_s`` (newest − oldest stamp: is someone behind?).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.cluster import bootstrap
+from repro.stream import state as _state
+
+
+@dataclasses.dataclass(frozen=True)
+class Heartbeat:
+    """One or more merged host stamps. Scalars (0-d arrays on the wire)."""
+
+    hosts: Any    # stamps merged in (1 per host beat)
+    step: Any     # max engine step any merged host reached
+    rows: Any     # total rows folded across merged hosts
+    t_last: Any   # newest stamp time (unix seconds)
+    t_first: Any  # oldest stamp time
+
+
+def _merge_hb(a: Heartbeat, b: Heartbeat) -> Heartbeat:
+    return Heartbeat(
+        hosts=a.hosts + b.hosts,
+        step=np.maximum(a.step, b.step),
+        rows=a.rows + b.rows,
+        t_last=np.maximum(a.t_last, b.t_last),
+        t_first=np.minimum(a.t_first, b.t_first))
+
+
+_state.register_state(_state.StateKind(
+    name="hb", cls=Heartbeat,
+    fields=("hosts", "step", "rows", "t_last", "t_first"), merge=_merge_hb))
+
+
+def beat(step: int, rows: int = 0, t: float | None = None) -> Heartbeat:
+    """Stamp this host's progress as a single-host Heartbeat."""
+    t = time.time() if t is None else float(t)
+    return Heartbeat(hosts=np.int32(1), step=np.int64(step),
+                     rows=np.int64(rows), t_last=np.float64(t),
+                     t_first=np.float64(t))
+
+
+def gather(hb: Heartbeat) -> Heartbeat:
+    """The cluster-wide merged view: allgather every process's stamp (over
+    the wire-format dict) and fold with the hb merge algebra. Single-process
+    runs return ``hb`` unchanged."""
+    if not bootstrap.is_multiprocess():
+        return hb
+    from jax.experimental import multihost_utils
+
+    arrs = _state.to_arrays(hb)
+    gathered = multihost_utils.process_allgather(arrs)  # leading process axis
+    n = int(next(iter(gathered.values())).shape[0])
+    per_host = [_state.from_arrays({k: v[i] for k, v in gathered.items()},
+                                   kinds=("hb",))
+                for i in range(n)]
+    return functools.reduce(_state.merge, per_host)
+
+
+def publish(hb: Heartbeat, registry: obs.MetricsRegistry | None = None,
+            now: float | None = None) -> dict[str, float]:
+    """Expose a (merged) Heartbeat as ``cluster.*`` gauges; returns the
+    values set. ``heartbeat_age_s`` answers "is anyone alive?",
+    ``straggler_lag_s`` answers "is someone behind?"."""
+    reg = registry if registry is not None else obs.default_registry()
+    now = time.time() if now is None else float(now)
+    vals = {
+        "cluster.hosts": float(int(hb.hosts)),
+        "cluster.step": float(int(hb.step)),
+        "cluster.rows": float(int(hb.rows)),
+        "cluster.heartbeat_age_s": max(0.0, now - float(hb.t_last)),
+        "cluster.straggler_lag_s": max(0.0, float(hb.t_last) - float(hb.t_first)),
+    }
+    for name, v in vals.items():
+        reg.gauge(name).set(v)
+    return vals
+
+
+def publish_local(hb: Heartbeat, host: int | str | None = None,
+                  registry: obs.MetricsRegistry | None = None) -> None:
+    """Per-host gauges (``cluster.host_step{host=<pid>}`` etc.) from this
+    host's own stamp — the labeled series a scraper graphs per worker."""
+    reg = registry if registry is not None else obs.default_registry()
+    h = str(jax.process_index() if host is None else host)
+    reg.gauge("cluster.host_step", host=h).set(int(hb.step))
+    reg.gauge("cluster.host_rows", host=h).set(int(hb.rows))
+    reg.gauge("cluster.host_beat_t", host=h).set(float(hb.t_last))

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import fwht as _fwht
 from repro.kernels import ref as _ref
 from repro.kernels import sketch_fused as _sf
@@ -24,10 +25,23 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _count_dispatch(op: str, path: str) -> None:
+    """Tally a resolved backend choice as ``kernels.dispatch{op=,path=}``.
+
+    The wrappers below run at JAX trace time, not per device step, so this is
+    a handful of counter bumps per compilation — cheap enough to be always-on.
+    Watch the ``path="ref"`` series to catch silent demotions to the jnp
+    fallback (e.g. a VMEM-gate regression) that would otherwise only show up
+    as a perf cliff.
+    """
+    obs.default_registry().counter("kernels.dispatch", op=op, path=path).inc()
+
+
 def hd_precondition(x: jax.Array, signs: jax.Array, mode: str = "auto") -> jax.Array:
     """Fused y = H(d⊙x). mode ∈ {auto, kernel, interpret, ref}."""
     if mode == "auto":
         mode = "kernel" if _on_tpu() else "ref"
+    _count_dispatch("hd_precondition", mode)
     if mode == "ref":
         return _ref.ref_hd_precondition(x, signs)
     return _fwht.hd_precondition(x, signs, interpret=(mode == "interpret"))
@@ -37,6 +51,7 @@ def sparse_assign(values: jax.Array, indices: jax.Array, centers: jax.Array, mod
     """(dists, argmin) for sparsified K-means assignment."""
     if mode == "auto":
         mode = "kernel" if _on_tpu() else "ref"
+    _count_dispatch("sparse_assign", mode)
     if mode == "ref":
         return _ref.ref_sparse_assign(values, indices, centers)
     return _sa.sparse_assign(values, indices, centers, interpret=(mode == "interpret"))
@@ -78,6 +93,7 @@ def spmm(values: jax.Array, indices: jax.Array, dense: jax.Array,
          mode: str = "auto") -> jax.Array:
     """T (n, l) = W @ dense for compact sparse rows (the low-rank projection)."""
     mode = _sparse_mode(mode, *dense.shape, values.dtype, dense.dtype)
+    _count_dispatch("spmm", mode)
     if mode == "ref":
         return _ref.ref_spmm(values, indices, dense)
     return _spmm.spmm(values, indices, dense, interpret=(mode == "interpret"))
@@ -87,6 +103,7 @@ def spmm_t(values: jax.Array, indices: jax.Array, t: jax.Array, p: int,
            mode: str = "auto") -> jax.Array:
     """Y (p, l) = Wᵀ @ t — scatter sparse rows into the l-dim sketch."""
     mode = _sparse_mode(mode, p, t.shape[1], values.dtype, t.dtype)
+    _count_dispatch("spmm_t", mode)
     if mode == "ref":
         return _ref.ref_spmm_t(values, indices, t, p)
     return _spmm.spmm_t(values, indices, t, p, interpret=(mode == "interpret"))
@@ -105,10 +122,13 @@ def sketch_fused(x: jax.Array, signs: jax.Array, indices: jax.Array,
         mode = "kernel" if _on_tpu() else "ref"
     if mode in ("kernel", "interpret"):
         if x.shape[-1] <= _sf.MAX_P_FUSED:
+            _count_dispatch("sketch_fused", mode)
             return _sf.sketch_fused(x, signs, indices,
                                     interpret=(mode == "interpret"))
+        _count_dispatch("sketch_fused", f"{mode}_chunked")
         y = _fwht.hd_precondition(x, signs, interpret=(mode == "interpret"))
         return jnp.take_along_axis(y, indices, axis=-1)
+    _count_dispatch("sketch_fused", mode)
     return _ref.ref_sketch_fused(x, signs, indices)
 
 

@@ -53,6 +53,10 @@ def _parser() -> argparse.ArgumentParser:
                     help="checkpoint the EngineState every N steps")
     ap.add_argument("--resume", action="store_true",
                     help="continue from the latest checkpoint in --ckpt-dir")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="every N steps: process 0 emits a structured JSONL "
+                         "progress record and publishes the merged cluster "
+                         "heartbeat (0 = telemetry off)")
     return ap
 
 
@@ -64,7 +68,7 @@ def _spawn(args) -> int:
     cmd = [sys.executable, "-m", "repro.launch.cluster",
            "--coordinator", f"127.0.0.1:{port}"]
     for flag in ("nproc", "p", "batch", "steps", "shards", "kmeans_k", "seed",
-                 "ckpt_every"):
+                 "ckpt_every", "log_every"):
         cmd += [f"--{flag.replace('_', '-')}", str(getattr(args, flag))]
     cmd += ["--gamma", str(args.gamma)]
     if args.ckpt_dir:
@@ -105,10 +109,38 @@ def _worker(args) -> int:
             raise SystemExit("--resume needs --ckpt-dir")
         state, start = engine.restore_state(args.ckpt_dir)
 
+    tel = None
+    if args.log_every:
+        from repro import obs
+        from repro.stream import EngineTelemetry
+
+        reg = obs.MetricsRegistry()
+        log_every = args.log_every
+
+        def _on_step(rec, _reg=reg):
+            # every process stamps + gathers at the SAME steps (the heartbeat
+            # allgather is a collective — the condition must be symmetric);
+            # process 0 publishes the merged view as cluster.* gauges
+            if (rec["step"] + 1) % log_every:
+                return
+            hb = cluster.beat(rec["step"] + 1, rows=rec["rows_total"])
+            cluster.publish_local(hb, registry=_reg)
+            view = cluster.gather(hb)
+            if jax.process_index() == 0:
+                cluster.publish(view, registry=_reg)
+
+        logger = (obs.StepLogger(stream=sys.stderr,
+                                 static={"p": args.p, "shards": shards,
+                                         "nproc": args.nproc})
+                  if jax.process_index() == 0 else None)
+        tel = EngineTelemetry(registry=reg, step_logger=logger,
+                              log_every=log_every, on_step=_on_step)
+
     t0 = time.time()
     res = engine.run(args.steps, seed=args.seed, state=state, start_step=start,
                      checkpoint_dir=args.ckpt_dir,
-                     checkpoint_every=args.ckpt_every if args.ckpt_dir else 0)
+                     checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
+                     telemetry=tel)
     jax.block_until_ready(res.mean)
     dt = time.time() - t0
 
@@ -124,6 +156,13 @@ def _worker(args) -> int:
         if res.centers is not None:
             print(f"kmeans: K={args.kmeans_k}, "
                   f"best accumulated obj = {float(res.kmeans_obj):.2f}")
+        if tel is not None:
+            hbv = {m.name: m.value for m in tel.registry.metrics()
+                   if m.name.startswith("cluster.") and not m.labels}
+            if hbv:
+                print(f"heartbeat: hosts={hbv.get('cluster.hosts', 0):.0f} "
+                      f"step={hbv.get('cluster.step', 0):.0f} "
+                      f"straggler_lag={hbv.get('cluster.straggler_lag_s', 0):.3f}s")
     return 0
 
 

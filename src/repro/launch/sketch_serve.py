@@ -7,8 +7,11 @@ Spins up the service, creates ``--tenants`` tenants round-robin over
 ``--groups`` shared-sketch groups (each group gets one PCA + one K-means
 co-registered on one compression pass; extra members are means), fires
 ``--requests`` small ingest requests with a query mixed in every
-``--query-every``, then prints requests/sec, fold coalescing, query p50/p99,
-and (optionally) snapshots to ``--snapshot``.
+``--query-every``, then prints requests/sec, fold coalescing, query p50/p99
+(via :func:`repro.obs.quantiles`), the service's submit→resolve latency
+distribution, and (optionally) snapshots to ``--snapshot``.
+``--metrics-port`` serves the live registry as a Prometheus-style
+``/metrics`` endpoint for the duration of the run.
 """
 from __future__ import annotations
 
@@ -28,11 +31,14 @@ def main(argv=None):
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--snapshot", default=None, help="checkpoint dir (optional)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics on this port while the run lasts")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     import numpy as np
 
+    from repro import obs
     from repro.api import Plan
     from repro.sketchserve import SketchService
 
@@ -42,6 +48,10 @@ def main(argv=None):
     kinds = ("pca", "kmeans", "mean")
     t0 = time.time()
     with SketchService(max_batch=args.max_batch) as svc:
+        server = (obs.serve_metrics(svc.registry, port=args.metrics_port)
+                  if args.metrics_port is not None else None)
+        if server is not None:
+            print(f"metrics at {server.url}")
         for i in range(args.tenants):
             gid, kind = f"g{i % args.groups}", kinds[min(i // args.groups, 2)]
             extra = ({"n_components": 4} if kind == "pca"
@@ -63,10 +73,13 @@ def main(argv=None):
                 lat.append(time.time() - tq)
         rejected = sum(f.result().status == "rejected" for f in futs)
         dt = time.time() - t0
-        stats = dict(svc.stats)
+        stats = svc.stats
+        lat_summary = svc.registry.histogram("serve.request_seconds").summary()
         if args.snapshot:
             step = svc.snapshot(args.snapshot)
             print(f"snapshot step {step} -> {args.snapshot}")
+        if server is not None:
+            server.close()
 
     folds = max(stats["ingest_folds"], 1)
     print(f"tenants={args.tenants} groups={args.groups} "
@@ -77,9 +90,14 @@ def main(argv=None):
           f"{stats['ingest_requests'] / folds:.1f} requests/fold "
           f"(micro-batching), {rejected} rejected")
     if lat:
-        q = np.quantile(np.array(lat) * 1e3, [0.5, 0.99])
-        print(f"{len(lat)} queries (lazy finalize): p50={q[0]:.1f}ms "
-              f"p99={q[1]:.1f}ms")
+        p50, p99 = obs.quantiles((v * 1e3 for v in lat), (0.5, 0.99))
+        print(f"{len(lat)} queries (lazy finalize): p50={p50:.1f}ms "
+              f"p99={p99:.1f}ms")
+    if lat_summary.get("count"):
+        print(f"submit→resolve latency over {lat_summary['count']} requests: "
+              f"p50={lat_summary['p50'] * 1e3:.2f}ms "
+              f"p99={lat_summary['p99'] * 1e3:.2f}ms "
+              f"max={lat_summary['max'] * 1e3:.2f}ms")
 
 
 if __name__ == "__main__":

@@ -37,6 +37,13 @@ def main(argv=None):
                     help="covariance delta path (compact = the γ ≪ 1 memory fix)")
     ap.add_argument("--kmeans-k", type=int, default=0, help="0 disables streaming K-means")
     ap.add_argument("--kmeans-ninit", type=int, default=3)
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="emit a structured JSONL progress record every N steps "
+                         "(0 = telemetry off)")
+    ap.add_argument("--log-file", default=None,
+                    help="JSONL destination for --log-every (default: stderr)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the live registry at /metrics on this port")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -69,10 +76,29 @@ def main(argv=None):
                              track_cov=not args.no_cov, kmeans=km)
     spec = engine.spec
 
+    tel, server = None, None
+    if args.log_every or args.metrics_port is not None:
+        import sys
+
+        from repro import obs
+        from repro.stream import EngineTelemetry
+
+        reg = obs.MetricsRegistry()
+        logger = obs.StepLogger(
+            path=args.log_file, stream=None if args.log_file else sys.stderr,
+            static={"p": args.p, "shards": args.shards, "backend": backend})
+        tel = EngineTelemetry(registry=reg, step_logger=logger,
+                              log_every=max(args.log_every, 1))
+        if args.metrics_port is not None:
+            server = obs.serve_metrics(reg, port=args.metrics_port)
+            print(f"metrics at {server.url}")
+
     t0 = time.time()
-    res = engine.run(args.steps, seed=args.seed)
+    res = engine.run(args.steps, seed=args.seed, telemetry=tel)
     jax.block_until_ready(res.mean)
     dt = time.time() - t0
+    if server is not None:
+        server.close()
     rows = int(res.count)
     acc_floats = spec.p_pad + (0 if args.no_cov else spec.p_pad**2)
     if km:

@@ -1,0 +1,47 @@
+"""repro.obs — full-stack telemetry: metrics, tracing, structured step logs.
+
+Dependency-free (stdlib + numpy; jax touched only lazily for profiler
+annotations). The pieces:
+
+- :class:`MetricsRegistry` — thread-safe counters / gauges / histograms
+  (p50/p95/p99 from a bounded reservoir), label-keyed series, an in-process
+  ``snapshot()`` API, and a shared no-op mode so disabled telemetry is free.
+- :func:`span` / :func:`timed` — nesting wall-time tracing aggregated per
+  dotted path, passed through ``jax.profiler.TraceAnnotation`` so the same
+  names appear in XLA profiles.
+- :class:`StepLogger` / :func:`read_jsonl` — structured JSONL step records.
+- :func:`render_exposition` / :class:`MetricsServer` — Prometheus-style text
+  exposition and a stdlib scrape endpoint.
+- :func:`quantiles` — THE shared percentile helper (benchmarks and launch
+  drivers compute latency percentiles through it).
+
+Wired consumers: ``StreamEngine.run(telemetry=)`` (per-step engine metrics),
+``SketchService`` (its legacy ``stats`` dict is now a registry snapshot),
+``repro.cluster.heartbeat`` (per-host liveness gauges on the EngineState wire
+format), and the ``repro.kernels.ops`` dispatch counters
+(``kernels.dispatch{op=,path=}`` — watch for silent regressions to the jnp
+fallback path).
+"""
+from repro.obs.registry import (  # noqa: F401
+    DEFAULT_QUANTILES,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NULL_REGISTRY,
+    default_registry,
+    quantiles,
+    set_default_registry,
+)
+from repro.obs.sinks import (  # noqa: F401
+    MetricsServer,
+    render_exposition,
+    serve_metrics,
+)
+from repro.obs.steplog import StepLogger, read_jsonl  # noqa: F401
+from repro.obs.tracing import (  # noqa: F401
+    current_path,
+    span,
+    span_totals,
+    timed,
+)

@@ -1,0 +1,118 @@
+"""span()/timed() — nested wall-time tracing that aggregates per name.
+
+A ``span("engine.update")`` times its block and folds the duration into the
+owning registry's ``span`` histogram under the span's *path* — nested spans
+dot-join (``engine.step.source``), so one histogram series exists per unique
+nesting path and :func:`span_totals` reads back an aggregated
+``{path: {count, total_s, ...}}`` view without any tree bookkeeping at
+runtime. The nesting stack is thread-local, so worker threads trace
+independently.
+
+Spans pass through :class:`jax.profiler.TraceAnnotation` (lazily imported; a
+no-op when jax is absent or the profiler is off), so the same names show up
+as trace events in XLA profiles — the host-side twin of the
+``jax.named_scope`` annotations inside the engine's jitted update.
+
+:func:`timed` wraps a callable in a span per call and additionally records
+the *first* call under ``<name>.first`` — for jitted functions that first
+call is compile+execute, so the compile cost is separated from the
+steady-state distribution instead of polluting its quantiles.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from contextlib import contextmanager
+
+from repro.obs.registry import MetricsRegistry, default_registry
+
+_tls = threading.local()
+
+SPAN_METRIC = "span"
+
+
+def _stack() -> list:
+    s = getattr(_tls, "stack", None)
+    if s is None:
+        s = _tls.stack = []
+    return s
+
+
+@functools.cache
+def _trace_annotation():
+    """jax.profiler.TraceAnnotation, or None — resolved once, lazily, so the
+    obs package imports without jax."""
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation
+    except Exception:  # noqa: BLE001 — any import failure means "no profiler"
+        return None
+
+
+def current_path() -> str | None:
+    """The innermost active span path on this thread, if any."""
+    s = _stack()
+    return s[-1] if s else None
+
+
+@contextmanager
+def span(name: str, registry: MetricsRegistry | None = None,
+         annotate: bool = True):
+    """Time a block; record seconds into ``registry.histogram("span",
+    name=<dotted path>)``. Yields the path."""
+    reg = registry if registry is not None else default_registry()
+    stack = _stack()
+    path = f"{stack[-1]}.{name}" if stack else name
+    stack.append(path)
+    ann_cls = _trace_annotation() if annotate else None
+    ann = ann_cls(path) if ann_cls is not None else None
+    if ann is not None:
+        ann.__enter__()
+    t0 = time.perf_counter()
+    try:
+        yield path
+    finally:
+        dt = time.perf_counter() - t0
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        stack.pop()
+        reg.histogram(SPAN_METRIC, path=path).observe(dt)
+
+
+def timed(name: str, registry: MetricsRegistry | None = None):
+    """Decorator form of :func:`span`; splits the first call (compile, for
+    jitted fns) out under ``<name>.first``."""
+
+    def deco(fn):
+        first_done = [False]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            reg = registry if registry is not None else default_registry()
+            t0 = time.perf_counter()
+            with span(name, reg):
+                out = fn(*args, **kwargs)
+            if not first_done[0]:
+                first_done[0] = True
+                reg.histogram(SPAN_METRIC, path=f"{name}.first").observe(
+                    time.perf_counter() - t0)
+            return out
+
+        return wrapper
+
+    return deco
+
+
+def span_totals(registry: MetricsRegistry | None = None) -> dict[str, dict]:
+    """Aggregated per-path span view: ``{path: {count, total_s, p50, p95,
+    p99, max}}`` — the read side of :func:`span`."""
+    reg = registry if registry is not None else default_registry()
+    out: dict[str, dict] = {}
+    for m in reg.metrics():
+        if m.name == SPAN_METRIC and m.kind == "histogram":
+            s = m.summary()
+            out[m.labels.get("path", "")] = {
+                "count": s["count"], "total_s": s["sum"], "p50": s["p50"],
+                "p95": s["p95"], "p99": s["p99"], "max": s["max"]}
+    return out

@@ -53,11 +53,13 @@ from __future__ import annotations
 import queue
 import re
 import threading
+import time
 from concurrent.futures import Future
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.api.estimators import (SketchCursor, SparsifiedCov, SparsifiedKMeans,
                                   SparsifiedMean, SparsifiedPCA, as_key)
 from repro.api.fused import _check_consumer
@@ -184,8 +186,13 @@ class SketchService:
     their request is processed so a subsequent ingest always sees the tenant.
     """
 
+    #: legacy ``stats`` keys ↔ their registry counter names (``serve.<key>``)
+    STAT_KEYS = ("requests", "ingest_requests", "ingest_folds", "ingest_rows",
+                 "rejected", "queries", "finalizes")
+
     def __init__(self, *, max_queue: int = 1024, max_batch: int = 64,
-                 max_pending_rows: int = 1_000_000, scan: str = "auto"):
+                 max_pending_rows: int = 1_000_000, scan: str = "auto",
+                 registry: "obs.MetricsRegistry | None" = None):
         if scan not in ("auto", "never"):
             raise ValueError(f"scan must be 'auto' or 'never', got {scan!r}")
         self.max_batch = int(max_batch)
@@ -194,16 +201,33 @@ class SketchService:
         self._queue: queue.Queue = queue.Queue(maxsize=int(max_queue))
         self._groups: dict[str, _Group] = {}
         self._tenants: dict[str, _Tenant] = {}
-        # Guards registry reads, admission accounting, the stopped flag, and
-        # every stats key submit threads touch ("rejected"); the remaining
-        # stats keys are worker-thread-only.
+        # Guards tenant/group-registry reads, admission accounting, the
+        # stopped flag, and the metric updates submit threads make; the
+        # worker-thread metrics are single-writer (each counter is itself
+        # atomic, so readers never see torn values either way).
         self._reg_lock = threading.Lock()
         self._thread: threading.Thread | None = None
         self._stopped = False
         self._snap_step = 0
-        self.stats = {"requests": 0, "ingest_requests": 0, "ingest_folds": 0,
-                      "ingest_rows": 0, "rejected": 0, "queries": 0,
-                      "finalizes": 0}
+        # All service observability lives in one MetricsRegistry (pass a
+        # shared one to aggregate several services / the engine into a single
+        # exposition endpoint).
+        self.registry = registry if registry is not None else obs.MetricsRegistry()
+        self._c = {k: self.registry.counter(f"serve.{k}") for k in self.STAT_KEYS}
+        self._g_queue_depth = self.registry.gauge("serve.queue_depth")
+        self._g_pending = self.registry.gauge("serve.pending_rows")
+        self._h_coalesce = self.registry.histogram("serve.coalesced_requests")
+        self._h_latency = self.registry.histogram("serve.request_seconds")
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter view, snapshotted under ``_reg_lock`` so a reader
+        can never observe counts torn against a concurrent submit (the old
+        bare-dict copy could). The keys are :attr:`STAT_KEYS`; richer series
+        (queue depth, latency quantiles, per-group folds) live on
+        :attr:`registry`."""
+        with self._reg_lock:
+            return {k: self._c[k].value for k in self.STAT_KEYS}
 
     # ------------------------------------------------------------ lifecycle --
 
@@ -269,20 +293,23 @@ class SketchService:
                         f"got {rows.shape[1]}"))
                     return fut
                 if group.pending_rows + n > self.max_pending_rows:
-                    self.stats["rejected"] += 1
+                    self._c["rejected"].inc()
                     fut.set_result(_rejected(
                         f"group {group.gid!r} has {group.pending_rows} rows "
                         f"pending (cap {self.max_pending_rows}); retry after "
                         "the backlog folds"))
                     return fut
                 group.pending_rows += n
+                fut._obs_t0 = time.perf_counter()   # submit→resolve latency
                 try:
                     # target normalized to the gid on the internal record (not
                     # on req): maximal worker coalescing
                     self._queue.put_nowait((_Ingest(group.gid, rows), fut))
+                    self._g_pending.inc(n)
+                    self._g_queue_depth.set(self._queue.qsize())
                 except queue.Full:
                     group.pending_rows -= n
-                    self.stats["rejected"] += 1
+                    self._c["rejected"].inc()
                     fut.set_result(_rejected(
                         f"request queue full ({self._queue.maxsize}); "
                         "retry later"))
@@ -303,10 +330,12 @@ class SketchService:
             if self._stopped:
                 fut.set_result(_err("service stopped"))
                 return fut
+            fut._obs_t0 = time.perf_counter()   # submit→resolve latency
             try:
                 self._queue.put_nowait((req, fut))
+                self._g_queue_depth.set(self._queue.qsize())
             except queue.Full:
-                self.stats["rejected"] += 1
+                self._c["rejected"].inc()
                 fut.set_result(_rejected(
                     f"request queue full ({self._queue.maxsize}); retry later"))
         return fut
@@ -357,6 +386,14 @@ class SketchService:
 
     # ---------------------------------------------------------- worker loop --
 
+    def _resolve_fut(self, fut: Future, resp: Response) -> None:
+        """_resolve plus submit→resolve latency accounting (the ``_obs_t0``
+        stamp placed at admission)."""
+        t0 = getattr(fut, "_obs_t0", None)
+        if t0 is not None:
+            self._h_latency.observe(time.perf_counter() - t0)
+        _resolve(fut, resp)
+
     def _loop(self) -> None:
         stop = False
         while not stop:
@@ -366,12 +403,13 @@ class SketchService:
                     items.append(self._queue.get_nowait())
                 except queue.Empty:
                     break
+            self._g_queue_depth.set(self._queue.qsize())
             batch = []
             for req, fut in items:
                 if req is _STOP:
                     stop = True       # drain this batch, fail later arrivals
                 elif stop:
-                    _resolve(fut, _err("service stopped"))
+                    self._resolve_fut(fut, _err("service stopped"))
                 else:
                     batch.append((req, fut))
             if batch:
@@ -396,7 +434,8 @@ class SketchService:
                     g = self._groups.get(req.gid)
                     if g is not None:
                         g.pending_rows -= int(req.rows.shape[0])
-            _resolve(fut, _err(f"internal service error: {exc!r}"))
+                self._g_pending.inc(-int(req.rows.shape[0]))
+            self._resolve_fut(fut, _err(f"internal service error: {exc!r}"))
 
     def _fail_queued(self, msg: str) -> None:
         """Fail everything still sitting in the (dead) queue — stop() path."""
@@ -410,8 +449,9 @@ class SketchService:
                     g = self._groups.get(req.gid)
                     if g is not None:
                         g.pending_rows -= int(req.rows.shape[0])
+                self._g_pending.inc(-int(req.rows.shape[0]))
             if fut is not None and not fut.done():
-                _resolve(fut, _err(msg))
+                self._resolve_fut(fut, _err(msg))
             self._queue.task_done()
 
     def _process(self, batch) -> None:
@@ -425,32 +465,37 @@ class SketchService:
                 continue
             self._flush_ingest(pending)   # queries/admin see all prior ingest
             pending = {}
-            self.stats["requests"] += 1
+            self._c["requests"].inc()
             if isinstance(req, QueryRequest):
-                _resolve(fut, self._handle_query(req))
+                self._resolve_fut(fut, self._handle_query(req))
             else:
-                _resolve(fut, self._handle_admin(req))
+                self._resolve_fut(fut, self._handle_admin(req))
         self._flush_ingest(pending)
 
     def _flush_ingest(self, pending: dict[str, list]) -> None:
         for gid, items in pending.items():
-            self.stats["requests"] += len(items)
-            self.stats["ingest_requests"] += len(items)
+            self._c["requests"].inc(len(items))
+            self._c["ingest_requests"].inc(len(items))
             blocks = [req.rows for req, _ in items]
             n = sum(int(b.shape[0]) for b in blocks)
             with self._reg_lock:
                 group = self._groups.get(gid)
             if group is None:   # deleted between submit and drain
+                self._g_pending.inc(-n)
                 for _, fut in items:
-                    _resolve(fut, _err(f"unknown tenant/group {gid!r}"))
+                    self._resolve_fut(fut, _err(f"unknown tenant/group {gid!r}"))
                 continue
             try:
                 # concatenate inside the try: column counts mismatched across
                 # a coalesced run must answer error responses, not raise
                 rows = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
                 group.fold(rows, self.scan)
-                self.stats["ingest_folds"] += 1
-                self.stats["ingest_rows"] += n
+                self._c["ingest_folds"].inc()
+                self._c["ingest_rows"].inc(n)
+                self._h_coalesce.observe(len(items))
+                for tid in group.tenants:
+                    self.registry.counter("serve.tenant_folds",
+                                          tenant=tid).inc()
                 resp = [_ok(int(b.shape[0]), group=group.gid,
                             coalesced=len(items), count=group.cursor.count)
                         for b in blocks]
@@ -459,13 +504,14 @@ class SketchService:
             finally:
                 with self._reg_lock:
                     group.pending_rows -= n
+                self._g_pending.inc(-n)
             for (_, fut), r in zip(items, resp):
-                _resolve(fut, r)
+                self._resolve_fut(fut, r)
 
     # -------------------------------------------------------------- queries --
 
     def _handle_query(self, req: QueryRequest) -> Response:
-        self.stats["queries"] += 1
+        self._c["queries"].inc()
         t = self._tenants.get(req.tenant)
         if t is None:
             return _err(f"unknown tenant {req.tenant!r}")
@@ -487,7 +533,7 @@ class SketchService:
                 return _err(f"finalize failed: {e}")
             t.finalized_rows = cur.count
             t.finalize_count += 1
-            self.stats["finalizes"] += 1
+            self._c["finalizes"].inc()
         try:
             return self._read_fitted(t, req.op, req.x)
         except AttributeError:

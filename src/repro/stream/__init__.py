@@ -25,6 +25,7 @@ from repro.stream.accumulators import (  # noqa: F401
 )
 from repro.stream.engine import (  # noqa: F401
     EngineState,
+    EngineTelemetry,
     StreamEngine,
     StreamKMeansConfig,
     StreamResult,

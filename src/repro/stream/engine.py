@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import time
 from typing import Any, Callable
 
 import jax
@@ -45,11 +46,54 @@ from repro.core import sketch as sketch_mod
 from repro.core.sampling import SparseRows
 from repro.core.sketch import batch_key  # noqa: F401  (re-exported; the repo-wide discipline)
 from repro import lowrank as lowrank_mod
+from repro import obs
 from repro import refine as refine_mod
 from repro.stream import accumulators as acc
 from repro.utils.prng import fold_in_str
 
 Source = Callable[[int, int, int], Any]  # (seed, step, shard) -> (b, p) array
+
+
+@dataclasses.dataclass
+class EngineTelemetry:
+    """Opt-in per-step observability for :meth:`StreamEngine.run`.
+
+    Strictly observe-only: the instrumented loop folds bit-identical state to
+    an uninstrumented one (tests assert it) — telemetry reads timings, shapes,
+    and already-materialized signals, never the stream. Per step it records
+    into ``registry``:
+
+    - counters ``engine.steps`` / ``engine.rows`` / ``engine.checkpoints``
+      (+ ``engine.reassigned`` when the K-means config tracks reassignments);
+    - histograms ``engine.step_seconds`` / ``engine.source_seconds`` /
+      ``engine.update_seconds`` / ``engine.checkpoint_seconds`` — wall time of
+      the whole step, the host-side batch generation, the jitted update
+      dispatch, and checkpoint writes (the update's *internal* sketch/fold/
+      psum phases are jax.named_scope-annotated, so an XLA profile breaks the
+      device step down further — see ``_build_update``);
+    - gauges ``engine.rows_per_sec`` (cumulative over this run) and
+      ``engine.state_bytes`` (accumulator footprint — constant in stream
+      length by construction, so a drift here is a leak).
+
+    ``step_logger``/``log_every`` add a structured JSONL record per logged
+    step (step, rows, rows/sec, phase seconds, reassign fraction, state
+    bytes, checkpoint timestamps); ``on_step`` receives the same record dict
+    (the cluster launcher's heartbeat hook).
+    """
+
+    registry: obs.MetricsRegistry | None = None
+    step_logger: obs.StepLogger | None = None
+    log_every: int = 1
+    on_step: Callable[[dict], None] | None = None
+
+    def _reg(self) -> obs.MetricsRegistry:
+        return self.registry if self.registry is not None else obs.default_registry()
+
+    def emit(self, record: dict) -> None:
+        if self.step_logger is not None and record["step"] % self.log_every == 0:
+            self.step_logger.log(**record)
+        if self.on_step is not None:
+            self.on_step(record)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,17 +305,25 @@ class StreamEngine:
         in ``state.reassign`` and, under a mesh, ride one extra int psum."""
         track = self.kmeans is not None and self.kmeans.track_reassignments
 
+        # jax.named_scope annotations: zero-cost trace-time names, so an XLA
+        # profile splits the fused device step into sketch / fold / psum —
+        # the in-jit counterpart of the host-side obs.span timings.
         def local_deltas(state, x, step, shard):
-            return self._deltas(state, self._sketch_local(x, step, shard))
+            with jax.named_scope("obs.sketch"):
+                s = self._sketch_local(x, step, shard)
+            with jax.named_scope("obs.fold"):
+                return self._deltas(state, s)
 
         def local_deltas_tracked(state, x, step, shard):
-            s = self._sketch_local(x, step, shard)
-            md = (None if self.lowrank
-                  else acc.moment_delta(s, track_cov=self.track_cov,
-                                        cov_path=self.cov_path))
-            kd, a0 = acc.kmeans_delta_with_assign(state.kmeans, s)
-            ld = (lowrank_mod.range_delta(s, self._omega, impl=self.impl)
-                  if self.lowrank else None)
+            with jax.named_scope("obs.sketch"):
+                s = self._sketch_local(x, step, shard)
+            with jax.named_scope("obs.fold"):
+                md = (None if self.lowrank
+                      else acc.moment_delta(s, track_cov=self.track_cov,
+                                            cov_path=self.cov_path))
+                kd, a0 = acc.kmeans_delta_with_assign(state.kmeans, s)
+                ld = (lowrank_mod.range_delta(s, self._omega, impl=self.impl)
+                      if self.lowrank else None)
             return (md, kd, ld), (s, a0)
 
         def with_counts(state: EngineState, cnt) -> EngineState:
@@ -310,13 +362,15 @@ class StreamEngine:
         if not track:
             def sharded_update(state, x, step):
                 deltas = local_deltas(state, x[0], step, jax.lax.axis_index(axis))
-                deltas = jax.lax.psum(deltas, axis)  # the only cross-shard traffic
+                with jax.named_scope("obs.psum"):
+                    deltas = jax.lax.psum(deltas, axis)  # the only cross-shard traffic
                 return self._apply(state, deltas)
         else:
             def sharded_update(state, x, step):
                 deltas, (s, a0) = local_deltas_tracked(
                     state, x[0], step, jax.lax.axis_index(axis))
-                deltas = jax.lax.psum(deltas, axis)
+                with jax.named_scope("obs.psum"):
+                    deltas = jax.lax.psum(deltas, axis)
                 new = self._apply(state, deltas)
                 cnt = jax.lax.psum(acc.kmeans_reassigned(new.kmeans, s, a0), axis)
                 return with_counts(new, cnt)
@@ -377,7 +431,8 @@ class StreamEngine:
     def run(self, steps: int, seed: int | None = None,
             state: EngineState | None = None, *, start_step: int = 0,
             checkpoint_dir: str | None = None,
-            checkpoint_every: int = 0) -> StreamResult:
+            checkpoint_every: int = 0,
+            telemetry: EngineTelemetry | None = None) -> StreamResult:
         """Fold global batches ``start_step .. steps-1`` from the source.
 
         ``seed`` is forwarded to the source (None = the source's own default);
@@ -392,7 +447,12 @@ class StreamEngine:
 
         ``checkpoint_every=t`` writes the EngineState to ``checkpoint_dir``
         every t folded steps via ``train.checkpoint``'s atomic protocol
-        (multi-process runs: process 0 writes; the state is replicated)."""
+        (multi-process runs: process 0 writes; the state is replicated).
+
+        ``telemetry=`` opts into per-step observability (see
+        :class:`EngineTelemetry`). None — the default — leaves the loop
+        untouched; enabled, the fold stays bit-identical (observe-only) and
+        overhead is gated ≤3% by ``benchmarks/obs_bench.py``."""
         if checkpoint_every and not checkpoint_dir:
             raise ValueError("checkpoint_every needs checkpoint_dir=")
         if state is None:
@@ -406,13 +466,69 @@ class StreamEngine:
             state = jax.tree.map(np.asarray, state)
         track = self.kmeans is not None and self.kmeans.track_reassignments
         history: list[np.ndarray] = []
+        tel = telemetry
+        if tel is not None:
+            reg = tel._reg()
+            c_steps, c_rows = reg.counter("engine.steps"), reg.counter("engine.rows")
+            h_step = reg.histogram("engine.step_seconds")
+            h_source = reg.histogram("engine.source_seconds")
+            h_update = reg.histogram("engine.update_seconds")
+            g_rate = reg.gauge("engine.rows_per_sec")
+            g_bytes = reg.gauge("engine.state_bytes")
+            rows_run, run_t0 = 0, time.perf_counter()
         for step in range(start_step, steps):
-            state = self.update(state, self._host_global_batch(seed, step), step)
+            if tel is None:
+                state = self.update(state, self._host_global_batch(seed, step), step)
+            else:
+                t0 = time.perf_counter()
+                with obs.span("engine.source", reg):
+                    x = self._host_global_batch(seed, step)
+                t1 = time.perf_counter()
+                with obs.span("engine.update", reg):
+                    state = self.update(state, x, step)
+                t2 = time.perf_counter()
             if track:
                 # copy NOW — the buffer is donated back at the next update
                 history.append(np.asarray(state.reassign[1]))
+            ckpt_s = None
             if checkpoint_every and (step + 1 - start_step) % checkpoint_every == 0:
-                self.save_state(checkpoint_dir, step + 1, state, seed=seed)
+                t3 = time.perf_counter()
+                if tel is None:
+                    self.save_state(checkpoint_dir, step + 1, state, seed=seed)
+                else:
+                    with obs.span("engine.checkpoint", reg):
+                        self.save_state(checkpoint_dir, step + 1, state, seed=seed)
+                    ckpt_s = time.perf_counter() - t3
+                    reg.counter("engine.checkpoints").inc()
+                    reg.histogram("engine.checkpoint_seconds").observe(ckpt_s)
+            if tel is not None:
+                rows_step = int(x.shape[0]) * int(x.shape[1])
+                rows_run += rows_step
+                elapsed = time.perf_counter() - run_t0
+                state_bytes = sum(
+                    int(leaf.nbytes) for leaf in jax.tree_util.tree_leaves(state)
+                    if hasattr(leaf, "nbytes"))
+                c_steps.inc()
+                c_rows.inc(rows_step)
+                h_step.observe(t2 - t0)
+                h_source.observe(t1 - t0)
+                h_update.observe(t2 - t1)
+                g_rate.set(rows_run / max(elapsed, 1e-9))
+                g_bytes.set(state_bytes)
+                record = {"step": step, "rows": rows_step, "rows_total": rows_run,
+                          "rows_per_sec": round(rows_run / max(elapsed, 1e-9), 1),
+                          "source_s": round(t1 - t0, 6),
+                          "update_s": round(t2 - t1, 6),
+                          "state_bytes": state_bytes}
+                if ckpt_s is not None:
+                    record["checkpoint_s"] = round(ckpt_s, 6)
+                    record["checkpoint_step"] = step + 1
+                if track and history:
+                    re_last = history[-1]
+                    reg.counter("engine.reassigned").inc(int(re_last.sum()))
+                    record["reassign_frac"] = round(
+                        float(re_last.mean()) / max(rows_step, 1), 6)
+                tel.emit(record)
         self.state = state
         result = self.finalize(state)
         if track and history:
