@@ -116,11 +116,16 @@ def serve_reconcile(n_tenants: int = 256) -> None:
     plan = Plan(backend="stream", gamma=0.25, batch_size=128,
                 cov_path="lowrank", rank=4)
     groups = 32
-    rows_per, n_queries = 16, 32
+    rows_per, n_queries, n_rejected = 16, 32, 4
     rows = rng.normal(size=(rows_per, 64)).astype(np.float32)
+    # sized so the workload's own ingest always admits, while one deliberately
+    # oversized request per rejection deterministically trips the per-group cap
+    cap = (2 * n_tenants // groups) * rows_per + rows_per
+    too_big = np.zeros((cap + 1, 64), np.float32)
 
     t0 = time.perf_counter()
-    with SketchService(max_queue=8 * n_tenants, max_batch=64) as svc:
+    with SketchService(max_queue=8 * n_tenants, max_batch=64,
+                       max_pending_rows=cap) as svc:
         for i in range(n_tenants):
             svc.create_tenant(f"t{i}", "pca" if i % 2 else "mean", plan=plan,
                               key=1, group=f"g{i % groups}",
@@ -128,6 +133,11 @@ def serve_reconcile(n_tenants: int = 256) -> None:
         futs = [svc.ingest(f"g{i % groups}", rows)
                 for i in range(2 * n_tenants)]
         assert all(f.result(120).ok for f in futs)
+        # deterministic backpressure: a single request larger than the cap is
+        # rejected at submit — and MUST still be latency-accounted below
+        for i in range(n_rejected):
+            r = svc.ingest(f"g{i}", too_big).result(120)
+            assert r.status == "rejected", r
         for i in range(n_queries):
             svc.query(f"t{2 * i + 1}", "components").unwrap()
         stats = svc.stats
@@ -138,6 +148,7 @@ def serve_reconcile(n_tenants: int = 256) -> None:
         assert stats["ingest_requests"] == n_ingest
         assert stats["ingest_rows"] == n_ingest * rows_per
         assert stats["queries"] == n_queries
+        assert stats["rejected"] == n_rejected
         assert stats["requests"] == n_ingest + n_queries + n_tenants
         # every ingest request is accounted to exactly one coalesced fold
         h_coal = reg.histogram("serve.coalesced_requests")
@@ -145,9 +156,12 @@ def serve_reconcile(n_tenants: int = 256) -> None:
         # everything admitted was folded; the backlog gauges settled to zero
         assert reg.gauge("serve.pending_rows").value == 0
         assert reg.gauge("serve.queue_depth").value == 0
-        # every request's submit→resolve latency was observed
+        # every request's submit→resolve latency was observed — INCLUDING the
+        # rejected ones (the submit fast path must route through _resolve_fut,
+        # not bare set_result; rejections invisible to the latency histogram
+        # would understate tail latency exactly when the service is saturated)
         h_lat = reg.histogram("serve.request_seconds")
-        assert h_lat.count == n_ingest + n_queries + n_tenants
+        assert h_lat.count == n_ingest + n_queries + n_tenants + n_rejected
         # the exposition renders every serving series (scrape-ready)
         text = obs.render_exposition(reg)
         for needle in ("serve_queue_depth", "serve_pending_rows",

@@ -45,6 +45,12 @@ def _fmt(v) -> str:
     if v is None or v != v:  # None / NaN
         return "NaN"
     f = float(v)
+    # ±Inf per the Prometheus text format; int(inf) would raise OverflowError
+    # below, so one infinite gauge (or histogram sum) must not kill a scrape
+    if f == float("inf"):
+        return "+Inf"
+    if f == float("-inf"):
+        return "-Inf"
     return str(int(f)) if f == int(f) else repr(f)
 
 

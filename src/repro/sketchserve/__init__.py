@@ -2,29 +2,42 @@
 
 The subsystem that turns the one-shot ``fit`` APIs into a long-lived server:
 an async request queue (:class:`SketchService`) accepting ingest / query /
-admin requests, a micro-batching worker loop that coalesces same-group
-ingest into one jitted sketch+fold step, per-tenant execution
-:class:`~repro.api.Plan`\\ s with admission control, lazy finalization, and
-crash-safe snapshot/restore over :mod:`repro.train.checkpoint`.
+admin requests, a pool of micro-batching worker loops over disjoint group
+partitions (each coalescing same-group ingest into one jitted sketch+fold
+step), per-tenant execution :class:`~repro.api.Plan`\\ s with admission
+control, lazy finalization, crash-safe snapshot/restore over
+:mod:`repro.train.checkpoint` with an auto-snapshot :class:`SnapshotPolicy`,
+tenant TTL/LRU eviction to snapshot, and a stdlib HTTP frontend
+(:class:`HttpFrontend`) that carries backpressure as 429s.
 
 Start here: :mod:`repro.sketchserve.service` (the model and the loop),
-:mod:`repro.sketchserve.protocol` (the request/response types),
-:mod:`repro.sketchserve.snapshot` (what persists and why restore is
-bit-identical). ``examples/sketch_service.py`` is the guided tour;
-``launch/sketch_serve.py`` drives a synthetic workload end to end.
+:mod:`repro.sketchserve.protocol` (the request/response types and the wire
+mapping), :mod:`repro.sketchserve.snapshot` (what persists and why restore
+is bit-identical), :mod:`repro.sketchserve.http` (the wire layer).
+``examples/sketch_service.py`` is the guided tour; ``launch/sketch_serve.py``
+drives a synthetic workload end to end (``--supervise`` adds crash-restart).
 """
+from repro.sketchserve.http import HttpFrontend, serve_http
 from repro.sketchserve.protocol import (AdminRequest, IngestRequest,
-                                        QueryRequest, Response)
-from repro.sketchserve.service import ESTIMATORS, SketchService
-from repro.sketchserve.snapshot import restore_service, save_service
+                                        QueryRequest, Response,
+                                        response_to_json)
+from repro.sketchserve.service import (ESTIMATORS, SketchService,
+                                       SnapshotPolicy)
+from repro.sketchserve.snapshot import (restore_group, restore_service,
+                                        save_service)
 
 __all__ = [
     "AdminRequest",
     "ESTIMATORS",
+    "HttpFrontend",
     "IngestRequest",
     "QueryRequest",
     "Response",
     "SketchService",
+    "SnapshotPolicy",
+    "response_to_json",
+    "restore_group",
     "restore_service",
     "save_service",
+    "serve_http",
 ]

@@ -15,11 +15,22 @@ Every request resolves to a :class:`Response` with ``status`` ∈
 {"ok", "rejected", "error"} — "rejected" is admission-control backpressure
 (full queue or per-group pending-row cap: resubmit later), "error" is a
 request that was admitted but failed (unknown tenant, no data yet, bad op).
+
+The same three statuses ARE the wire protocol: :func:`response_to_json`
+flattens a Response (numpy payloads → nested lists) for the HTTP frontend in
+:mod:`repro.sketchserve.http`, and :data:`HTTP_STATUS` fixes the status-code
+mapping — ok → 200, rejected → 429 (backpressure: Retry-After and resubmit),
+error → 400.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
+
+import numpy as np
+
+#: Response.status → HTTP status code (the http.py frontend contract).
+HTTP_STATUS = {"ok": 200, "rejected": 429, "error": 400}
 
 
 @dataclasses.dataclass
@@ -60,3 +71,23 @@ class Response:
         if not self.ok:
             raise RuntimeError(f"request {self.status}: {self.error}")
         return self.result
+
+
+def _jsonable(v):
+    """Payload values → JSON-encodable: arrays nest as lists, numpy scalars
+    unbox, dicts/sequences recurse."""
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, np.generic):
+        return v.item()
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+def response_to_json(resp: Response) -> dict:
+    """Response → JSON-safe dict (the HTTP response body)."""
+    return {"status": resp.status, "result": _jsonable(resp.result),
+            "error": resp.error, "info": _jsonable(resp.info)}

@@ -1,17 +1,17 @@
 """SketchService — the online estimator-serving loop.
 
 The sketching analogue of the LM engine in :mod:`repro.serve.engine`, built on
-the same shared-queue idiom: callers ``submit()`` requests into one bounded
-``queue.Queue`` and get back a ``concurrent.futures.Future``; a single worker
-thread drains the queue in micro-batches. Where the LM engine coalesces
-decode steps across sequences, this loop coalesces *ingest*: contiguous
-same-group :class:`~repro.sketchserve.protocol.IngestRequest` rows drained in
-one sweep are concatenated and folded through ONE
-``SketchCursor.partial_fit`` call — one jitted sketch+fold step instead of
-one per request. Coalescing changes chunk boundaries (hence which
-(step, shard) mask key covers which rows) relative to one-request-per-fold,
-which the estimator contract explicitly permits — every chunking is a valid
-estimate; the batching is pure throughput.
+the same shared-queue idiom: callers ``submit()`` requests into a bounded
+``queue.Queue`` and get back a ``concurrent.futures.Future``; worker threads
+drain the queues in micro-batches. Where the LM engine coalesces decode steps
+across sequences, this loop coalesces *ingest*: contiguous same-group
+:class:`~repro.sketchserve.protocol.IngestRequest` rows drained in one sweep
+are concatenated and folded through ONE ``SketchCursor.partial_fit`` call —
+one jitted sketch+fold step instead of one per request. Coalescing changes
+chunk boundaries (hence which (step, shard) mask key covers which rows)
+relative to one-request-per-fold, which the estimator contract explicitly
+permits — every chunking is a valid estimate; the batching is pure
+throughput.
 
 Tenancy. A *tenant* is one estimator (mean / cov / pca / kmeans) with an id.
 Tenants created with the same ``group=`` co-register on one shared
@@ -25,35 +25,65 @@ moment/lowrank state plus any retained sketch parts — never the (p, p)
 accumulator on the lowrank path, which is what lets thousands of tenants
 stay resident.
 
-Admission control. Two bounds, both answered with a ``status="rejected"``
-Response instead of unbounded buffering: the queue itself
-(``max_queue`` requests; ``submit`` never blocks) and a per-group cap on
-rows admitted but not yet folded (``max_pending_rows``). Rejected ingest is
-the backpressure signal — the producer resubmits later.
+Workers and ordering. ``workers=N`` runs N worker loops over DISJOINT group
+partitions: a group hashes to exactly one worker (stable crc32, so the
+assignment survives restarts), every request for that group — ingest,
+queries against its tenants, its admin ops — lands in that worker's queue,
+and the queue is FIFO. Per group there is therefore still exactly ONE
+producer into the cursor and the fold order is exactly submission order, so
+per-group results are bit-identical to the single-worker service on the same
+request sequence (whenever chunk boundaries agree, e.g. batch_size-multiple
+requests; the per-cursor lock contract in
+:class:`~repro.api.estimators.SketchCursor` is what permits the pool).
+Cross-group interleaving is whatever the partition yields — groups are
+independent streams, so that was never observable anyway.
 
-Liveness. The worker thread never dies on a bad request: per-run fold
-failures answer error responses, and anything that still escapes a sweep is
-caught in the loop, failing the batch's unresolved futures instead of
-hanging every caller. ``stop()`` resolves every already-submitted request,
-then fails stragglers and all later submissions with an error response —
-no Future ever dangles.
+Admission control. Two bounds, both answered with a ``status="rejected"``
+Response instead of unbounded buffering: each worker queue (``max_queue``
+requests per worker; ``submit`` never blocks) and a per-group cap on rows
+admitted but not yet folded (``max_pending_rows``). Rejected ingest is the
+backpressure signal — the producer resubmits later (the HTTP frontend in
+:mod:`repro.sketchserve.http` surfaces it as a 429).
+
+Supervision. A :class:`SnapshotPolicy` plus ``snapshot_dir=`` auto-snapshots
+the whole service on worker 0 at fold boundaries (every N folded rows and/or
+every T seconds, skipped while no new rows folded). Multi-worker snapshots
+quiesce the pool first — every worker parks between folds — so the written
+state is a global fold boundary; ``launch/sketch_serve.py --supervise``
+closes the loop by restarting a crashed process from the latest snapshot and
+replaying the continuation bit-identically.
+
+Tenant eviction. ``ttl_s=`` / ``max_tenants=`` bound the registry in
+long-lived deployments: a group idle past its TTL (or the least-recently
+used groups while over the tenant bound) is *evicted to snapshot* — its
+cursor+tenant state is written under ``evict_dir`` before removal — and
+lazily restored on the next ingest/query/admin that touches it, resuming
+bit-identically (same snapshot format as ``snapshot()``). Groups with queued
+ingest are never evicted; eviction runs on each group's owner worker, so it
+can never race a fold.
+
+Liveness. A worker thread never dies on a bad request: per-run fold failures
+answer error responses, and anything that still escapes a sweep is caught in
+the loop, failing the batch's unresolved futures instead of hanging every
+caller. ``stop()`` resolves every already-submitted request, then fails
+stragglers and all later submissions with an error response — no Future
+ever dangles, across every worker.
 
 Lazy finalization. Ingest only folds; ``finalize()`` (eigendecompositions,
 Lloyd iterations) runs when a query arrives for a tenant whose folded row
 count moved since it last finalized. A tenant that is written often and read
 rarely never pays finalize on the write path.
-
-Because all ingest funnels through the one worker thread, the cursor sees a
-single producer and the fold order is exactly queue order — results are
-deterministic given the request sequence (see the thread-safety contract on
-:class:`~repro.api.estimators.SketchCursor`).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 import queue
 import re
+import tempfile
 import threading
 import time
+import zlib
 from concurrent.futures import Future
 
 import jax
@@ -76,6 +106,35 @@ ESTIMATORS = {
 
 _ID_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 _STOP = object()
+#: idle poll period of a worker's queue.get — bounds how late a parked-worker
+#: snapshot quiesce, an every_s auto-snapshot, or a TTL sweep can fire.
+_IDLE_TICK = 0.1
+#: how long a snapshot waits for the other workers to reach a fold boundary.
+_QUIESCE_TIMEOUT = 120.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotPolicy:
+    """Auto-snapshot cadence for a long-lived service.
+
+    ``every_rows``: snapshot once that many NEW rows have folded since the
+    last snapshot. ``every_s``: snapshot at most that often — and only when
+    new rows folded since the last one, so an idle service never rewrites
+    identical checkpoints. Both may be set; either firing triggers. Checks
+    run on worker 0 at fold boundaries (after each drained batch and on idle
+    ticks), so a snapshot never lands mid-fold.
+    """
+
+    every_rows: int | None = None
+    every_s: float | None = None
+
+    def __post_init__(self):
+        if self.every_rows is None and self.every_s is None:
+            raise ValueError("SnapshotPolicy needs every_rows and/or every_s")
+        if self.every_rows is not None and self.every_rows <= 0:
+            raise ValueError(f"every_rows must be > 0, got {self.every_rows}")
+        if self.every_s is not None and self.every_s <= 0:
+            raise ValueError(f"every_s must be > 0, got {self.every_s}")
 
 
 def _ok(result=None, **info) -> Response:
@@ -96,6 +155,65 @@ def _resolve(fut: Future, resp: Response) -> None:
     thread may kill the loop."""
     if fut.set_running_or_notify_cancel():
         fut.set_result(resp)
+
+
+class _Quiesce:
+    """Worker-0's stop-the-world for cross-worker snapshots.
+
+    The initiator raises ``want``; every OTHER live worker parks at its next
+    fold boundary (between drained batches, or on an idle tick); the
+    ``held()`` block then runs with no fold in flight anywhere; releasing
+    wakes the parked workers. Workers that exit (``stop()``) decrement
+    ``live``, so a shutdown racing a snapshot can never strand the initiator.
+    """
+
+    def __init__(self, n: int):
+        self._cv = threading.Condition()
+        self._live = n
+        self._want = False
+        self._parked = 0
+        self._gen = 0
+
+    def worker_exit(self) -> None:
+        with self._cv:
+            self._live -= 1
+            self._cv.notify_all()
+
+    def park_if_wanted(self, timeout: float = _QUIESCE_TIMEOUT) -> None:
+        with self._cv:
+            if not self._want:
+                return
+            gen = self._gen
+            self._parked += 1
+            self._cv.notify_all()
+            self._cv.wait_for(lambda: not self._want or self._gen != gen,
+                              timeout)
+            self._parked -= 1
+            self._cv.notify_all()
+
+    def held(self, timeout: float = _QUIESCE_TIMEOUT):
+        q = self
+
+        class _Held:
+            def __enter__(self):
+                with q._cv:
+                    q._want = True
+                    ok = q._cv.wait_for(lambda: q._parked >= q._live - 1,
+                                        timeout)
+                if not ok:
+                    self.__exit__(None, None, None)
+                    raise RuntimeError(
+                        "snapshot quiesce timed out waiting for workers to "
+                        "reach a fold boundary")
+                return self
+
+            def __exit__(self, *exc):
+                with q._cv:
+                    q._want = False
+                    q._gen += 1
+                    q._cv.notify_all()
+
+        return _Held()
 
 
 class _Ingest:
@@ -125,7 +243,7 @@ class _Group:
     """One shared compression pass + the tenants riding it."""
 
     __slots__ = ("gid", "plan", "key", "cursor", "tenants", "pending_rows",
-                 "retain_ingest", "retained")
+                 "retain_ingest", "retained", "last_access")
 
     def __init__(self, gid: str, plan: Plan, key, retain_ingest: bool):
         self.gid = gid
@@ -136,6 +254,7 @@ class _Group:
         self.pending_rows = 0        # admitted but not yet folded (admission cap)
         self.retain_ingest = bool(retain_ingest)
         self.retained: list[np.ndarray] = []  # fold-order chunks, for refine replay
+        self.last_access = time.monotonic()   # TTL / LRU eviction stamp
 
     def fold(self, rows: np.ndarray, scan: str) -> None:
         """One sketch+fold step over a coalesced row block, optionally through
@@ -173,7 +292,7 @@ class SketchService:
     """Async multi-tenant sketch server. See the module docstring for the
     model; the short version:
 
-    >>> with SketchService() as svc:
+    >>> with SketchService(workers=4) as svc:
     ...     svc.create_tenant("p", "pca", plan=plan, key=7, n_components=4,
     ...                       group="g")
     ...     svc.create_tenant("k", "kmeans", plan=plan, key=7, k=8, group="g")
@@ -182,42 +301,83 @@ class SketchService:
 
     ``submit`` is the non-blocking core (returns a Future); ``call`` /
     ``query`` / ``ingest`` / ``create_tenant`` / ... are sugar over it. All
-    state mutation happens on the worker thread; admin helpers block until
-    their request is processed so a subsequent ingest always sees the tenant.
+    state mutation happens on the owning worker thread; admin helpers block
+    until their request is processed so a subsequent ingest always sees the
+    tenant.
     """
 
     #: legacy ``stats`` keys ↔ their registry counter names (``serve.<key>``)
     STAT_KEYS = ("requests", "ingest_requests", "ingest_folds", "ingest_rows",
-                 "rejected", "queries", "finalizes")
+                 "rejected", "queries", "finalizes", "snapshots", "evictions",
+                 "evict_restores")
 
     def __init__(self, *, max_queue: int = 1024, max_batch: int = 64,
                  max_pending_rows: int = 1_000_000, scan: str = "auto",
-                 registry: "obs.MetricsRegistry | None" = None):
+                 registry: "obs.MetricsRegistry | None" = None,
+                 workers: int = 1,
+                 snapshot_policy: SnapshotPolicy | None = None,
+                 snapshot_dir: str | None = None,
+                 max_tenants: int | None = None, ttl_s: float | None = None,
+                 evict_dir: str | None = None):
         if scan not in ("auto", "never"):
             raise ValueError(f"scan must be 'auto' or 'never', got {scan!r}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if snapshot_policy is not None and snapshot_dir is None:
+            raise ValueError("snapshot_policy needs snapshot_dir= to write to")
+        if max_tenants is not None and max_tenants < 1:
+            raise ValueError(f"max_tenants must be >= 1, got {max_tenants}")
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError(f"ttl_s must be > 0, got {ttl_s}")
         self.max_batch = int(max_batch)
         self.max_pending_rows = int(max_pending_rows)
         self.scan = scan
-        self._queue: queue.Queue = queue.Queue(maxsize=int(max_queue))
+        self.n_workers = int(workers)
+        self._queues: list[queue.Queue] = [
+            queue.Queue(maxsize=int(max_queue)) for _ in range(self.n_workers)]
         self._groups: dict[str, _Group] = {}
         self._tenants: dict[str, _Tenant] = {}
         # Guards tenant/group-registry reads, admission accounting, the
         # stopped flag, and the metric updates submit threads make; the
-        # worker-thread metrics are single-writer (each counter is itself
-        # atomic, so readers never see torn values either way).
+        # worker-thread metrics are single-writer per series (each counter is
+        # itself atomic, so readers never see torn values either way).
         self._reg_lock = threading.Lock()
-        self._thread: threading.Thread | None = None
+        # Serializes eviction/restore transitions against each other AND
+        # against snapshot's registry copy. Lock order: _evict_lock before
+        # _reg_lock, everywhere.
+        self._evict_lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
         self._stopped = False
+        self._quiesce = _Quiesce(self.n_workers)
+        # snapshot supervision
+        self.snapshot_policy = snapshot_policy
+        self.snapshot_dir = snapshot_dir
         self._snap_step = 0
+        self._folded_rows = 0            # under _reg_lock; feeds every_rows
+        self._last_snap_rows = 0
+        self._last_snap_t = time.monotonic()
+        # tenant TTL / LRU eviction
+        self.max_tenants = max_tenants
+        self.ttl_s = ttl_s
+        self.evict_dir = evict_dir
+        self._evicted: dict[str, dict] = {}          # gid -> {path, tenants}
+        self._evicted_tenants: dict[str, str] = {}   # tid -> gid
+        self._evict_steps: dict[str, int] = {}
+        self._sweep_every = min(1.0, ttl_s / 4) if ttl_s else 1.0
+        self._last_sweep = [0.0] * self.n_workers
         # All service observability lives in one MetricsRegistry (pass a
         # shared one to aggregate several services / the engine into a single
         # exposition endpoint).
         self.registry = registry if registry is not None else obs.MetricsRegistry()
         self._c = {k: self.registry.counter(f"serve.{k}") for k in self.STAT_KEYS}
         self._g_queue_depth = self.registry.gauge("serve.queue_depth")
+        self._g_wq = [self.registry.gauge("serve.worker_queue_depth",
+                                          worker=str(i))
+                      for i in range(self.n_workers)]
         self._g_pending = self.registry.gauge("serve.pending_rows")
         self._h_coalesce = self.registry.histogram("serve.coalesced_requests")
         self._h_latency = self.registry.histogram("serve.request_seconds")
+        self._h_snapshot = self.registry.histogram("serve.snapshot_seconds")
 
     @property
     def stats(self) -> dict:
@@ -229,29 +389,47 @@ class SketchService:
         with self._reg_lock:
             return {k: self._c[k].value for k in self.STAT_KEYS}
 
+    # back-compat views of the single-worker attributes (tests, tooling)
+    @property
+    def _queue(self) -> queue.Queue:
+        return self._queues[0]
+
+    @property
+    def _thread(self) -> threading.Thread | None:
+        return self._threads[0] if self._threads else None
+
+    def _worker_of(self, gid: str) -> int:
+        """Stable group → worker partition (crc32, survives restarts)."""
+        return zlib.crc32(gid.encode()) % self.n_workers
+
     # ------------------------------------------------------------ lifecycle --
 
     def start(self) -> "SketchService":
         if self._stopped:
             raise RuntimeError("service already stopped")
-        if self._thread is not None:
+        if self._threads:
             raise RuntimeError("service already started")
-        self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name="sketchserve-worker")
-        self._thread.start()
+        self._threads = [
+            threading.Thread(target=self._loop, args=(i,), daemon=True,
+                             name=f"sketchserve-worker-{i}")
+            for i in range(self.n_workers)]
+        for t in self._threads:
+            t.start()
         return self
 
     def stop(self) -> None:
-        """Resolve every already-submitted request, then stop the worker.
+        """Resolve every already-submitted request, then stop the workers.
         Requests racing with (or arriving after) stop() resolve to an error
         response instead of hanging on a dead queue; a stopped service cannot
         be restarted."""
         with self._reg_lock:
             self._stopped = True
-            thread, self._thread = self._thread, None
-        if thread is not None:
-            self._queue.put((_STOP, None))
-            thread.join()
+            threads, self._threads = self._threads, []
+        if threads:
+            for q in self._queues:
+                q.put((_STOP, None))
+            for t in threads:
+                t.join()
         # Safety net: anything still queued (enqueued before _stopped was
         # observable, or never drained because the service was not started)
         # must not leave its Future unresolved forever.
@@ -269,75 +447,97 @@ class SketchService:
         """Enqueue one request; never blocks and never mutates ``req``. The
         Future resolves to a :class:`Response` — ``status="rejected"`` when
         admission control (full queue / per-group pending-row cap) turns it
-        away, ``status="error"`` once the service has stopped."""
+        away, ``status="error"`` once the service has stopped. Every
+        resolution — accepted, rejected, or failed at submit — lands in the
+        ``serve.request_seconds`` histogram."""
         fut: Future = Future()
+        fut._obs_t0 = time.perf_counter()   # submit→resolve latency, ALL paths
         if isinstance(req, IngestRequest):
-            rows = np.asarray(req.rows)
-            if rows.ndim != 2:
-                fut.set_result(_err(f"ingest rows must be (b, p), got shape "
-                                    f"{rows.shape}"))
-                return fut
-            n = int(rows.shape[0])
-            with self._reg_lock:
-                if self._stopped:
-                    fut.set_result(_err("service stopped"))
-                    return fut
-                group = self._resolve_group(req.target)
-                if group is None:
-                    fut.set_result(_err(f"unknown tenant/group {req.target!r}"))
-                    return fut
-                spec = group.cursor.spec
-                if spec is not None and rows.shape[1] != spec.p:
-                    fut.set_result(_err(
-                        f"group {group.gid!r} ingests p={spec.p} columns, "
-                        f"got {rows.shape[1]}"))
-                    return fut
-                if group.pending_rows + n > self.max_pending_rows:
-                    self._c["rejected"].inc()
-                    fut.set_result(_rejected(
-                        f"group {group.gid!r} has {group.pending_rows} rows "
-                        f"pending (cap {self.max_pending_rows}); retry after "
-                        "the backlog folds"))
-                    return fut
-                group.pending_rows += n
-                fut._obs_t0 = time.perf_counter()   # submit→resolve latency
-                try:
-                    # target normalized to the gid on the internal record (not
-                    # on req): maximal worker coalescing
-                    self._queue.put_nowait((_Ingest(group.gid, rows), fut))
-                    self._g_pending.inc(n)
-                    self._g_queue_depth.set(self._queue.qsize())
-                except queue.Full:
-                    group.pending_rows -= n
-                    self._c["rejected"].inc()
-                    fut.set_result(_rejected(
-                        f"request queue full ({self._queue.maxsize}); "
-                        "retry later"))
-            return fut
+            return self._submit_ingest(req, fut)
         if isinstance(req, AdminRequest):
             with self._reg_lock:
-                stopped, setup = self._stopped, self._thread is None
+                stopped, setup = self._stopped, not self._threads
             if stopped:
-                fut.set_result(_err("service stopped"))
+                self._resolve_fut(fut, _err("service stopped"))
                 return fut
             if setup:   # setup phase: no worker to serialize on
-                fut.set_result(self._handle_admin(req))
+                self._resolve_fut(fut, self._handle_admin(req))
                 return fut
-        elif not isinstance(req, QueryRequest):
-            fut.set_result(_err(f"unknown request type {type(req).__name__}"))
+            wid = self._route_admin(req)
+        elif isinstance(req, QueryRequest):
+            wid = self._route_target(req.tenant)
+        else:
+            self._resolve_fut(fut, _err(f"unknown request type "
+                                        f"{type(req).__name__}"))
             return fut
         with self._reg_lock:
             if self._stopped:
-                fut.set_result(_err("service stopped"))
+                self._resolve_fut(fut, _err("service stopped"))
                 return fut
-            fut._obs_t0 = time.perf_counter()   # submit→resolve latency
             try:
-                self._queue.put_nowait((req, fut))
-                self._g_queue_depth.set(self._queue.qsize())
+                self._queues[wid].put_nowait((req, fut))
+                self._note_queue_depth(wid)
             except queue.Full:
                 self._c["rejected"].inc()
-                fut.set_result(_rejected(
-                    f"request queue full ({self._queue.maxsize}); retry later"))
+                self._resolve_fut(fut, _rejected(
+                    f"request queue full ({self._queues[wid].maxsize}); "
+                    "retry later"))
+        return fut
+
+    def _submit_ingest(self, req: IngestRequest, fut: Future) -> Future:
+        rows = np.asarray(req.rows)
+        if rows.ndim != 2:
+            self._resolve_fut(fut, _err(f"ingest rows must be (b, p), got "
+                                        f"shape {rows.shape}"))
+            return fut
+        n = int(rows.shape[0])
+        for attempt in (0, 1):
+            with self._reg_lock:
+                if self._stopped:
+                    self._resolve_fut(fut, _err("service stopped"))
+                    return fut
+                group = self._resolve_group(req.target)
+                if group is not None:
+                    spec = group.cursor.spec
+                    if spec is not None and rows.shape[1] != spec.p:
+                        self._resolve_fut(fut, _err(
+                            f"group {group.gid!r} ingests p={spec.p} columns, "
+                            f"got {rows.shape[1]}"))
+                        return fut
+                    if group.pending_rows + n > self.max_pending_rows:
+                        self._c["rejected"].inc()
+                        self._resolve_fut(fut, _rejected(
+                            f"group {group.gid!r} has {group.pending_rows} "
+                            f"rows pending (cap {self.max_pending_rows}); "
+                            "retry after the backlog folds"))
+                        return fut
+                    group.pending_rows += n
+                    group.last_access = time.monotonic()
+                    wid = self._worker_of(group.gid)
+                    try:
+                        # target normalized to the gid on the internal record
+                        # (not on req): maximal worker coalescing
+                        self._queues[wid].put_nowait(
+                            (_Ingest(group.gid, rows), fut))
+                        self._g_pending.inc(n)
+                        self._note_queue_depth(wid)
+                    except queue.Full:
+                        group.pending_rows -= n
+                        self._c["rejected"].inc()
+                        self._resolve_fut(fut, _rejected(
+                            f"request queue full "
+                            f"({self._queues[wid].maxsize}); retry later"))
+                    return fut
+            if attempt == 0:
+                # unknown target: restore it if it was evicted, retry once
+                try:
+                    if not self._ensure_live(req.target):
+                        break
+                except Exception as e:  # noqa: BLE001
+                    self._resolve_fut(fut, _err(
+                        f"restore of evicted {req.target!r} failed: {e}"))
+                    return fut
+        self._resolve_fut(fut, _err(f"unknown tenant/group {req.target!r}"))
         return fut
 
     def call(self, req, timeout: float | None = 60.0) -> Response:
@@ -367,7 +567,9 @@ class SketchService:
 
     def snapshot(self, path: str) -> int:
         """Checkpoint every live group/tenant (atomic-rename protocol of
-        :mod:`repro.train.checkpoint`); returns the snapshot step."""
+        :mod:`repro.train.checkpoint`); returns the snapshot step. A
+        multi-worker service quiesces the pool first, so the snapshot is a
+        global fold boundary."""
         return self.call(AdminRequest("snapshot", dict(path=path)),
                          timeout=None).unwrap()
 
@@ -384,41 +586,95 @@ class SketchService:
         with self._reg_lock:
             return sorted(self._tenants)
 
+    def evicted(self) -> list[str]:
+        """Group ids currently evicted to snapshot (lazily restored on touch)."""
+        with self._evict_lock:
+            return sorted(self._evicted)
+
+    # -------------------------------------------------------------- routing --
+
+    def _route_target(self, target: str) -> int:
+        """Tenant/group id → owning worker. Unknown ids fall back to the id's
+        own hash (covers evicted groups, whose gid keeps its partition; a
+        truly unknown id just gets its error answered by whichever worker)."""
+        with self._reg_lock:
+            t = self._tenants.get(target)
+            if t is not None:
+                return self._worker_of(t.group.gid)
+            if target in self._groups:
+                return self._worker_of(target)
+        return self._worker_of(self._evicted_tenants.get(target, target))
+
+    def _route_admin(self, req: AdminRequest) -> int:
+        p = req.params
+        if req.op == "create_tenant":
+            return self._worker_of(p.get("group") or p.get("tid") or "")
+        if req.op in ("delete_tenant", "refine"):
+            return self._route_target(p.get("tid") or p.get("tenant") or "")
+        return 0    # snapshot (and unknown ops) run on the snapshot initiator
+
+    def _note_queue_depth(self, wid: int) -> None:
+        self._g_wq[wid].set(self._queues[wid].qsize())
+        self._g_queue_depth.set(sum(q.qsize() for q in self._queues))
+
     # ---------------------------------------------------------- worker loop --
 
     def _resolve_fut(self, fut: Future, resp: Response) -> None:
         """_resolve plus submit→resolve latency accounting (the ``_obs_t0``
-        stamp placed at admission)."""
+        stamp placed at submit). Every resolution — worker-side or submit-side
+        fast path — funnels through here, so rejected and failed requests
+        show up in ``serve.request_seconds`` too."""
         t0 = getattr(fut, "_obs_t0", None)
         if t0 is not None:
             self._h_latency.observe(time.perf_counter() - t0)
         _resolve(fut, resp)
 
-    def _loop(self) -> None:
+    def _loop(self, wid: int) -> None:
+        q = self._queues[wid]
         stop = False
-        while not stop:
-            items = [self._queue.get()]
-            while len(items) < self.max_batch:
+        try:
+            while not stop:
                 try:
-                    items.append(self._queue.get_nowait())
+                    items = [q.get(timeout=_IDLE_TICK)]
                 except queue.Empty:
-                    break
-            self._g_queue_depth.set(self._queue.qsize())
-            batch = []
-            for req, fut in items:
-                if req is _STOP:
-                    stop = True       # drain this batch, fail later arrivals
-                elif stop:
-                    self._resolve_fut(fut, _err("service stopped"))
-                else:
-                    batch.append((req, fut))
-            if batch:
-                try:
-                    self._process(batch)
-                except Exception as e:  # noqa: BLE001 — the worker must live
-                    self._fail_batch(batch, e)
-            for _ in items:
-                self._queue.task_done()
+                    self._tick(wid)
+                    continue
+                while len(items) < self.max_batch:
+                    try:
+                        items.append(q.get_nowait())
+                    except queue.Empty:
+                        break
+                self._note_queue_depth(wid)
+                batch = []
+                for req, fut in items:
+                    if req is _STOP:
+                        stop = True   # drain this batch, fail later arrivals
+                    elif stop:
+                        self._resolve_fut(fut, _err("service stopped"))
+                    else:
+                        batch.append((req, fut))
+                if batch:
+                    try:
+                        self._process(batch)
+                    except Exception as e:  # noqa: BLE001 — the worker must live
+                        self._fail_batch(batch, e)
+                for _ in items:
+                    q.task_done()
+                if not stop:
+                    self._tick(wid)
+        finally:
+            self._quiesce.worker_exit()
+
+    def _tick(self, wid: int) -> None:
+        """Fold-boundary housekeeping: worker 0 drives the auto-snapshot
+        policy; every other worker answers a pending quiesce; each worker
+        sweeps its OWN groups for TTL/LRU eviction (so eviction never races a
+        fold — the evicting thread is the only one that folds the group)."""
+        if wid == 0:
+            self._maybe_auto_snapshot()
+        else:
+            self._quiesce.park_if_wanted()
+        self._maybe_evict(wid)
 
     def _fail_batch(self, batch, exc: Exception) -> None:
         """Last-resort guard around one _process sweep: resolve whatever the
@@ -438,21 +694,24 @@ class SketchService:
             self._resolve_fut(fut, _err(f"internal service error: {exc!r}"))
 
     def _fail_queued(self, msg: str) -> None:
-        """Fail everything still sitting in the (dead) queue — stop() path."""
-        while True:
-            try:
-                req, fut = self._queue.get_nowait()
-            except queue.Empty:
-                return
-            if isinstance(req, _Ingest):
-                with self._reg_lock:
-                    g = self._groups.get(req.gid)
-                    if g is not None:
-                        g.pending_rows -= int(req.rows.shape[0])
-                self._g_pending.inc(-int(req.rows.shape[0]))
-            if fut is not None and not fut.done():
-                self._resolve_fut(fut, _err(msg))
-            self._queue.task_done()
+        """Fail everything still sitting in the (dead) queues — stop() path."""
+        for wid, q in enumerate(self._queues):
+            while True:
+                try:
+                    req, fut = q.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(req, _Ingest):
+                    with self._reg_lock:
+                        g = self._groups.get(req.gid)
+                        if g is not None:
+                            g.pending_rows -= int(req.rows.shape[0])
+                    self._g_pending.inc(-int(req.rows.shape[0]))
+                if fut is not None and not fut.done():
+                    self._resolve_fut(fut, _err(msg))
+                q.task_done()
+            self._g_wq[wid].set(0)
+        self._g_queue_depth.set(sum(q.qsize() for q in self._queues))
 
     def _process(self, batch) -> None:
         """Serve one drained micro-batch in queue order, coalescing each
@@ -493,6 +752,8 @@ class SketchService:
                 self._c["ingest_folds"].inc()
                 self._c["ingest_rows"].inc(n)
                 self._h_coalesce.observe(len(items))
+                with self._reg_lock:
+                    self._folded_rows += n   # feeds SnapshotPolicy.every_rows
                 for tid in group.tenants:
                     self.registry.counter("serve.tenant_folds",
                                           tenant=tid).inc()
@@ -508,13 +769,148 @@ class SketchService:
             for (_, fut), r in zip(items, resp):
                 self._resolve_fut(fut, r)
 
+    # ----------------------------------------------------------- supervision --
+
+    def _maybe_auto_snapshot(self) -> None:
+        """Worker-0 fold-boundary check of the SnapshotPolicy."""
+        pol = self.snapshot_policy
+        if pol is None or self._stopped:
+            return
+        with self._reg_lock:
+            rows = self._folded_rows
+        if rows == self._last_snap_rows:
+            return   # nothing new folded — never rewrite identical snapshots
+        now = time.monotonic()
+        due = ((pol.every_rows is not None
+                and rows - self._last_snap_rows >= pol.every_rows)
+               or (pol.every_s is not None
+                   and now - self._last_snap_t >= pol.every_s))
+        if not due:
+            return
+        try:
+            self._do_snapshot(self.snapshot_dir)
+        except Exception:  # noqa: BLE001 — a failed snapshot must not kill serving
+            self.registry.counter("serve.snapshot_errors").inc()
+
+    def _do_snapshot(self, path: str) -> int:
+        """One snapshot step. On a live multi-worker service, quiesce the
+        pool first so no fold is in flight anywhere; on a single worker (or
+        before start) the caller IS the only folder."""
+        from repro.sketchserve import snapshot as snap_mod
+
+        self._snap_step += 1
+        step = self._snap_step
+        t0 = time.perf_counter()
+        if self._threads and self.n_workers > 1:
+            with self._quiesce.held():
+                snap_mod.save_service(self, path, step=step)
+        else:
+            snap_mod.save_service(self, path, step=step)
+        self._h_snapshot.observe(time.perf_counter() - t0)
+        with self._reg_lock:
+            self._last_snap_rows = self._folded_rows
+        self._last_snap_t = time.monotonic()
+        self._c["snapshots"].inc()
+        return step
+
+    # -------------------------------------------------------------- eviction --
+
+    def _evict_base(self) -> str:
+        with self._evict_lock:
+            if self.evict_dir is None:
+                self.evict_dir = tempfile.mkdtemp(prefix="sketchserve-evict-")
+            return self.evict_dir
+
+    def _maybe_evict(self, wid: int) -> None:
+        """TTL / LRU sweep over THIS worker's groups (rate-limited)."""
+        if self.max_tenants is None and self.ttl_s is None:
+            return
+        now = time.monotonic()
+        if now - self._last_sweep[wid] < self._sweep_every:
+            return
+        self._last_sweep[wid] = now
+        with self._reg_lock:
+            mine = [g for gid, g in self._groups.items()
+                    if self._worker_of(gid) == wid]
+            over = (0 if self.max_tenants is None
+                    else len(self._tenants) - self.max_tenants)
+        mine.sort(key=lambda g: g.last_access)
+        for g in mine:
+            expired = (self.ttl_s is not None
+                       and now - g.last_access >= self.ttl_s)
+            if not expired and over <= 0:
+                break   # sorted oldest-first: nothing older follows
+            if g.pending_rows:
+                continue   # queued ingest — never evict under a reservation
+            if self._evict_group(g):
+                over -= len(g.tenants)
+
+    def _evict_group(self, g: _Group) -> bool:
+        """Evict one idle group to snapshot: write its cursor+tenant state
+        under ``evict_dir/<gid>``, then drop it from the live registry. Runs
+        on the group's owner worker, so no fold can be in flight."""
+        from repro.sketchserve import snapshot as snap_mod
+
+        path = os.path.join(self._evict_base(), g.gid)
+        self._evict_steps[g.gid] = self._evict_steps.get(g.gid, 0) + 1
+        try:
+            snap_mod.save_service(self, path, step=self._evict_steps[g.gid],
+                                  gids=[g.gid])
+        except Exception:  # noqa: BLE001 — e.g. mid-step sharded state
+            return False   # keep it live; retry at a later sweep
+        with self._evict_lock:
+            with self._reg_lock:
+                if g.pending_rows or self._groups.get(g.gid) is not g:
+                    return False   # raced with new ingest / delete — keep live
+                for tid in list(g.tenants):
+                    del self._tenants[tid]
+                del self._groups[g.gid]
+                self._evicted[g.gid] = {"path": path,
+                                        "tenants": sorted(g.tenants)}
+                for tid in g.tenants:
+                    self._evicted_tenants[tid] = g.gid
+        self._c["evictions"].inc()
+        return True
+
+    def _ensure_live(self, target: str) -> bool:
+        """Restore an evicted tenant/group on first touch. Returns True if a
+        restore happened (the caller should re-resolve the target), False if
+        the target was never evicted. Raises if the restore itself fails (the
+        eviction record is put back so a later touch can retry)."""
+        with self._evict_lock:
+            gid = (target if target in self._evicted
+                   else self._evicted_tenants.get(target))
+            if gid is None:
+                return False
+            ev = self._evicted.pop(gid)
+            for tid in ev["tenants"]:
+                self._evicted_tenants.pop(tid, None)
+            try:
+                from repro.sketchserve import snapshot as snap_mod
+                snap_mod.restore_group(self, gid, ev["path"])
+            except Exception:
+                self._evicted[gid] = ev
+                for tid in ev["tenants"]:
+                    self._evicted_tenants[tid] = gid
+                raise
+        self._c["evict_restores"].inc()
+        return True
+
     # -------------------------------------------------------------- queries --
 
     def _handle_query(self, req: QueryRequest) -> Response:
         self._c["queries"].inc()
         t = self._tenants.get(req.tenant)
         if t is None:
+            try:
+                if self._ensure_live(req.tenant):
+                    t = self._tenants.get(req.tenant)
+            except Exception as e:  # noqa: BLE001
+                return _err(f"restore of evicted tenant {req.tenant!r} "
+                            f"failed: {e}")
+        if t is None:
             return _err(f"unknown tenant {req.tenant!r}")
+        t.group.last_access = time.monotonic()
         cur = t.group.cursor
         if req.op == "stats":
             return _ok({"kind": t.kind, "group": t.group.gid,
@@ -573,10 +969,7 @@ class SketchService:
             if req.op == "delete_tenant":
                 return self._delete_tenant(p["tid"])
             if req.op == "snapshot":
-                from repro.sketchserve import snapshot as snap_mod
-                self._snap_step += 1
-                snap_mod.save_service(self, p["path"], step=self._snap_step)
-                return _ok(self._snap_step)
+                return _ok(self._do_snapshot(p["path"]))
             if req.op == "refine":
                 return self._refine(**p)
             return _err(f"unknown admin op {req.op!r}")
@@ -589,6 +982,8 @@ class SketchService:
             return _err(f"tenant id {tid!r} must match {_ID_RE.pattern}")
         if tid in self._tenants or tid in self._groups:
             return _err(f"id {tid!r} already exists")
+        if tid in self._evicted_tenants or tid in self._evicted:
+            return _err(f"id {tid!r} already exists (evicted to snapshot)")
         if kind not in ESTIMATORS:
             return _err(f"unknown kind {kind!r} (one of {sorted(ESTIMATORS)})")
         gid = group if group is not None else tid
@@ -612,6 +1007,9 @@ class SketchService:
         g.cursor.register(est)
         t = _Tenant(tid, kind, dict(params), est, g)
         with self._reg_lock:
+            if tid in self._tenants:   # raced a same-tid create on another worker
+                g.cursor.consumers.remove(est)
+                return _err(f"id {tid!r} already exists")
             g.tenants[tid] = t
             self._groups[gid] = g
             self._tenants[tid] = t
@@ -619,6 +1017,10 @@ class SketchService:
 
     def _delete_tenant(self, tid) -> Response:
         t = self._tenants.get(tid)
+        if t is None:
+            # deleting an evicted tenant: restore first, then drop normally
+            if self._ensure_live(tid):
+                t = self._tenants.get(tid)
         if t is None:
             return _err(f"unknown tenant {tid!r}")
         g = t.group
@@ -633,9 +1035,12 @@ class SketchService:
 
     def _refine(self, tenant, x, passes, tol, max_passes) -> Response:
         t = self._tenants.get(tenant)
+        if t is None and self._ensure_live(tenant):
+            t = self._tenants.get(tenant)
         if t is None:
             return _err(f"unknown tenant {tenant!r}")
         g = t.group
+        g.last_access = time.monotonic()
         if x is None:
             if not g.retain_ingest:
                 return _err(f"group {g.gid!r} was created with "

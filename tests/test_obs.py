@@ -154,6 +154,24 @@ def test_render_exposition_snapshot():
     assert obs.render_exposition(reg) == text   # deterministic
 
 
+def test_render_exposition_survives_inf_and_nan():
+    """Regression: ±Inf gauges/histogram sums used to raise OverflowError in
+    the sample formatter (int(inf)), killing the whole /metrics scrape. The
+    Prometheus text format spells them +Inf / -Inf (and NaN stays NaN)."""
+    reg = obs.MetricsRegistry()
+    reg.gauge("ratio.up").set(float("inf"))
+    reg.gauge("ratio.down").set(float("-inf"))
+    reg.gauge("ratio.nan").set(float("nan"))
+    h = reg.histogram("weird.s")
+    h.observe(float("inf"))           # poisons the sum, not the scrape
+    h.observe(1.0)
+    text = obs.render_exposition(reg)
+    assert "ratio_up +Inf" in text
+    assert "ratio_down -Inf" in text
+    assert "ratio_nan NaN" in text
+    assert "weird_s_sum +Inf" in text and "weird_s_count 2" in text
+
+
 def test_metrics_server_endpoint():
     reg = obs.MetricsRegistry()
     reg.counter("up").inc()

@@ -1,9 +1,12 @@
 """The sketch-serving subsystem (repro.sketchserve): service lifecycle parity
 with direct fits, shared-sketch groups, micro-batch coalescing, admission
-control, lazy finalization, snapshot/restore bit-identity, the QueueSource
-stream adapter, and the SketchCursor concurrent-producer contract."""
+control, lazy finalization, snapshot/restore bit-identity, the multi-worker
+pool (per-group ordering, stop/submit races), the auto-snapshot policy,
+tenant TTL/LRU eviction, the QueueSource stream adapter, and the SketchCursor
+concurrent-producer contract."""
 import queue
 import threading
+import time
 
 import jax
 import numpy as np
@@ -12,7 +15,7 @@ import pytest
 from repro.api import (Plan, SparsifiedCov, SparsifiedKMeans, SparsifiedMean,
                        SparsifiedPCA, fit_many)
 from repro.sketchserve import (AdminRequest, IngestRequest, QueryRequest,
-                               SketchService, restore_service)
+                               SketchService, SnapshotPolicy, restore_service)
 from repro.stream import QueueSource
 from tests.conftest import make_clusters, spiked
 
@@ -387,6 +390,242 @@ def test_queue_source_contract_errors():
         qs.push(np.zeros((4, P), np.float32))
     with pytest.raises(ValueError, match="shape"):
         QueueSource().push(np.zeros(4, np.float32))
+
+
+# -------------------------------------------------------- multi-worker pool --
+
+
+def test_multiworker_per_group_results_bit_identical():
+    """The disjoint group partition keeps one producer per cursor: the same
+    request sequence through 4 workers ends bit-identical PER GROUP to the
+    single-worker service (batch_size-multiple blocks + scan='never' pin the
+    chunk boundaries and the host fold loop)."""
+    n_groups, plan = 6, _plan(cov_path="lowrank", rank=12)
+    blocks = [(f"g{r % n_groups}", _x(BS, seed=r)) for r in range(18)]
+
+    def run(workers):
+        with SketchService(workers=workers, scan="never") as svc:
+            for g in range(n_groups):
+                svc.create_tenant(f"t{g}", "pca", plan=plan, key=7,
+                                  n_components=3, group=f"g{g}")
+            futs = [svc.ingest(gid, b) for gid, b in blocks]
+            assert all(f.result(60).ok for f in futs)
+            return {g: svc.query(f"t{g}", "components").unwrap()["components"]
+                    for g in range(n_groups)}
+
+    one, four = run(1), run(4)
+    for g in range(n_groups):
+        np.testing.assert_array_equal(one[g], four[g])
+
+
+def test_multiworker_routing_is_disjoint_and_stable():
+    svc = SketchService(workers=4)
+    owners = {g: svc._worker_of(g) for g in (f"g{i}" for i in range(64))}
+    assert set(owners.values()) == set(range(4))   # every worker owns groups
+    svc2 = SketchService(workers=4)
+    assert owners == {g: svc2._worker_of(g) for g in owners}  # restart-stable
+
+
+def test_multiworker_stop_races_inflight_ingest():
+    """stop() racing a storm of in-flight ingest across ≥2 workers: every
+    Future resolves (ok, rejected, or 'service stopped' — never dangles), the
+    pending-row accounting lands at exactly 0, and the pending gauge agrees
+    (the _fail_queued release path, per queue)."""
+    n_groups = 8
+    svc = SketchService(workers=4, max_queue=16)
+    for g in range(n_groups):
+        svc.create_tenant(f"t{g}", "mean", plan=_plan(), key=1, group=f"g{g}")
+    futs: list = []
+    start = threading.Barrier(3)
+
+    def producer(seed):
+        rng = np.random.default_rng(seed)
+        start.wait()
+        for r in range(120):
+            g = int(rng.integers(n_groups))
+            futs.append(svc.ingest(f"g{g}", _x(BS, seed=r)))
+
+    svc.start()
+    threads = [threading.Thread(target=producer, args=(s,)) for s in (1, 2)]
+    for t in threads:
+        t.start()
+    start.wait()                     # both producers firing
+    svc.stop()                       # races the in-flight storm
+    for t in threads:
+        t.join()
+    for f in futs:
+        assert f.done(), "a Future was left unresolved by stop()"
+        assert f.result(0).status in ("ok", "rejected", "error")
+    for g in range(n_groups):
+        grp = svc._groups.get(f"g{g}")
+        assert grp is None or grp.pending_rows == 0
+    assert svc.registry.gauge("serve.pending_rows").value == 0
+    assert svc.registry.gauge("serve.queue_depth").value == 0
+
+
+def test_rejected_requests_are_latency_accounted():
+    """Satellite: the submit-side rejected/stopped fast paths must route
+    through _resolve_fut — rejections (and unknown-target errors) appear in
+    serve.request_seconds alongside accepted requests."""
+    svc = SketchService(max_pending_rows=BS)
+    svc.create_tenant("t", "mean", plan=_plan(), key=1)
+    h = svc.registry.histogram("serve.request_seconds")
+    base = h.count
+    svc.ingest("t", _x(BS))                        # admitted (queued)
+    assert svc.ingest("t", _x(BS)).result(0).status == "rejected"
+    assert svc.ingest("nope", _x(1)).result(0).status == "error"
+    assert h.count == base + 2, (
+        "rejected + error fast paths missing from the histogram")
+    _drain(svc)                                    # resolves the admitted one
+    assert h.count == base + 3
+
+
+# ------------------------------------------------------ snapshot supervision --
+
+
+def test_snapshot_policy_validation():
+    with pytest.raises(ValueError, match="every_rows"):
+        SnapshotPolicy()
+    with pytest.raises(ValueError, match="every_rows"):
+        SnapshotPolicy(every_rows=0)
+    with pytest.raises(ValueError, match="snapshot_dir"):
+        SketchService(snapshot_policy=SnapshotPolicy(every_rows=1))
+
+
+def test_auto_snapshot_every_rows(tmp_path):
+    d = str(tmp_path / "auto")
+    with SketchService(scan="never",
+                       snapshot_policy=SnapshotPolicy(every_rows=2 * BS),
+                       snapshot_dir=d) as svc:
+        svc.create_tenant("t", "mean", plan=_plan(), key=1)
+        for i in range(4):
+            svc.ingest("t", _x(BS, seed=i)).result(30).unwrap()
+        deadline = time.monotonic() + 30
+        while svc.stats["snapshots"] < 2:
+            assert time.monotonic() < deadline, "every_rows policy never fired"
+            time.sleep(0.02)
+        # idle: no new rows folded → no further snapshots rewrite the dir
+        n = svc.stats["snapshots"]
+        time.sleep(0.35)
+        assert svc.stats["snapshots"] == n
+    with restore_service(d) as svc2:
+        assert svc2.query("t", "stats").unwrap()["rows"] % BS == 0
+
+
+def test_auto_snapshot_every_s(tmp_path):
+    d = str(tmp_path / "auto")
+    with SketchService(scan="never",
+                       snapshot_policy=SnapshotPolicy(every_s=0.05),
+                       snapshot_dir=d) as svc:
+        svc.create_tenant("t", "mean", plan=_plan(), key=1)
+        svc.ingest("t", _x(BS)).result(30).unwrap()
+        deadline = time.monotonic() + 30
+        while svc.stats["snapshots"] < 1:
+            assert time.monotonic() < deadline, "every_s policy never fired"
+            time.sleep(0.02)
+        n = svc.stats["snapshots"]
+        time.sleep(0.3)                 # idle — the timer alone must NOT fire
+        assert svc.stats["snapshots"] == n
+        svc.ingest("t", _x(BS, seed=1)).result(30).unwrap()
+        deadline = time.monotonic() + 30
+        while svc.stats["snapshots"] < n + 1:   # new rows → fires again
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+
+
+def test_restored_snapshot_step_continues(tmp_path):
+    """Satellite: snapshot → restore → snapshot lands at step N+1 — a
+    restored service must never clobber the original run's earlier
+    checkpoints under the same path."""
+    d = str(tmp_path / "snap")
+    with SketchService() as svc:
+        svc.create_tenant("t", "mean", plan=_plan(), key=1)
+        svc.ingest("t", _x(BS)).result()
+        assert svc.snapshot(d) == 1
+        assert svc.snapshot(d) == 2
+    with restore_service(d) as svc2:
+        assert svc2.snapshot(d) == 3
+    with restore_service(d) as svc3:
+        assert svc3.snapshot(d) == 4
+
+
+def test_multiworker_snapshot_quiesces_at_fold_boundary(tmp_path):
+    """A snapshot on a live 4-worker service quiesces the pool: the written
+    state restores cleanly and the service keeps serving afterwards."""
+    d = str(tmp_path / "snap")
+    with SketchService(workers=4, scan="never") as svc:
+        for g in range(8):
+            svc.create_tenant(f"t{g}", "mean", plan=_plan(), key=1,
+                              group=f"g{g}")
+        futs = [svc.ingest(f"g{r % 8}", _x(BS, seed=r)) for r in range(24)]
+        step = svc.snapshot(d)         # races the in-flight folds
+        assert step == 1
+        assert all(f.result(60).ok for f in futs)
+        assert svc.ingest("g0", _x(BS)).result(30).ok   # still serving
+    with restore_service(d) as svc2:
+        rows = svc2.query("t0", "stats").unwrap()["rows"]
+        assert rows % BS == 0          # a fold boundary, never mid-fold
+
+
+# ---------------------------------------------------------- tenant eviction --
+
+
+def test_ttl_eviction_and_lazy_restore(tmp_path):
+    """An idle group past ttl_s is evicted to snapshot and lazily restored
+    bit-identically on the next query; an ACTIVE group is left alone."""
+    with SketchService(scan="never", ttl_s=0.25,
+                       evict_dir=str(tmp_path)) as svc:
+        svc.create_tenant("idle", "pca", plan=_plan(cov_path="lowrank",
+                                                    rank=12),
+                          key=3, n_components=3)
+        svc.create_tenant("hot", "mean", plan=_plan(), key=1)
+        svc.ingest("idle", _x(2 * BS)).result(30).unwrap()
+        ref = svc.query("idle", "components").unwrap()["components"]
+        deadline = time.monotonic() + 30
+        while "idle" not in svc.evicted():
+            assert time.monotonic() < deadline, "TTL eviction never fired"
+            svc.ingest("hot", _x(BS)).result(30)       # keeps "hot" live
+            time.sleep(0.03)
+        assert "idle" not in svc.tenants() and "hot" in svc.tenants()
+        assert svc.stats["evictions"] >= 1
+        # first touch lazily restores, bit-identical
+        got = svc.query("idle", "components").unwrap()["components"]
+        np.testing.assert_array_equal(ref, got)
+        assert "idle" in svc.tenants() and not svc.evicted()
+        assert svc.stats["evict_restores"] == 1
+        # and the restored cursor continues folding
+        assert svc.ingest("idle", _x(BS, seed=5)).result(30).ok
+
+
+def test_max_tenants_evicts_lru_group(tmp_path):
+    with SketchService(scan="never", max_tenants=2,
+                       evict_dir=str(tmp_path)) as svc:
+        for i in range(3):
+            svc.create_tenant(f"t{i}", "mean", plan=_plan(), key=1)
+            svc.ingest(f"t{i}", _x(BS, seed=i)).result(30).unwrap()
+        deadline = time.monotonic() + 30
+        while len(svc.tenants()) > 2:
+            assert time.monotonic() < deadline, "max_tenants never enforced"
+            time.sleep(0.03)
+        # t0 was touched least recently → it is the evicted one
+        assert svc.evicted() == ["t0"]
+        # evicted state still answers (lazy restore) and matches the fold
+        m = svc.query("t0", "mean").unwrap()
+        ref = SparsifiedMean(_plan(), key=1).fit(_x(BS, seed=0))
+        np.testing.assert_array_equal(m, np.asarray(ref.mean_))
+
+
+def test_eviction_skips_groups_with_pending_ingest(tmp_path):
+    """A group with admitted-but-unfolded rows is never evicted (the queued
+    request would resolve against a missing group)."""
+    svc = SketchService(ttl_s=0.01, evict_dir=str(tmp_path))   # not started
+    svc.create_tenant("t", "mean", plan=_plan(), key=1)
+    fut = svc.ingest("t", _x(BS))              # reservation held, never folds
+    time.sleep(0.05)
+    svc._maybe_evict(0)                        # the sweep the worker would run
+    assert svc.evicted() == [] and "t" in svc.tenants()
+    _drain(svc)
+    assert fut.result(0).ok
 
 
 # ------------------------------------- concurrent producers (the contract) --

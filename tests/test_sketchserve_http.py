@@ -1,0 +1,112 @@
+"""The sketchserve HTTP frontend: request round-trips over localhost, the
+Response→status-code contract (ok 200 / rejected 429+Retry-After / error
+400), malformed-input handling, and healthz."""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+
+from repro.api import Plan
+from repro.sketchserve import SketchService, serve_http
+from repro.sketchserve.snapshot import plan_to_json
+
+P = 32
+BS = 64
+
+
+def _plan(**kw):
+    base = dict(backend="stream", gamma=0.5, batch_size=BS)
+    base.update(kw)
+    return Plan(**base)
+
+
+def _call(url, body=None):
+    """POST json (or GET when body is None); returns (code, body, headers) —
+    HTTPError codes are part of the protocol, not failures."""
+    if body is None:
+        req = urllib.request.Request(url)
+    else:
+        req = urllib.request.Request(url, json.dumps(body).encode(),
+                                     {"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return r.status, json.loads(r.read()), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read()), dict(e.headers)
+
+
+def test_http_round_trip_matches_in_process():
+    rng = np.random.default_rng(0)
+    rows = rng.normal(size=(2 * BS, P)).astype(np.float64)
+    with SketchService(scan="never") as svc, serve_http(svc) as fe:
+        code, body, _ = _call(fe.url + "/admin", {
+            "op": "create_tenant",
+            "params": {"tid": "t", "kind": "pca", "key": 3,
+                       "plan": plan_to_json(_plan(cov_path="lowrank",
+                                                  rank=12)),
+                       "params": {"n_components": 3}}})
+        assert code == 200 and body["status"] == "ok", body
+        code, body, _ = _call(fe.url + "/ingest",
+                              {"target": "t", "rows": rows.tolist()})
+        assert code == 200 and body["info"]["count"] == 2 * BS
+
+        code, body, _ = _call(fe.url + "/query?tenant=t&op=components")
+        assert code == 200
+        got = np.asarray(body["result"]["components"])
+        want = np.asarray(svc.query("t", "components").unwrap()["components"])
+        np.testing.assert_allclose(got, want)
+
+        # x payloads travel via POST /query
+        code, body, _ = _call(fe.url + "/query",
+                              {"tenant": "t", "op": "transform",
+                               "x": rows[:4].tolist()})
+        assert code == 200 and np.asarray(body["result"]).shape == (4, 3)
+
+        code, body, _ = _call(fe.url + "/healthz")
+        assert code == 200 and body["result"]["tenants"] == 1
+
+
+def test_http_backpressure_is_429_with_retry_after():
+    with SketchService(max_pending_rows=BS) as svc, serve_http(svc) as fe:
+        code, _, _ = _call(fe.url + "/admin", {
+            "op": "create_tenant",
+            "params": {"tid": "t", "kind": "mean", "key": 1,
+                       "plan": plan_to_json(_plan())}})
+        assert code == 200
+        big = np.zeros((BS + 1, P)).tolist()
+        code, body, hdrs = _call(fe.url + "/ingest",
+                                 {"target": "t", "rows": big})
+        assert code == 429
+        assert body["status"] == "rejected" and "pending" in body["error"]
+        assert "Retry-After" in hdrs
+        # backing off and retrying within the cap succeeds — the 429 is
+        # backpressure, not a dead tenant
+        code, body, _ = _call(fe.url + "/ingest",
+                              {"target": "t", "rows": np.zeros((8, P)).tolist()})
+        assert code == 200
+
+
+def test_http_errors_and_unknown_paths():
+    with SketchService() as svc, serve_http(svc) as fe:
+        # admitted-but-failed (unknown tenant) → 400 with the error body
+        code, body, _ = _call(fe.url + "/query?tenant=nope&op=mean")
+        assert code == 400 and "unknown tenant" in body["error"]
+        code, body, _ = _call(fe.url + "/ingest",
+                              {"target": "nope", "rows": [[1.0] * P]})
+        assert code == 400
+        # malformed JSON → 400 before the queue
+        req = urllib.request.Request(fe.url + "/ingest", b"{not json",
+                                     {"Content-Type": "application/json"})
+        try:
+            urllib.request.urlopen(req, timeout=30)
+            raise AssertionError("malformed JSON was accepted")
+        except urllib.error.HTTPError as e:
+            assert e.code == 400 and "bad JSON" in json.loads(e.read())["error"]
+        # missing fields → 400, unknown paths → 404
+        code, body, _ = _call(fe.url + "/ingest", {"rows": [[1.0] * P]})
+        assert code == 400
+        code, body, _ = _call(fe.url + "/query?tenant=t")
+        assert code == 400 and "op=" in body["error"]
+        assert _call(fe.url + "/nope", {})[0] == 404
+        assert _call(fe.url + "/nope")[0] == 404
